@@ -1,0 +1,48 @@
+"""Paper figs 9-11 + §3.6.3: power/heat vs time/energy relationships.
+
+Derived-only (no watts on CPU): reproduces the paper's observation that
+power varies ~10% while time varies ~380x, i.e. energy curves are shaped by
+time, and the power/"temperature" (power-density proxy) ordering is the
+INVERSE of the time/energy ordering across block sizes.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import energy
+
+BLOCKS = [64, 128, 256, 512, 1024]
+
+
+def run():
+    rows = []
+    times, powers = [], []
+    for n in [4096, 8192, 16384]:
+        res = energy.energy_vs_blocksize(n, BLOCKS)
+        for b, rep in res:
+            # temperature proxy: power density over the active block area
+            temp = rep.power_W / (3 * b * b * 2 / 2**20)   # W per MiB working set
+            rows.append((f"energy_model/N{n}/b{b}", "-",
+                         f"power_W={rep.power_W:.0f} temp_proxy={temp:.1f} "
+                         f"time_s={rep.time_s:.3e} energy_J={rep.energy_J:.2f}"))
+            times.append(rep.time_s)
+            powers.append(rep.power_W)
+    t_ratio = max(times) / min(times)
+    p_ratio = max(powers) / min(powers)
+    rows.append(("energy_model/sec3.6.3_ratios", "-",
+                 f"time_maxmin={t_ratio:.1f}x power_maxmin={p_ratio:.2f}x "
+                 f"(paper: 378x vs 1.115x)"))
+    # inverse correlation check: best-time block has higher power than worst
+    res = dict(energy.energy_vs_blocksize(8192, BLOCKS))
+    bt = min(res, key=lambda b: res[b].time_s)
+    wt = max(res, key=lambda b: res[b].time_s)
+    rows.append(("energy_model/inverse_power_time", "-",
+                 f"best_time_block={bt} P={res[bt].power_W:.0f}W "
+                 f"worst_time_block={wt} P={res[wt].power_W:.0f}W "
+                 f"inverse={'yes' if res[bt].power_W > res[wt].power_W else 'no'}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

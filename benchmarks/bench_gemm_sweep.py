@@ -1,0 +1,46 @@
+"""Paper figs 6-8: time & energy vs matrix size, per block size.
+
+CPU-measured: XLA matmul wall time for small N (context anchor).
+Derived: modeled v5e time + energy per (N, block) from the roofline/energy
+model — the reproduction of the figures' shape: energy tracks time; the
+solver-predicted block is optimal; both transition memory->compute bound.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.core import energy
+from repro.core.blocking import solve_blocks
+
+BLOCKS = [128, 256, 512, 1024]
+SIZES = [2048, 4096, 8192, 16384]
+
+
+def run():
+    rows = []
+    # measured anchor: this host's XLA GEMM
+    for n in [256, 512, 1024]:
+        a = jnp.ones((n, n), jnp.float32)
+        f = jax.jit(lambda x: x @ x)
+        us = time_fn(f, a)
+        rows.append((f"gemm_sweep/cpu_xla/N{n}", us,
+                     f"gflops={2 * n**3 / us / 1e3:.1f}"))
+    # derived: the paper's figures on v5e constants
+    for n in SIZES:
+        for b, rep in energy.energy_vs_blocksize(n, BLOCKS):
+            rows.append((f"gemm_sweep/v5e_model/N{n}/b{b}", "-",
+                         f"time_s={rep.time_s:.4e} energy_J={rep.energy_J:.3f} "
+                         f"power_W={rep.power_W:.0f} bound={rep.bound}"))
+        bc = solve_blocks(n, n, n, "bfloat16")
+        rep = energy.gemm_energy(n, n, n, bc)
+        rows.append((f"gemm_sweep/v5e_model/N{n}/solver{bc.as_tuple()}", "-",
+                     f"time_s={rep.time_s:.4e} energy_J={rep.energy_J:.3f} "
+                     f"power_W={rep.power_W:.0f} bound={rep.bound} <= optimal"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -1,0 +1,42 @@
+"""Kernel-level microbenchmarks: interpret-mode Pallas vs jnp oracle (CPU
+correctness-path timing; real perf is the TPU target) + the unified-operator
+dispatch overheads."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.kernels import ops, ref
+
+
+def run():
+    rows = []
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    a = jax.random.normal(k1, (256, 256), jnp.float32)
+    b = jax.random.normal(k2, (256, 256), jnp.float32)
+    us_ref = time_fn(jax.jit(ref.gemm_ref), a, b)
+    us_pal = time_fn(lambda: ops.moa_gemm(a, b, interpret=True),
+                     warmup=1, iters=3)
+    rows.append(("kernels/gemm_256/xla", us_ref, "oracle"))
+    rows.append(("kernels/gemm_256/pallas_interpret", us_pal,
+                 "correctness path (TPU is the perf target)"))
+    for mode, shapes in [("hp", ((128, 128), (128, 128))),
+                         ("op", ((16, 16), (16, 16))),
+                         ("kp", ((16, 16), (16, 16)))]:
+        x = jax.random.normal(k1, shapes[0], jnp.float32)
+        y = jax.random.normal(k2, shapes[1], jnp.float32)
+        us = time_fn(lambda: ops.ipophp(x, y, mode, interpret=True),
+                     warmup=1, iters=3)
+        rows.append((f"kernels/ipophp_{mode}", us, "unified circuit"))
+    e = jax.random.normal(k1, (4, 128, 128), jnp.float32)
+    w = jax.random.normal(k2, (4, 128, 64), jnp.float32)
+    us = time_fn(lambda: ops.expert_gemm(e, w, interpret=True),
+                 warmup=1, iters=3)
+    rows.append(("kernels/expert_gemm_4x128", us, "lifted expert axis"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

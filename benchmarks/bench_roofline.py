@@ -1,0 +1,64 @@
+"""Paper Table 1 analogue + §Roofline: the hardware hierarchy table and the
+per-(arch x shape x mesh) roofline terms read from the dry-run artifacts
+(results/dryrun/*.json).  Run the dry-run first:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.core.lifting import TPU_V5E
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "results/dryrun_final")
+
+
+def hardware_rows():
+    hw = TPU_V5E
+    return [
+        ("roofline/hw/peak_bf16", "-", f"{hw.peak_flops / 1e12:.0f}TFLOPs"),
+        ("roofline/hw/hbm", "-", f"{hw.hbm.bandwidth_Bps / 1e9:.0f}GB/s "
+         f"{hw.hbm.capacity_bytes / 2**30:.0f}GiB"),
+        ("roofline/hw/ici", "-", f"{hw.ici_Bps / 1e9:.0f}GB/s/link"),
+        ("roofline/hw/vmem_budget", "-", f"{hw.vmem.capacity_bytes / 2**20:.0f}MiB"),
+        ("roofline/hw/mesh", "-", "(16 data x 16 model) x 2 pods"),
+    ]
+
+
+def run():
+    rows = hardware_rows()
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    if not files:
+        rows.append(("roofline/cells", "-", "NO DRYRUN ARTIFACTS — run dryrun"))
+        return rows
+    n_ok = n_skip = n_fail = 0
+    for f in files:
+        rec = json.load(open(f))
+        tag = f"roofline/{rec['arch']}/{rec['shape']}/{rec.get('mesh', '?')}"
+        if rec.get("status") == "SKIP":
+            n_skip += 1
+            rows.append((tag, "-", "SKIP " + rec.get("reason", "")[:60]))
+            continue
+        if rec.get("status") != "OK":
+            n_fail += 1
+            rows.append((tag, "-", "FAIL " + rec.get("error", "")[:80]))
+            continue
+        n_ok += 1
+        rl = rec["roofline"]
+        rows.append((tag, "-",
+                     f"compute_s={rl['compute_s']:.3e} "
+                     f"memory_s={rl['memory_s']:.3e} "
+                     f"collective_s={rl['collective_s']:.3e} "
+                     f"dominant={rl['dominant']} "
+                     f"useful={rl['useful_flops_ratio']:.2f} "
+                     f"frac={rl['roofline_fraction']:.3f}"))
+    rows.append(("roofline/summary", "-",
+                 f"ok={n_ok} skip={n_skip} fail={n_fail}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

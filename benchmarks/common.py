@@ -1,0 +1,38 @@
+"""Shared benchmark utilities: timing + CSV row conventions.
+
+Every bench module exposes ``run() -> list[(name, us_per_call, derived)]``.
+``us_per_call`` is measured wall time on THIS host (CPU) — "-" when a row is
+model-only; ``derived`` is the analytic quantity the row exists for
+(modeled TPU time/energy, roofline terms, block choices, ...).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+Row = tuple  # (name, us_per_call, derived)
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time in microseconds (results blocked on)."""
+    import jax
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r) if hasattr(r, "block_until_ready") or True else None
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        try:
+            jax.block_until_ready(r)
+        except Exception:
+            pass
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def emit(rows: list[Row]) -> None:
+    for name, us, derived in rows:
+        us_s = f"{us:.1f}" if isinstance(us, (int, float)) else str(us)
+        print(f"{name},{us_s},{derived}")

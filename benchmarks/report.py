@@ -1,0 +1,91 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run
+JSON artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report [--dir results/dryrun] > table.md
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.core.lifting import TPU_V5E
+
+
+def load(dirname):
+    recs = [json.load(open(f)) for f in sorted(glob.glob(os.path.join(dirname, "*.json")))]
+    return recs
+
+
+def min_decode_bytes(rec) -> float:
+    """Analytic floor for one decode step: read every (active) param once +
+    the whole KV cache once (global bytes)."""
+    p_active = rec["params_active"]
+    return p_active * 2.0  # bf16 params; cache added by caller if known
+
+
+def emit_dryrun(recs):
+    print("| arch | shape | mesh | status | compile_s | args/dev | temp/dev | collectives (count) |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r.get("status") == "SKIP":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP | - | - | - | {r['reason'][:60]}… |")
+            continue
+        if r.get("status") != "OK":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | **FAIL** | - | - | - | {r.get('error','')[:60]} |")
+            continue
+        mem = r["memory"]
+        args_gb = mem.get("argument_size_in_bytes", 0) / 2**30
+        temp_gb = mem.get("temp_size_in_bytes", 0) / 2**30
+        colls = ", ".join(f"{k}:{v}" for k, v in
+                          sorted(r.get("collectives_count", {}).items()))
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | OK | "
+              f"{r['compile_s']} | {args_gb:.2f} GiB | {temp_gb:.2f} GiB | {colls} |")
+
+
+def emit_roofline(recs):
+    print("| arch | shape | compute_s | memory_s | collective_s | dominant | "
+          "MODEL_FLOPS | useful ratio | roofline frac | would move the dominant term |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    hints = {
+        ("memory", "train"): "less HLO traffic: fused attention, saved-activation policy, bf16 scores",
+        ("memory", "prefill"): "chunked/flash attention (no S^2 scores), cache write fusion",
+        ("memory", "decode"): "already bandwidth-bound: shrink cache (window/latent/quant), fuse gathers",
+        ("collective", "train"): "shard-local MoE dispatch (kill global sort all-to-alls), overlap",
+        ("collective", "prefill"): "shard-local MoE dispatch; fewer FSDP all-gathers via better weight layout",
+        ("collective", "decode"): "replicate small weights; batch collectives",
+        ("compute", "train"): "remat policy (save dots), MXU-aligned shapes",
+        ("compute", "prefill"): "MXU-aligned head dims",
+        ("compute", "decode"): "kernel fusion",
+    }
+    for r in recs:
+        if r.get("status") != "OK" or r.get("mesh") != "single":
+            continue
+        rl = r["roofline"]
+        hint = hints.get((rl["dominant"], r["kind"]), "")
+        print(f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.3e} | "
+              f"{rl['memory_s']:.3e} | {rl['collective_s']:.3e} | "
+              f"{rl['dominant']} | {rl['model_flops']:.2e} | "
+              f"{rl['useful_flops_ratio']:.2f} | {rl['roofline_fraction']:.4f} | {hint} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--section", default="both",
+                    choices=["dryrun", "roofline", "both"])
+    args = ap.parse_args()
+    recs = load(args.dir)
+    recs.sort(key=lambda r: (r["arch"], r["shape"], r.get("mesh", "")))
+    if args.section in ("dryrun", "both"):
+        print("### Dry-run matrix\n")
+        emit_dryrun(recs)
+        print()
+    if args.section in ("roofline", "both"):
+        print("### Roofline (single-pod, 256 chips)\n")
+        emit_roofline(recs)
+
+
+if __name__ == "__main__":
+    main()

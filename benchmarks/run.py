@@ -1,0 +1,49 @@
+"""Benchmark aggregator: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only <substr>]
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call = '-' for
+model-only rows; this host is CPU — TPU numbers are derived from the
+roofline/energy models and the dry-run artifacts).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks.common import emit
+
+SECTIONS = [
+    ("paper_sec3.4_blocking", "benchmarks.bench_blocking"),
+    ("paper_figs6-8_gemm_sweep", "benchmarks.bench_gemm_sweep"),
+    ("paper_figs9-11_energy", "benchmarks.bench_energy_model"),
+    ("paper_refs29-30_moa_vs_classical", "benchmarks.bench_moa_vs_classical"),
+    ("kernels", "benchmarks.bench_kernels"),
+    ("paper_table1_roofline", "benchmarks.bench_roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = []
+    for title, mod_name in SECTIONS:
+        if args.only and args.only not in title:
+            continue
+        print(f"# --- {title} ---")
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            emit(mod.run())
+        except Exception as e:
+            failed.append(title)
+            print(f"{title},ERROR,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(f"benchmark sections failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""MoA core: array algebra, ONF derivation, dimension lifting, cost/energy.
+
+The paper's primary contribution lives here: shapes + Psi indexing (moa),
+DNF->ONF loop-nest derivation (onf), dimension lifting to hardware shapes
+(lifting), the static block-size solver (blocking), and the roofline/energy
+cost models (cost, energy) that the solver and benchmarks share.
+"""
+from repro.core import moa, onf, lifting, blocking, cost, energy  # noqa: F401

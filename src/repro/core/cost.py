@@ -1,0 +1,228 @@
+"""Roofline cost model + HLO collective-byte accounting.
+
+Three-term roofline per (architecture x mesh), per the task spec:
+
+    compute    = HLO_FLOPs        / (chips * peak_FLOP/s)
+    memory     = HLO_bytes        / (chips * HBM_Bps)
+    collective = collective_bytes / (chips * link_Bps)
+
+``compiled.cost_analysis()`` provides FLOPs and bytes accessed;
+collective bytes are NOT in cost_analysis, so ``collective_bytes_from_hlo``
+parses the post-partitioning HLO text and sums operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(including their -start async forms and -done pairs counted once).
+
+NOTE ON SPMD ACCOUNTING: jax returns the *per-device* SPMD module from
+``compiled.as_text()`` (shapes are shard shapes), and ``cost_analysis``
+likewise reports the per-device program.  The roofline formulas above expect
+*global* quantities, so callers multiply per-device figures by ``n_chips``
+(see ``Roofline.from_compiled``) — the two chip factors then cancel into
+"per-chip time", which is what a roofline term is.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field, asdict
+
+from repro.core.lifting import HardwareShape, TPU_V5E
+
+# ---------------------------------------------------------------------------
+# HLO parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all", "collective-broadcast",
+)
+
+# one shaped-buffer literal, e.g. bf16[16,2048]{1,0} or f32[] or pred[4]
+_SHAPE_RE = re.compile(r"\b([a-z]\d*[a-z0-9]*)\[([\d,]*)\]")
+# an HLO instruction definition: "%name = <type> opcode(...)"
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+|[\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)\)",
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of all shaped buffers appearing in a type string
+    (handles tuples by summing members)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: dict = field(default_factory=dict)     # opcode -> operand bytes
+    count_by_op: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_op.values())
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> CollectiveStats:
+    """Sum operand sizes of every collective in an HLO text dump.
+
+    Strategy: build a symbol table name -> result bytes from every
+    instruction definition; for each collective instruction, sum the sizes of
+    its operands (prefer inline operand shapes when the dump includes them,
+    fall back to the symbol table).  Async pairs: count ``-start`` and skip
+    the matching ``-done``; skip ``-update`` forms.
+    """
+    stats = CollectiveStats()
+    symtab: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, operands = m.groups()
+        symtab[name.lstrip("%")] = _shape_bytes(type_str)
+        base = opcode
+        for c in _COLLECTIVE_OPS:
+            if opcode == c or opcode == c + "-start":
+                base = c
+                break
+        else:
+            continue
+        if opcode.endswith(("-done", "-update")):
+            continue
+        # operand bytes: inline shapes if present, else symbol-table lookup
+        inline = _shape_bytes(operands)
+        if inline == 0:
+            for op_name in re.findall(r"%([\w.\-]+)", operands):
+                inline += symtab.get(op_name, 0)
+        stats.bytes_by_op[base] = stats.bytes_by_op.get(base, 0) + inline
+        stats.count_by_op[base] = stats.count_by_op.get(base, 0) + 1
+    return stats
+
+
+def wire_bytes(stats: CollectiveStats, n_chips: int) -> float:
+    """Bytes actually crossing links per chip, with per-algorithm multipliers
+    (ring algorithms):  all-reduce 2(N-1)/N, all-gather/reduce-scatter
+    (N-1)/N, all-to-all (N-1)/N, permute 1.  Used for the *modeled* term;
+    the headline spec term uses the raw operand sum."""
+    f = (n_chips - 1) / max(n_chips, 1)
+    mult = {
+        "all-reduce": 2.0 * f,
+        "all-gather": f,
+        "reduce-scatter": f,
+        "all-to-all": f,
+        "ragged-all-to-all": f,
+        "collective-broadcast": f,
+        "collective-permute": 1.0,
+    }
+    return sum(b * mult.get(op, 1.0) for op, b in stats.bytes_by_op.items())
+
+
+# ---------------------------------------------------------------------------
+# roofline
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Roofline:
+    """Three roofline terms (seconds) + provenance."""
+    name: str
+    n_chips: int
+    global_flops: float
+    global_hbm_bytes: float
+    collective_op_bytes: float          # raw operand sum (spec headline)
+    collective_wire_bytes: float        # ring-modeled per-chip wire bytes
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float = 0.0            # 6*N*D (or 6*N_active*D) if provided
+    collectives: dict = field(default_factory=dict)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Optimistic (perfect-overlap) step time = max of terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def step_time_noverlap_s(self) -> float:
+        return self.compute_s + self.memory_s + self.collective_s
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.global_flops if self.global_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved if the step ran at the
+        (overlapped) modeled time: useful-FLOPs MFU upper bound."""
+        if self.step_time_s <= 0:
+            return 0.0
+        useful = self.model_flops or self.global_flops
+        per_chip = useful / self.n_chips
+        return per_chip / self.step_time_s / _PEAK_FLOPS_CACHE
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d.update(dominant=self.dominant, step_time_s=self.step_time_s,
+                 useful_flops_ratio=self.useful_flops_ratio,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+
+_PEAK_FLOPS_CACHE = TPU_V5E.peak_flops   # set per-call in from_quantities
+
+
+def from_quantities(name: str, *, n_chips: int, per_device_flops: float,
+                    per_device_hbm_bytes: float, collective_stats: CollectiveStats,
+                    hardware: HardwareShape = TPU_V5E,
+                    model_flops: float = 0.0) -> Roofline:
+    """Build roofline terms from per-device SPMD quantities (see module
+    docstring for the chips-cancellation note)."""
+    global _PEAK_FLOPS_CACHE
+    _PEAK_FLOPS_CACHE = hardware.peak_flops
+    gflops = per_device_flops * n_chips
+    gbytes = per_device_hbm_bytes * n_chips
+    op_bytes = collective_stats.total_bytes * n_chips      # global operand sum
+    wire = wire_bytes(collective_stats, n_chips)           # per-chip wire bytes
+    return Roofline(
+        name=name, n_chips=n_chips,
+        global_flops=gflops, global_hbm_bytes=gbytes,
+        collective_op_bytes=op_bytes,
+        collective_wire_bytes=wire,
+        compute_s=gflops / (n_chips * hardware.peak_flops),
+        memory_s=gbytes / (n_chips * hardware.hbm.bandwidth_Bps),
+        # spec formula: raw operand bytes / (chips * link_bw)
+        collective_s=op_bytes / (n_chips * hardware.ici_Bps),
+        model_flops=model_flops,
+        collectives=dict(collective_stats.bytes_by_op),
+    )
+
+
+def model_flops_lm(n_params: int, n_tokens: int, *, active_params: int | None = None,
+                   training: bool = True) -> float:
+    """MODEL_FLOPS = 6*N*D for training (2 fwd + 4 bwd), 2*N*D for inference;
+    MoE uses active params."""
+    n = active_params if active_params is not None else n_params
+    return (6.0 if training else 2.0) * n * n_tokens

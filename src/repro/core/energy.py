@@ -1,0 +1,105 @@
+"""Energy model — reproduces the paper's figs 6-11 relationships on a modeled
+TPU (we cannot measure watts on CPU; the paper's own insight is that the
+energy optimum is *statically predictable from shapes*, which is exactly what
+this model does).
+
+Model:  E = E_dyn + P_static * T
+        E_dyn = flops * pJ_flop + hbm_bytes * pJ_hbm_byte
+                + vmem_bytes * pJ_vmem_byte + ici_bytes * pJ_ici_byte
+        T     = max(compute_s, memory_s, collective_s)      (overlapped)
+        P     = E / T
+
+Reproduced paper observations (validated in tests/test_energy.py and
+benchmarks/bench_energy_model.py):
+
+* Energy tracks Time across block sizes (fig 6-8): the block size that
+  minimizes modeled time also minimizes modeled energy.
+* Power varies ~10% while time varies orders of magnitude (fig 9-11, §3.6.3):
+  P = E/T is bounded between P_static and P_static + P_dyn_max.
+* For bandwidth-bound sizes, energy is linear in the *size of the matrix*
+  (quadratic in N) — the abstract's headline claim; for compute-bound sizes
+  it transitions to cubic, and the model exposes the crossover.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.lifting import HardwareShape, TPU_V5E
+from repro.core.blocking import BlockChoice, _dtype_size
+
+
+@dataclass(frozen=True)
+class EnergyReport:
+    time_s: float
+    energy_J: float
+    power_W: float
+    flops: float
+    hbm_bytes: float
+    vmem_bytes: float
+    ici_bytes: float
+    bound: str                     # "compute" | "memory" | "collective"
+
+
+def gemm_traffic(m: int, k: int, n: int, blocks: BlockChoice, dtype="bfloat16",
+                 acc_dtype="float32") -> tuple[float, float]:
+    """HBM and VMEM traffic (bytes) for a blocked GEMM with the given block
+    choice.  The blocked-contiguous schedule reads each A block n/bn times and
+    each B block m/bm times (round-robin over the lifted k axis, paper fig 2);
+    C is written once.  VMEM traffic counts every element touched by the MXU.
+    """
+    esize = _dtype_size(dtype)
+    cdiv = lambda a, b: -(-a // b)
+    gm, gk, gn = cdiv(m, blocks.bm), cdiv(k, blocks.bk), cdiv(n, blocks.bn)
+    hbm = (gn * (m * k) + gm * (k * n)) * esize + (m * n) * esize
+    vmem = 2.0 * m * k * n / min(blocks.bk, k) * esize  # operand re-touch per MXU pass
+    return float(hbm), float(vmem)
+
+
+def gemm_unblocked_traffic(m: int, k: int, n: int, dtype="bfloat16",
+                           burst_elems: int = 128) -> float:
+    """Classical (unblocked) row-of-A x column-of-B HBM traffic.
+
+    For every (i, j) output: A's row i streams contiguously (bursts fully
+    used, so useful bytes = moved bytes), but B's column j is walked with
+    stride p — each access moves a full burst of which ONE element is used.
+    This is the paper's strided-access penalty, the quantity MoA's
+    contiguous ONF eliminates.  C is written once.
+    """
+    esize = _dtype_size(dtype)
+    a = float(m) * n * k * esize                      # contiguous re-reads
+    b = float(m) * n * k * esize * min(burst_elems, n)  # strided burst waste
+    c = float(m) * n * esize
+    return a + b + c
+
+
+def gemm_energy(m: int, k: int, n: int, blocks: BlockChoice,
+                dtype="bfloat16", hardware: HardwareShape = TPU_V5E,
+                ici_bytes: float = 0.0) -> EnergyReport:
+    flops = 2.0 * m * k * n
+    hbm_b, vmem_b = gemm_traffic(m, k, n, blocks, dtype)
+    compute_s = flops / hardware.peak_flops
+    memory_s = hbm_b / hardware.hbm.bandwidth_Bps
+    coll_s = ici_bytes / hardware.ici_Bps if ici_bytes else 0.0
+    time_s = max(compute_s, memory_s, coll_s)
+    bound = {compute_s: "compute", memory_s: "memory", coll_s: "collective"}[time_s]
+    e_dyn = (flops * hardware.flop_energy_pJ
+             + hbm_b * hardware.hbm.energy_pJ_per_byte
+             + vmem_b * hardware.vmem.energy_pJ_per_byte
+             + ici_bytes * hardware.ici_energy_pJ_per_byte) * 1e-12
+    energy = e_dyn + hardware.sa_power_W * time_s
+    return EnergyReport(time_s, energy, energy / max(time_s, 1e-30),
+                        flops, hbm_b, vmem_b, ici_bytes, bound)
+
+
+def energy_vs_blocksize(n: int, block_sizes, dtype="bfloat16",
+                        hardware: HardwareShape = TPU_V5E):
+    """The paper's experiment: square GEMM of size n, sweep square blocks.
+    Returns list of (block, EnergyReport)."""
+    out = []
+    for b in block_sizes:
+        bc = BlockChoice(bm=b, bk=b, bn=b,
+                         vmem_bytes=3 * b * b * _dtype_size(dtype),
+                         arithmetic_intensity=2.0 * b / 3.0 / _dtype_size(dtype),
+                         utilization=1.0)
+        out.append((b, gemm_energy(n, n, n, bc, dtype, hardware)))
+    return out

@@ -1,0 +1,196 @@
+"""DNF -> ONF derivation: symbolic loop nests from MoA expressions.
+
+The paper derives code in three steps:
+
+  1. DNF (Psi reduction): compose all Cartesian indexing — minimal semantics,
+     all parallelism explicit.
+  2. ONF (apply a gamma layout): Cartesian indices become flat offsets —
+     paper eq. (3)/(4): ``C[(i*p)+j] += A[(i*n)+k] * B[(k*p)+j]``.
+  3. Dimension lifting: split loop bounds and tag each split with a resource
+     (paper figs 4, 5) — the lifted ONF *is* the parallel program.
+
+Here an ``Onf`` is a symbolic loop-nest description: loop axes (with extents
+and resource tags after lifting) + flat affine access functions per operand.
+Emitters turn an ``Onf`` into (a) an executable numpy interpreter (the
+semantic oracle used by tests), (b) a summary of innermost strides (feeding
+the cost/energy models), and (c) the C-like text of the paper's figures for
+documentation/debug.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.core.lifting import LiftedAxis, lift
+from repro.core.moa import pi
+
+
+@dataclass(frozen=True)
+class Loop:
+    """One loop of the nest.  ``resource`` tags lifted loops (paper fig 4/5:
+    the np / ip split of i; jp / kp split of j; sigma blocks of k)."""
+    index: str
+    extent: int
+    resource: Optional[str] = None      # None = sequential; "grid"/"data"/...
+
+
+@dataclass(frozen=True)
+class Access:
+    """Flat affine access  base[ sum_i coeff[index_i] * index_i ]."""
+    array: str
+    coeffs: dict[str, int]
+
+    def offset(self, env: dict[str, int]) -> int:
+        return sum(c * env[i] for i, c in self.coeffs.items())
+
+    def stride_in(self, index: str) -> int:
+        return self.coeffs.get(index, 0)
+
+    def render(self) -> str:
+        terms = [f"({c}*{i})" if c != 1 else i
+                 for i, c in self.coeffs.items() if c != 0]
+        return f"{self.array}[{' + '.join(terms) if terms else '0'}]"
+
+
+@dataclass(frozen=True)
+class Onf:
+    """out[...] (+)= f(in_0[...], in_1[...]) over the loop nest."""
+    name: str
+    loops: tuple[Loop, ...]
+    out: Access
+    ins: tuple[Access, ...]
+    reduce_indices: frozenset[str] = frozenset()
+    combine: Callable = np.multiply
+
+    # -- emitter (a): executable oracle ------------------------------------
+    def execute(self, out_flat: np.ndarray, *in_flats: np.ndarray) -> np.ndarray:
+        out = np.array(out_flat, copy=True)
+        extents = [l.extent for l in self.loops]
+        names = [l.index for l in self.loops]
+        for flat in np.ndindex(*extents):
+            env = dict(zip(names, flat))
+            vals = [f[a.offset(env)] for f, a in zip(in_flats, self.ins)]
+            v = self.combine(*vals) if len(vals) > 1 else vals[0]
+            o = self.out.offset(env)
+            if self.reduce_indices:
+                out[o] += v
+            else:
+                out[o] = v
+        return out
+
+    # -- emitter (b): innermost stride summary ------------------------------
+    def innermost_strides(self) -> dict[str, int]:
+        inner = self.loops[-1].index
+        d = {a.array: a.stride_in(inner) for a in self.ins}
+        d[self.out.array] = self.out.stride_in(inner)
+        return d
+
+    # -- emitter (c): the paper's C-like rendering ---------------------------
+    def render_c(self) -> str:
+        lines = []
+        indent = ""
+        for l in self.loops:
+            tag = f"  /* lifted: {l.resource} */" if l.resource else ""
+            lines.append(f"{indent}for ({l.index}=0; {l.index}<{l.extent}; {l.index}++){tag}")
+            indent += "  "
+        op = "+=" if self.reduce_indices else "="
+        rhs = " * ".join(a.render() for a in self.ins)
+        lines.append(f"{indent}{self.out.render()} {op} {rhs};")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# the paper's normal forms
+# ---------------------------------------------------------------------------
+
+def gemm_onf(m: int, n: int, p: int) -> Onf:
+    """Paper eq. (3): loops (i, k, j) so the innermost loop streams B and C
+    contiguously (fig 1 / ip.c of fig 3)."""
+    return Onf(
+        name="moa_gemm",
+        loops=(Loop("i", m), Loop("k", n), Loop("j", p)),
+        out=Access("C", {"i": p, "j": 1}),
+        ins=(Access("A", {"i": n, "k": 1}), Access("B", {"k": p, "j": 1})),
+        reduce_indices=frozenset({"k"}),
+    )
+
+
+def gemm_classical_onf(m: int, n: int, p: int) -> Onf:
+    """Row-column baseline: loops (i, j, k); innermost strides B by p."""
+    return Onf(
+        name="classical_gemm",
+        loops=(Loop("i", m), Loop("j", p), Loop("k", n)),
+        out=Access("C", {"i": p, "j": 1}),
+        ins=(Access("A", {"i": n, "k": 1}), Access("B", {"k": p, "j": 1})),
+        reduce_indices=frozenset({"k"}),
+    )
+
+
+def lift_loop(onf: Onf, index: str, factor: int, resource: str,
+              outer_first: bool = True) -> Onf:
+    """Dimension-lift one loop: i -> (i_o, i_i) with i = i_o*inner + i_i,
+    tagging the outer loop with the resource (paper figs 4/5).
+
+    Access functions rewrite affinely: coeff(i) -> coeff(i)*inner for i_o and
+    coeff(i) for i_i.  The lifted outer loop is hoisted to the front (it
+    indexes processors — order among resource loops is free by independence).
+    """
+    loops, lifted_out, lifted_in = [], None, None
+    for l in onf.loops:
+        if l.index != index:
+            loops.append(l)
+            continue
+        if l.extent % factor:
+            raise ValueError(f"{factor} does not divide extent {l.extent} of {index}")
+        inner = l.extent // factor
+        lifted_out = Loop(index + "_o", factor, resource)
+        lifted_in = Loop(index + "_i", inner, l.resource)
+        loops.append(lifted_in)
+    if lifted_out is None:
+        raise KeyError(index)
+    loops = ([lifted_out] + loops) if outer_first else (loops + [lifted_out])
+
+    inner_extent = lifted_in.extent
+
+    def rewrite(a: Access) -> Access:
+        if index not in a.coeffs:
+            return a
+        c = dict(a.coeffs)
+        k = c.pop(index)
+        c[index + "_o"] = k * inner_extent
+        c[index + "_i"] = k
+        return Access(a.array, c)
+
+    red = set(onf.reduce_indices)
+    if index in red:
+        red.discard(index)
+        red |= {index + "_o", index + "_i"}
+    return Onf(onf.name + f"+lift({index},{resource})", tuple(loops),
+               rewrite(onf.out), tuple(rewrite(a) for a in onf.ins),
+               frozenset(red), onf.combine)
+
+
+def gemm_lifted_rows(m: int, n: int, p: int, np_procs: int) -> Onf:
+    """Paper fig 4 (ip_rows.c): lift i over processors."""
+    return lift_loop(gemm_onf(m, n, p), "i", np_procs, "proc")
+
+
+def gemm_lifted_cols(m: int, n: int, p: int, rsize: int) -> Onf:
+    """Paper fig 5 (ip_cols.c): lift j into groups of ``rsize`` (vector
+    registers / thread groups)."""
+    assert p % rsize == 0
+    return lift_loop(gemm_onf(m, n, p), "j", p // rsize, "vector")
+
+
+def gemm_fully_lifted(m: int, n: int, p: int, *, procs: int, bk: int,
+                      bn: int) -> Onf:
+    """The paper's full schedule (fig 2): rows over processors, k into
+    sigma-blocks (the extra addition loop over blocks), j into register
+    groups — a 6-deep nest from the 3-deep ONF."""
+    o = gemm_onf(m, n, p)
+    o = lift_loop(o, "i", procs, "proc")
+    o = lift_loop(o, "k", max(n // bk, 1), "block")
+    o = lift_loop(o, "j", max(p // bn, 1), "vector")
+    return o

@@ -1,0 +1,1 @@
+from repro.data.pipeline import PipelineConfig, SyntheticLM  # noqa: F401

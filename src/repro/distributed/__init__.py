@@ -1,0 +1,3 @@
+"""Distribution layer: lifting-derived sharding, overlap collectives,
+gradient compression, fault tolerance."""
+from repro.distributed import sharding  # noqa: F401

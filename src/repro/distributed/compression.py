@@ -1,0 +1,62 @@
+"""Gradient compression for data-parallel reduction: int8 block quantization
+with error feedback (1-bit-Adam-family technique, adapted to int8).
+
+Under SPMD the DP all-reduce is implicit in the gradient computation, so the
+compression is expressed as a *quantize -> (reduce) -> dequantize* transform
+applied to gradients, with the per-leaf quantization residual carried in the
+train state and added back the next step (error feedback keeps the scheme
+convergent: the compression error is O(1) bounded, not accumulating).
+
+Wire-byte accounting: int8 payload + one f32 scale per block of
+``block_size`` values => 4x reduction vs f32 (+1.6% scale overhead), which
+the roofline's collective term models via ``compressed_bytes``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressionConfig(NamedTuple):
+    enabled: bool = False
+    block_size: int = 256
+
+
+def init_error_state(params) -> dict:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quant_dequant(g: jax.Array, block: int) -> jax.Array:
+    flat = g.reshape(-1).astype(jnp.float32)
+    pad = (-flat.size) % block
+    fp = jnp.pad(flat, (0, pad)).reshape(-1, block)
+    scale = jnp.max(jnp.abs(fp), axis=1, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(fp / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq.reshape(-1)[:flat.size].reshape(g.shape)
+
+
+def compress_grads(cfg: CompressionConfig, grads, err_state
+                   ) -> tuple[dict, dict]:
+    """Returns (decompressed grads as seen post-all-reduce, new error state)."""
+    if not cfg.enabled:
+        return grads, err_state
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e                 # error feedback
+        deq = _quant_dequant(gf, cfg.block_size)
+        return deq.astype(g.dtype), gf - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(err_state)
+    pairs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([p[0] for p in pairs]),
+            tdef.unflatten([p[1] for p in pairs]))
+
+
+def compressed_bytes(n_params: int, block_size: int = 256) -> int:
+    """Wire bytes for one compressed DP reduction of n_params f32 grads."""
+    return n_params + (n_params // block_size) * 4

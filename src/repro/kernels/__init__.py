@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the paper's compute hot-spot: blocked MoA GEMM and
+its unified-operator family (inner/outer/hadamard/kron), plus the MoE
+expert-GEMM extension.  ``ref`` holds the pure-jnp oracles; ``ops`` the
+public jit wrappers with static block solving and padding."""
+from repro.kernels.ops import (  # noqa: F401
+    moa_gemm, expert_gemm, hadamard, outer, kron, ipophp,
+)
+from repro.kernels import ref  # noqa: F401

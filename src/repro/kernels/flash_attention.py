@@ -1,0 +1,114 @@
+"""Flash attention as a Pallas TPU kernel — the VMEM-blocked twin of
+``repro.models.chunked_attention`` (which is its jnp oracle and the XLA
+fallback path used by the dry-run).
+
+Schedule = dimension lifting of both sequence axes:
+
+    grid = (batch*q_heads, Sq/bq, Sk/bk)      k innermost ("arbitrary")
+    resident per step: q (bq,hd), k (bk,hd), v (bk,hd), acc (bq,hd) f32,
+    running max m and denominator l — the block solver's '3 blocks + state
+    <= VMEM' constraint picks (bq, bk).
+
+GQA handled in the BlockSpec index map (q head -> kv head, no K/V repeat).
+Causal masking from absolute positions; fully-masked k-blocks are skipped
+via ``pl.when`` (halves the work for causal attention).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  nk: int, scale: float, causal: bool, bq: int, bk: int,
+                  out_dtype):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal: skip k-blocks strictly above the diagonal
+    run = (not causal) or (ki * bk <= qi * bq + bq - 1)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0]                                  # (bq, hd)
+        k = k_ref[0]                                  # (bk, hd)
+        v = v_ref[0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[:, 0] = l_ref[:, 0] * corr + p.sum(axis=-1)
+        m_ref[:, 0] = m_new
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + jax.lax.dot_general(p.astype(v.dtype), v,
+                                              (((1,), (0,)), ((), ())),
+                                              preferred_element_type=jnp.float32))
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[:, 0], 1e-30)[:, None]).astype(out_dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    scale: float, causal: bool = True,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, Sq, hd); k/v: (B, Hkv, Sk, hd), Hq % Hkv == 0.
+    Returns (B, Hq, Sq, hd).  Sq/Sk must be multiples of the blocks
+    (ops-level wrapper pads)."""
+    b, hq, sq, hd = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0
+    g = hq // hkv
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, sk, bq, bk)
+    nq, nk = sq // bq, sk // bk
+
+    qf = q.reshape(b * hq, sq, hd)
+    kf = k.reshape(b * hkv, sk, hd)
+    vf = v.reshape(b * hkv, sk, hd)
+
+    def kv_map(h, qi, ki):
+        return ((h // hq) * hkv + (h % hq) // g, ki, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, nk=nk, scale=scale, causal=causal,
+                          bq=bq, bk=bk, out_dtype=q.dtype),
+        grid=(b * hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((1, bk, hd), kv_map),
+            pl.BlockSpec((1, bk, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda h, qi, ki: (h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),         # running max
+            pltpu.VMEM((bq, 1), jnp.float32),         # denominator
+            pltpu.VMEM((bq, hd), jnp.float32),        # accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, hq, sq, hd)

@@ -1,0 +1,144 @@
+"""MoA blocked-contiguous GEMM as a Pallas TPU kernel.
+
+This is the paper's fig. 2 schedule on TPU: the lifted loop nest
+
+    for i_o (grid, parallel)            # dimension-lift rows of A/C
+      for j_o (grid, parallel)          # dimension-lift cols of B/C
+        for k_o (grid, arbitrary)       # the "sigma" block loop — the extra
+          C_blk (+)= A_blk @ B_blk      #   addition loop that sums blocks
+
+with block shapes chosen *statically* by the solver in
+``repro.core.blocking`` so that the three resident blocks (+double-buffered
+inputs, f32 accumulator) fit the VMEM budget and are MXU-aligned — the TPU
+re-instantiation of "3 blocks <= L1 per SM".
+
+Contiguity: with row-major layouts, walking the grid (i, j, k-innermost)
+makes every HBM->VMEM DMA a dense row-major tile of A, B and C — the MoA
+ONF's stride-1 access property lifted from elements to DMA bursts.
+
+The k grid axis accumulates into a VMEM f32 scratch, written to C on the
+last k step ("round robin, row-major order ... summing blocks of partial
+sums").
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.blocking import BlockChoice
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, gk: int, out_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == gk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+def moa_gemm_kernel(a: jax.Array, b: jax.Array, blocks: BlockChoice,
+                    out_dtype=None, interpret: bool = False) -> jax.Array:
+    """Raw kernel: requires m % bm == k % bk == n % bn == 0."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bk, bn = blocks.bm, blocks.bk, blocks.bn
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (a.shape, b.shape, blocks)
+    gm, gn, gk = m // bm, n // bn, k // bk
+    out_dtype = out_dtype or a.dtype
+
+    return pl.pallas_call(
+        functools.partial(_gemm_kernel, gk=gk, out_dtype=out_dtype),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b)
+
+
+def _expert_gemm_kernel(x_ref, w_ref, o_ref, acc_ref, *, gk: int, out_dtype):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[0], w_ref[0],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == gk - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(out_dtype)
+
+
+def expert_gemm_kernel(x: jax.Array, w: jax.Array, blocks: BlockChoice,
+                       out_dtype=None, interpret: bool = False) -> jax.Array:
+    """Capacity-padded MoE expert GEMM: (E, cap, d) x (E, d, f) -> (E, cap, f).
+
+    The expert axis is one more dimension-lift of the same schedule: the
+    paper's round-robin block loop, batched over the lifted resource axis
+    "expert" (grid-parallel; each grid cell is an independent MoA GEMM).
+    """
+    e, cap, d = x.shape
+    e2, d2, f = w.shape
+    assert e == e2 and d == d2, (x.shape, w.shape)
+    bm, bk, bn = blocks.bm, blocks.bk, blocks.bn
+    assert cap % bm == 0 and d % bk == 0 and f % bn == 0, (x.shape, w.shape, blocks)
+    gm, gn, gk = cap // bm, f // bn, d // bk
+    out_dtype = out_dtype or x.dtype
+
+    return pl.pallas_call(
+        functools.partial(_expert_gemm_kernel, gk=gk, out_dtype=out_dtype),
+        grid=(e, gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda ee, i, j, kk: (ee, i, kk)),
+            pl.BlockSpec((1, bk, bn), lambda ee, i, j, kk: (ee, kk, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda ee, i, j, kk: (ee, i, j)),
+        out_shape=jax.ShapeDtypeStruct((e, cap, f), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w)
+
+
+def _hadamard_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] * b_ref[...]
+
+
+def hadamard_kernel(a: jax.Array, b: jax.Array, block: tuple[int, int],
+                    interpret: bool = False) -> jax.Array:
+    """Blocked Hadamard product — the degenerate (no-contraction) form of the
+    unified ipophp circuit; same lifting, elementwise block body."""
+    m, n = a.shape
+    bm, bn = block
+    assert m % bm == 0 and n % bn == 0
+    return pl.pallas_call(
+        _hadamard_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))] * 2,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(a, b)

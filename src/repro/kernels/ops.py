@@ -1,0 +1,151 @@
+"""Public, jit-friendly wrappers around the Pallas kernels.
+
+These handle: static block-size solving (via ``repro.core.blocking``),
+padding to block multiples (the grid covers the padded problem; the pad is
+sliced away), dtype policy (f32 accumulation), backend dispatch (Pallas on
+TPU, interpret-mode Pallas for CPU validation, jnp oracle fallback), and the
+``ipophp`` unified-operator dispatcher of the paper's appendix.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocking import BlockChoice, solve_blocks
+from repro.core.lifting import TPU_V5E
+from repro.kernels import ref
+from repro.kernels import moa_gemm as _k
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
+    pads = [(0, (-d) % m) for d, m in zip(x.shape, mults)]
+    if any(p for _, p in pads):
+        return jnp.pad(x, pads)
+    return x
+
+
+def default_blocks(m: int, k: int, n: int, dtype) -> BlockChoice:
+    """Solver defaults tuned for kernel use: quarter-VMEM budget keeps
+    double-buffering headroom; caps keep the grid >= a few cells."""
+    bc = solve_blocks(min(m, 512), min(k, 2048), min(n, 512), dtype,
+                      hardware=TPU_V5E, vmem_budget_frac=0.25)
+    return bc
+
+
+@functools.partial(jax.jit, static_argnames=("blocks", "out_dtype", "interpret"))
+def _moa_gemm_impl(a, b, blocks: BlockChoice, out_dtype, interpret: bool):
+    m, k = a.shape
+    _, n = b.shape
+    ap = _pad_to(a, (blocks.bm, blocks.bk))
+    bp = _pad_to(b, (blocks.bk, blocks.bn))
+    out = _k.moa_gemm_kernel(ap, bp, blocks, out_dtype=out_dtype,
+                             interpret=interpret)
+    return out[:m, :n]
+
+
+def moa_gemm(a: jax.Array, b: jax.Array, *, blocks: Optional[BlockChoice] = None,
+             out_dtype=None, interpret: Optional[bool] = None) -> jax.Array:
+    """C = A @ B through the MoA blocked-contiguous Pallas kernel."""
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch {a.shape} @ {b.shape}")
+    blocks = blocks or default_blocks(m, k, n, a.dtype)
+    out_dtype = out_dtype or a.dtype
+    return _moa_gemm_impl(a, b, blocks, jnp.dtype(out_dtype),
+                          _auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("blocks", "out_dtype", "interpret"))
+def _expert_gemm_impl(x, w, blocks: BlockChoice, out_dtype, interpret: bool):
+    e, cap, d = x.shape
+    _, _, f = w.shape
+    xp = _pad_to(x, (1, blocks.bm, blocks.bk))
+    wp = _pad_to(w, (1, blocks.bk, blocks.bn))
+    out = _k.expert_gemm_kernel(xp, wp, blocks, out_dtype=out_dtype,
+                                interpret=interpret)
+    return out[:, :cap, :f]
+
+
+def expert_gemm(x: jax.Array, w: jax.Array, *, blocks: Optional[BlockChoice] = None,
+                out_dtype=None, interpret: Optional[bool] = None) -> jax.Array:
+    """(E, cap, d) x (E, d, f) -> (E, cap, f) capacity-padded expert GEMM."""
+    e, cap, d = x.shape
+    e2, d2, f = w.shape
+    if e != e2 or d != d2:
+        raise ValueError(f"expert gemm mismatch {x.shape} x {w.shape}")
+    blocks = blocks or default_blocks(cap, d, f, x.dtype)
+    out_dtype = out_dtype or x.dtype
+    return _expert_gemm_impl(x, w, blocks, jnp.dtype(out_dtype),
+                             _auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def _hadamard_impl(a, b, block, interpret: bool):
+    m, n = a.shape
+    ap = _pad_to(a, block)
+    bp = _pad_to(b, block)
+    return _k.hadamard_kernel(ap, bp, block, interpret=interpret)[:m, :n]
+
+
+def hadamard(a: jax.Array, b: jax.Array, *, block: tuple[int, int] = (256, 256),
+             interpret: Optional[bool] = None) -> jax.Array:
+    if a.shape != b.shape:
+        raise ValueError(f"hadamard shape mismatch {a.shape} vs {b.shape}")
+    block = (min(block[0], max(a.shape[0], 8)), min(block[1], max(a.shape[1], 128)))
+    return _hadamard_impl(a, b, block, _auto_interpret(interpret))
+
+
+# ---------------------------------------------------------------------------
+# the unified operator (paper appendix: "one algorithm/circuit (ipophp)")
+# ---------------------------------------------------------------------------
+
+def outer(a: jax.Array, b: jax.Array, *, interpret: Optional[bool] = None
+          ) -> jax.Array:
+    """Outer product of matrices through the SAME gemm circuit: the MoA
+    degenerate inner product — rav(A) (mn,1) . rav(B)^T (1,pq), reshaped.
+    (Contraction extent 1: the sigma loop collapses, nothing else changes.)"""
+    m, n = a.shape
+    p, q = b.shape
+    flat = moa_gemm(a.reshape(m * n, 1), b.reshape(1, p * q),
+                    interpret=interpret)
+    return flat.reshape(m, n, p, q)
+
+
+def kron(a: jax.Array, b: jax.Array, *, interpret: Optional[bool] = None
+         ) -> jax.Array:
+    """Kronecker product = outer product + gamma re-layout (transpose/reshape):
+    the paper's claim that KP shares the MM circuit, realized literally."""
+    m, n = a.shape
+    p, q = b.shape
+    return outer(a, b, interpret=interpret).transpose(0, 2, 1, 3).reshape(m * p, n * q)
+
+
+def ipophp(a: jax.Array, b: jax.Array, mode: str, *,
+           interpret: Optional[bool] = None) -> jax.Array:
+    """Unified inner/outer/hadamard/kron dispatcher (single blocked circuit:
+    'ip' is the full schedule, 'op'/'kp' are its contraction-degenerate form,
+    'hp' its pairing-degenerate form)."""
+    if mode == "ip":
+        return moa_gemm(a, b, interpret=interpret)
+    if mode == "op":
+        return outer(a, b, interpret=interpret)
+    if mode == "kp":
+        return kron(a, b, interpret=interpret)
+    if mode == "hp":
+        return hadamard(a, b, interpret=interpret)
+    raise ValueError(f"unknown ipophp mode {mode!r}")
+
+
+# convenience: oracle aliases so callers can switch paths uniformly
+gemm_ref = ref.gemm_ref
+ipophp_ref = ref.ipophp_ref

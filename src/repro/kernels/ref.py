@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the *semantic definition* the kernels are tested against
+(tests sweep shapes/dtypes and assert_allclose kernel-vs-oracle).  These are
+also the fallback execution path on backends without Pallas.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    """C = A @ B with f32 accumulation (the MoA inner product on matrices)."""
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def hadamard_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return a * b
+
+
+def outer_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """MoA outer product of two matrices: shape (m, n, p, q)."""
+    return jnp.einsum("mn,pq->mnpq", a, b)
+
+
+def kron_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Kronecker product via the MoA lemma: transpose+reshape of the outer."""
+    m, n = a.shape
+    p, q = b.shape
+    return outer_ref(a, b).transpose(0, 2, 1, 3).reshape(m * p, n * q)
+
+
+def expert_gemm_ref(x: jax.Array, w: jax.Array, out_dtype=None) -> jax.Array:
+    """Grouped (capacity-padded) expert GEMM: (E, cap, d) x (E, d, f)."""
+    out_dtype = out_dtype or x.dtype
+    return jnp.einsum("ecd,edf->ecf", x, w,
+                      preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def ipophp_ref(a: jax.Array, b: jax.Array, mode: str) -> jax.Array:
+    """The unified inner/outer/hadamard/kron operator (paper appendix)."""
+    if mode == "ip":
+        return gemm_ref(a, b)
+    if mode == "hp":
+        return hadamard_ref(a, b)
+    if mode == "op":
+        return outer_ref(a, b)
+    if mode == "kp":
+        return kron_ref(a, b)
+    raise ValueError(f"unknown ipophp mode {mode!r}")

@@ -1,0 +1,3 @@
+"""Launchers: mesh construction, multi-pod dry-run, train and serve drivers.
+(Do not import dryrun from here: it sets XLA_FLAGS at import time.)"""
+from repro.launch import mesh  # noqa: F401

@@ -1,0 +1,3 @@
+"""Model zoo: all ten assigned architectures behind one registry interface."""
+from repro.models import registry  # noqa: F401
+from repro.models.common import ArchConfig, ShapeConfig, SHAPES  # noqa: F401

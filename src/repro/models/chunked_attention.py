@@ -1,0 +1,119 @@
+"""Chunked (flash-style) attention: online softmax over K/V chunks, scanned
+over Q chunks — never materializes the (S_q x S_k) score matrix.
+
+This is the same dimension lifting as the GEMM kernel applied to attention:
+``S_q -> (q_chunks, Qc)`` and ``S_k -> (k_chunks, Kc)`` with the softmax
+turned into a streaming reduction (running max m, denominator l).  The
+Pallas TPU kernel in ``repro.kernels.flash_attention`` implements the same
+schedule with explicit VMEM BlockSpecs; this jnp version is the XLA path the
+dry-run lowers (and the kernel's oracle).
+
+Supports: causal masking with arbitrary query offset, local windows,
+bidirectional prefix (PaLI), GQA grouping (never repeats K/V heads).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _chunk_mask(qpos: jax.Array, kpos: jax.Array, *, causal: bool,
+                window: int, prefix_len: int) -> jax.Array:
+    """(Qc, Kc) mask from absolute positions."""
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m = kpos[None, :] <= qpos[:, None]
+        if window > 0:
+            m &= kpos[None, :] > (qpos[:, None] - window)
+        if prefix_len > 0:
+            m |= (qpos[:, None] < prefix_len) & (kpos[None, :] < prefix_len)
+    return m
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      scale: float, causal: bool = True, window: int = 0,
+                      prefix_len: int = 0, q_chunk: int = 1024,
+                      k_chunk: int = 1024, remat_kstep: bool = False) -> jax.Array:
+    """q: (B, Sq, KV, G, hd); k/v: (B, Sk, KV, hd) -> (B, Sq, KV*G, hd).
+
+    Sq/Sk are padded internally to chunk multiples; positions are absolute
+    (q at offset 0 — full-sequence forward/prefill use).
+    """
+    b, sq, kvh, g, hd = q.shape
+    sk = k.shape[1]
+    vd = v.shape[-1]                 # may differ from hd (MLA latent values)
+    qc = min(q_chunk, sq)
+    kc = min(k_chunk, sk)
+    pad_q = (-sq) % qc
+    pad_k = (-sk) % kc
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq, nk = (sq + pad_q) // qc, (sk + pad_k) // kc
+
+    kp = kp.reshape(b, nk, kc, kvh, hd)
+    vp = vp.reshape(b, nk, kc, kvh, vd)
+
+    def q_block(qi, q_blk):
+        qpos = qi * qc + jnp.arange(qc)
+
+        def k_step(carry, kin):
+            m_run, l_run, acc = carry
+            ki, k_blk, v_blk = kin
+            kpos = ki * kc + jnp.arange(kc)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _chunk_mask(qpos, kpos, causal=causal, window=window,
+                               prefix_len=prefix_len)
+            mask &= (kpos < sk)[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(v_blk.dtype), v_blk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, kvh, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, qc, vd), jnp.float32)
+        # remat the k-step: the backward pass recomputes each chunk's
+        # probabilities instead of saving nk of them (the dominant training
+        # temp once layers themselves are rematted)
+        step = jax.checkpoint(k_step) if remat_kstep else k_step
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            step, (m0, l0, a0),
+            (jnp.arange(nk), kp.transpose(1, 0, 2, 3, 4),
+             vp.transpose(1, 0, 2, 3, 4)))
+        out = acc / jnp.maximum(l_f[..., None], 1e-30)
+        return out.astype(q.dtype)                    # (b, kv, g, qc, hd)
+
+    qp = qp.reshape(b, nq, qc, kvh, g, hd)
+    outs = jax.lax.map(lambda args: q_block(*args),
+                       (jnp.arange(nq), qp.transpose(1, 0, 2, 3, 4, 5)))
+    # outs: (nq, b, kv, g, qc, vd) -> (b, nq*qc, kv*g, vd)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, nq * qc, kvh * g, vd)
+    return out[:, :sq]
+
+
+def chunked_attention_ref(q, k, v, *, scale, causal=True, window=0,
+                          prefix_len=0):
+    """Unchunked oracle (same signature, materializes scores)."""
+    b, sq, kvh, g, hd = q.shape
+    sk = k.shape[1]
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    mask = _chunk_mask(jnp.arange(sq), jnp.arange(sk), causal=causal,
+                       window=window, prefix_len=prefix_len)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v,
+                     preferred_element_type=jnp.float32).astype(q.dtype)
+    return out.reshape(b, sq, kvh * g, v.shape[-1])

@@ -1,0 +1,123 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).  [arXiv:2402.19427]
+
+Recurrence (elementwise over the lru_width channels, f32):
+
+    r_t = sigmoid(W_a x_t)            recurrence gate
+    i_t = sigmoid(W_x x_t)            input gate
+    a_t = exp(-c * softplus(Lambda) * r_t),  c = 8
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses ``jax.lax.associative_scan`` (log-depth — this is what makes
+the 512k-token long-context cell tractable); decode is the single step.
+The full block is: (x-branch: linear -> causal conv(4) -> RG-LRU) gated by
+(gate-branch: linear -> gelu), then an output projection.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.common import ArchConfig, Collector
+
+_C = 8.0
+
+
+def lru_width(cfg: ArchConfig) -> int:
+    return cfg.lru_width or cfg.d_model
+
+
+def init_rglru(col: Collector, path: str, cfg: ArchConfig,
+               stack: tuple[tuple[int, str], ...] = ()):
+    d, w = cfg.d_model, lru_width(cfg)
+    lead = tuple(s for s, _ in stack)
+    laxes = tuple(a for _, a in stack)
+    col.param(f"{path}/w_x", lead + (d, w), laxes + ("d_model", "lru"), scale=d ** -0.5)
+    col.param(f"{path}/w_gate", lead + (d, w), laxes + ("d_model", "lru"), scale=d ** -0.5)
+    col.param(f"{path}/conv_w", lead + (cfg.conv_width, w), laxes + (None, "lru"),
+              scale=cfg.conv_width ** -0.5)
+    col.param(f"{path}/conv_b", lead + (w,), laxes + ("lru",), init="zeros")
+    col.param(f"{path}/wa", lead + (w, w), laxes + (None, "lru"), scale=w ** -0.5)
+    col.param(f"{path}/wi", lead + (w, w), laxes + (None, "lru"), scale=w ** -0.5)
+    col.param(f"{path}/ba", lead + (w,), laxes + ("lru",), init="zeros")
+    col.param(f"{path}/bi", lead + (w,), laxes + ("lru",), init="zeros")
+    col.param(f"{path}/lam", lead + (w,), laxes + ("lru",), init="ones")
+    col.param(f"{path}/w_out", lead + (w, d), laxes + ("lru", "d_model"),
+              scale=w ** -0.5)
+
+
+class RGLRUCache(NamedTuple):
+    h: jax.Array          # (B, lru) f32 recurrent state
+    conv: jax.Array       # (B, conv_width-1, lru) conv history
+
+
+def init_rglru_cache(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16) -> RGLRUCache:
+    w = lru_width(cfg)
+    return RGLRUCache(h=jnp.zeros((batch, w), jnp.float32),
+                      conv=jnp.zeros((batch, cfg.conv_width - 1, w), dtype))
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    wwidth = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, wwidth):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * w[wwidth - 1 - i]
+    return out + b
+
+
+def _gates(p: dict, xc: jax.Array):
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xc, p["wa"],
+                                  preferred_element_type=jnp.float32)
+                       + p["ba"].astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xc, p["wi"],
+                                  preferred_element_type=jnp.float32)
+                       + p["bi"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, mult * i * xc.astype(jnp.float32)
+
+
+def apply_rglru(p: dict, x: jax.Array, cfg: ArchConfig
+                ) -> tuple[jax.Array, RGLRUCache]:
+    """Full-sequence block.  x: (B,S,d)."""
+    xb = jnp.einsum("bsd,dw->bsw", x, p["w_x"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    gate = jnp.einsum("bsd,dw->bsw", x, p["w_gate"],
+                      preferred_element_type=jnp.float32)
+    xc = _causal_conv(xb, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype))
+    xc = constrain(xc, "batch", None, "lru")
+    a, b_in = _gates(p, xc)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    a_s, h = jax.lax.associative_scan(combine, (a, b_in), axis=1)
+    y = (h * jax.nn.gelu(gate, approximate=True)).astype(x.dtype)
+    out = jnp.einsum("bsw,wd->bsd", y, p["w_out"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    cache = RGLRUCache(h=h[:, -1], conv=xb[:, -(cfg.conv_width - 1):])
+    return out, cache
+
+
+def decode_rglru(p: dict, x: jax.Array, cache: RGLRUCache, cfg: ArchConfig
+                 ) -> tuple[jax.Array, RGLRUCache]:
+    """One-token step.  x: (B,1,d)."""
+    xb = jnp.einsum("bsd,dw->bsw", x, p["w_x"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    gate = jnp.einsum("bsd,dw->bsw", x, p["w_gate"],
+                      preferred_element_type=jnp.float32)
+    hist = jnp.concatenate([cache.conv, xb], axis=1)         # (B,W,lru)
+    w = p["conv_w"].astype(x.dtype)
+    xc = (jnp.einsum("bwc,wc->bc", hist, w) + p["conv_b"].astype(x.dtype))[:, None]
+    a, b_in = _gates(p, xc)
+    h = a[:, 0] * cache.h + b_in[:, 0]
+    y = (h[:, None] * jax.nn.gelu(gate, approximate=True)).astype(x.dtype)
+    out = jnp.einsum("bsw,wd->bsd", y, p["w_out"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, RGLRUCache(h=h, conv=hist[:, 1:])

@@ -1,0 +1,217 @@
+"""Mamba-2 (SSD — state-space duality) block, chunked for training and
+recurrent for decode.  [arXiv:2405.21060]
+
+The chunked SSD algorithm is itself a dimension lifting: the sequence axis is
+split ``S -> (chunks, chunk_len)`` and the computation decomposes into
+block-diagonal (intra-chunk, quadratic-in-q matmuls on the MXU) plus low-rank
+(inter-chunk, a scan over chunk states).  The chunk length is chosen by the
+same VMEM block solver as the GEMM kernel (``default_ssd_chunk``).
+
+Decode is the dual recurrent form: O(1) state update per token —
+state (B, H, p, N);  h' = exp(dt*A) h + dt * x outer B;  y = C . h + D x.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.common import ArchConfig, Collector
+
+
+def d_inner(cfg: ArchConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def n_ssd_heads(cfg: ArchConfig) -> int:
+    return d_inner(cfg) // cfg.ssm_head_dim
+
+
+def conv_dim(cfg: ArchConfig) -> int:
+    return d_inner(cfg) + 2 * cfg.ssm_state
+
+
+def init_mamba2(col: Collector, path: str, cfg: ArchConfig,
+                stack: tuple[tuple[int, str], ...] = ()):
+    d = cfg.d_model
+    din, h, n = d_inner(cfg), n_ssd_heads(cfg), cfg.ssm_state
+    lead = tuple(s for s, _ in stack)
+    laxes = tuple(a for _, a in stack)
+    # in_proj -> [z, x, B, C, dt]
+    col.param(f"{path}/w_in", lead + (d, 2 * din + 2 * n + h),
+              laxes + ("d_model", "d_inner"), scale=d ** -0.5)
+    col.param(f"{path}/conv_w", lead + (cfg.conv_width, conv_dim(cfg)),
+              laxes + (None, "d_inner"), scale=cfg.conv_width ** -0.5)
+    col.param(f"{path}/conv_b", lead + (conv_dim(cfg),), laxes + ("d_inner",),
+              init="zeros")
+    col.param(f"{path}/A_log", lead + (h,), laxes + ("ssm_heads",), init="zeros")
+    col.param(f"{path}/D", lead + (h,), laxes + ("ssm_heads",), init="ones")
+    col.param(f"{path}/dt_bias", lead + (h,), laxes + ("ssm_heads",), init="zeros")
+    col.param(f"{path}/norm_scale", lead + (din,), laxes + ("d_inner",), init="ones")
+    col.param(f"{path}/w_out", lead + (din, d), laxes + ("d_inner", "d_model"),
+              scale=din ** -0.5)
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array        # (B, conv_width-1, conv_dim) — trailing inputs
+    state: jax.Array       # (B, H, p, N) f32
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16) -> SSMCache:
+    h, p, n = n_ssd_heads(cfg), cfg.ssm_head_dim, cfg.ssm_state
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, conv_dim(cfg)), dtype),
+        state=jnp.zeros((batch, h, p, n), jnp.float32))
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv via shifted adds. x: (B,S,C), w: (W,C)."""
+    wwidth = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, wwidth):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * w[wwidth - 1 - i]
+    return out + b
+
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{j<t<=i} dA[..., t] (i>=j)."""
+    q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # (..., i, j)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                C: jax.Array, chunk: int, init_state: jax.Array | None = None,
+                unroll: bool = False) -> tuple[jax.Array, jax.Array]:
+    """SSD over a full sequence.  x: (b,s,h,p), dt: (b,s,h) (post-softplus),
+    A: (h,) negative, B,C: (b,s,n).  Returns (y (b,s,h,p), final state
+    (b,h,p,n) f32)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    c = s // chunk
+    xf = (x * dt[..., None]).astype(jnp.float32)         # fold dt into x
+    dA = (dt * A).astype(jnp.float32)                    # (b,s,h)
+    xc = xf.reshape(b, c, chunk, h, p)
+    Bc = B.reshape(b, c, chunk, n).astype(jnp.float32)
+    Cc = C.reshape(b, c, chunk, n).astype(jnp.float32)
+    dAc = dA.reshape(b, c, chunk, h).transpose(0, 1, 3, 2)   # (b,c,h,q)
+
+    # intra-chunk (block-diagonal): the MXU-friendly quadratic part
+    L = jnp.exp(_segsum(dAc))                                # (b,c,h,q,q)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)           # (b,c,q,q)
+    y_diag = jnp.einsum("bcij,bchij,bcjhp->bcihp", scores, L, xc)
+
+    # chunk states: S_c = sum_j exp(dAsum - cum_j) B_j x_j
+    cum = jnp.cumsum(dAc, axis=-1)                           # (b,c,h,q)
+    total = cum[..., -1:]
+    decay_states = jnp.exp(total - cum)                      # (b,c,h,q)
+    S = jnp.einsum("bcjn,bchj,bcjhp->bchpn", Bc, decay_states, xc)
+
+    # inter-chunk recurrence over c (sequential scan, c is small)
+    chunk_decay = jnp.exp(total[..., 0])                     # (b,c,h)
+
+    def step(prev, inp):
+        s_in, dec = inp
+        nxt = dec[..., None, None] * prev + s_in
+        return nxt, prev
+
+    init = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+            else init_state.astype(jnp.float32))
+    S_t = S.transpose(1, 0, 2, 3, 4)                         # (c,b,h,p,n)
+    dec_t = chunk_decay.transpose(1, 0, 2)                   # (c,b,h)
+    final, prevs = jax.lax.scan(step, init, (S_t, dec_t), unroll=bool(unroll))
+    prev_states = prevs.transpose(1, 0, 2, 3, 4)             # (b,c,h,p,n)
+
+    # inter-chunk contribution
+    in_decay = jnp.exp(cum)                                  # (b,c,h,q)
+    y_off = jnp.einsum("bcin,bchpn,bchi->bcihp", Cc, prev_states, in_decay)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final
+
+
+def apply_mamba2(p: dict, x: jax.Array, cfg: ArchConfig) -> tuple[jax.Array, SSMCache]:
+    """Full-sequence Mamba-2 block.  Returns output and final cache."""
+    b, s, d = x.shape
+    din, h, n = d_inner(cfg), n_ssd_heads(cfg), cfg.ssm_state
+    hp = cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["w_in"],
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+    z, xbc, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * n], axis=-1)
+    xbc = _causal_conv(xbc, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype))
+    xbc = jax.nn.silu(xbc)
+    xs, B, C = jnp.split(xbc, [din, din + n], axis=-1)
+    xs = constrain(xs, "batch", None, "d_inner")
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xs.reshape(b, s, h, hp)
+    y, final = ssd_chunked(xh, dtv, A, B, C, min(cfg.ssm_chunk, s),
+                           unroll=bool(cfg.scan_unroll))
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, din).astype(x.dtype)
+    # gated RMSNorm (mamba2)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+         * p["norm_scale"].astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    # cache: last conv_width-1 pre-conv inputs + final state
+    pre = jnp.einsum("bsd,de->bse", x[:, -(cfg.conv_width - 1):], p["w_in"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    conv_tail = pre[..., din:2 * din + 2 * n]
+    return out, SSMCache(conv=conv_tail, state=final)
+
+
+def decode_mamba2(p: dict, x: jax.Array, cache: SSMCache, cfg: ArchConfig
+                  ) -> tuple[jax.Array, SSMCache]:
+    """One-token recurrent step.  x: (B,1,d)."""
+    b, _, d = x.shape
+    din, h, n = d_inner(cfg), n_ssd_heads(cfg), cfg.ssm_state
+    hp = cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["w_in"],
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+    z, xbc_new, dt = jnp.split(zxbcdt[:, 0], [din, 2 * din + 2 * n], axis=-1)
+    # conv over (cached W-1 inputs, new input)
+    hist = jnp.concatenate([cache.conv, xbc_new[:, None]], axis=1)  # (B,W,C)
+    w = p["conv_w"].astype(x.dtype)
+    xbc = jnp.einsum("bwc,wc->bc", hist, w) + p["conv_b"].astype(x.dtype)
+    xbc = jax.nn.silu(xbc)
+    xs, B, C = jnp.split(xbc, [din, din + n], axis=-1)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xs.reshape(b, h, hp).astype(jnp.float32)
+    dA = jnp.exp(dtv * A)                                   # (b,h)
+    Bx = jnp.einsum("bhp,bn->bhpn", xh * dtv[..., None], B.astype(jnp.float32))
+    state = dA[..., None, None] * cache.state + Bx
+    y = jnp.einsum("bhpn,bn->bhp", state, C.astype(jnp.float32))
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(b, din).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+         * p["norm_scale"].astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("be,ed->bd", y, p["w_out"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)[:, None]
+    new_conv = hist[:, 1:]
+    return out, SSMCache(conv=new_conv, state=state)
+
+
+def default_ssd_chunk(cfg: ArchConfig, vmem_budget: int = 16 * 2**20) -> int:
+    """Chunk length from the VMEM solver view: the intra-chunk working set
+    (q x q scores per head group + q x p x h operands) should fit the budget;
+    MXU-align to 128."""
+    h, p, n = n_ssd_heads(cfg), cfg.ssm_head_dim, cfg.ssm_state
+    q = 128
+    while True:
+        nxt = q * 2
+        ws = 4 * (nxt * nxt * h + 2 * nxt * h * p + 2 * nxt * n)
+        if ws > vmem_budget or nxt > 1024:
+            return q
+        q = nxt

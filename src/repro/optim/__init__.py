@@ -1,0 +1,2 @@
+from repro.optim import adamw  # noqa: F401
+from repro.optim.adamw import AdamWConfig, AdamWState  # noqa: F401

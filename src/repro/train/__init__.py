@@ -1,0 +1,2 @@
+from repro.train import serve_step, train_step  # noqa: F401
+from repro.train.train_step import TrainState, init_state, make_train_step  # noqa: F401

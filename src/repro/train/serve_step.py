@@ -1,0 +1,52 @@
+"""Serving steps: prefill + decode, plus a batched greedy generation loop
+(used by examples/serve.py and the serving benchmarks)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import registry
+from repro.models.common import ArchConfig
+
+
+def make_prefill(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        return registry.prefill(params, cfg, batch)
+    return prefill_step
+
+
+def make_decode(cfg: ArchConfig):
+    def decode(params, tokens, pos, cache):
+        return registry.decode_step(params, cfg, tokens, pos, cache)
+    return decode
+
+
+def greedy_generate(params, cfg: ArchConfig, prompt: jax.Array, n_new: int,
+                    cache_len: int):
+    """prompt: (B, S0) -> (B, S0+n_new).  Prefill then scan decode steps."""
+    b, s0 = prompt.shape
+    cache = registry.init_cache(cfg, b, cache_len,
+                                dtype=jnp.dtype(cfg.dtype))
+    # prefill by decoding the prompt token-by-token (keeps one code path for
+    # every family incl. ring caches; examples use short prompts)
+    def feed(carry, t):
+        cache, _ = carry
+        tok = prompt[:, t]
+        logits, cache = registry.decode_step(params, cfg, tok,
+                                             jnp.full((b,), t, jnp.int32),
+                                             cache)
+        return (cache, logits), None
+
+    (cache, logits), _ = jax.lax.scan(feed, (cache, jnp.zeros((b, cfg.vocab_size))),
+                                      jnp.arange(s0))
+
+    def gen(carry, i):
+        cache, logits = carry
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        pos = s0 + i
+        new_logits, cache = registry.decode_step(
+            params, cfg, tok, jnp.full((b,), pos, jnp.int32), cache)
+        return (cache, new_logits), tok
+
+    (_, _), toks = jax.lax.scan(gen, (cache, logits), jnp.arange(n_new))
+    return jnp.concatenate([prompt, toks.T], axis=1)

@@ -1,0 +1,79 @@
+"""The unified inner/outer/hadamard/kron operator (paper appendix)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _err(got, want):
+    return float(np.max(np.abs(np.asarray(got, np.float32)
+                               - np.asarray(want, np.float32))))
+
+
+@pytest.mark.parametrize("mode", ["ip", "op", "hp", "kp"])
+def test_modes_match_oracles(mode):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    a = jax.random.normal(k1, (12, 20), jnp.float32)
+    b = (jax.random.normal(k2, (20, 24), jnp.float32) if mode == "ip" else
+         a if mode == "hp" else jax.random.normal(k2, (8, 16), jnp.float32))
+    got = ops.ipophp(a, b, mode, interpret=True)
+    want = ref.ipophp_ref(a, b, mode)
+    assert got.shape == want.shape
+    assert _err(got, want) < 1e-3
+
+
+def test_kron_matches_numpy():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    a = jax.random.normal(k1, (5, 7), jnp.float32)
+    b = jax.random.normal(k2, (3, 4), jnp.float32)
+    got = ops.kron(a, b, interpret=True)
+    want = np.kron(np.asarray(a), np.asarray(b))
+    assert _err(got, want) < 1e-4
+
+
+def test_kron_identity_blocks():
+    """kron(I, A) is block-diagonal A — the MoA gamma-relayout property."""
+    a = jax.random.normal(jax.random.PRNGKey(2), (4, 4), jnp.float32)
+    got = np.asarray(ops.kron(jnp.eye(3, dtype=jnp.float32), a, interpret=True))
+    for i in range(3):
+        np.testing.assert_allclose(got[4 * i:4 * i + 4, 4 * i:4 * i + 4],
+                                   np.asarray(a), rtol=1e-5)
+    mask = np.kron(np.eye(3), np.ones((4, 4)))
+    np.testing.assert_allclose(got * (1 - mask), 0, atol=1e-6)
+
+
+def test_kron_mixed_product_property():
+    """(A kron B)(C kron D) == (AC) kron (BD) — exercises ip+kp together."""
+    key = jax.random.PRNGKey(3)
+    ka, kb, kc, kd = jax.random.split(key, 4)
+    A = jax.random.normal(ka, (3, 4), jnp.float32)
+    B = jax.random.normal(kb, (2, 5), jnp.float32)
+    C = jax.random.normal(kc, (4, 3), jnp.float32)
+    D = jax.random.normal(kd, (5, 2), jnp.float32)
+    lhs = ops.ipophp(ops.kron(A, B, interpret=True),
+                     ops.kron(C, D, interpret=True), "ip", interpret=True)
+    rhs = ops.kron(ops.ipophp(A, C, "ip", interpret=True),
+                   ops.ipophp(B, D, "ip", interpret=True), interpret=True)
+    assert _err(lhs, rhs) < 1e-2
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 16), st.integers(1, 16), st.integers(0, 999))
+def test_hadamard_random(m, n, seed):
+    a = jax.random.normal(jax.random.PRNGKey(seed), (m, n), jnp.float32)
+    got = ops.hadamard(a, a, interpret=True)
+    assert _err(got, a * a) < 1e-5
+
+
+def test_outer_degenerate_contraction():
+    """op == ip on rav(A) (mn,1) x rav(B)^T (1,pq): the paper's one-circuit
+    claim — verified against einsum."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(5))
+    a = jax.random.normal(k1, (6, 3), jnp.float32)
+    b = jax.random.normal(k2, (4, 5), jnp.float32)
+    got = ops.outer(a, b, interpret=True)
+    want = jnp.einsum("mn,pq->mnpq", a, b)
+    assert _err(got, want) < 1e-5

@@ -1,0 +1,84 @@
+"""Pallas kernel vs pure-jnp oracle: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.blocking import BlockChoice
+from repro.kernels import ops, ref
+
+
+def _err(got, want):
+    return float(np.max(np.abs(np.asarray(got, np.float32)
+                               - np.asarray(want, np.float32))))
+
+
+def _tol(dtype, k):
+    return 5e-5 * max(k, 1) if dtype == jnp.float32 else 2e-2 * max(k, 1) ** 0.5
+
+
+SHAPES = [(128, 128, 128), (256, 512, 384), (100, 70, 130), (8, 1024, 8),
+          (1, 1, 1), (129, 257, 127), (512, 16, 512)]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k,n", SHAPES)
+def test_moa_gemm_matches_oracle(m, k, n, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    a = jax.random.normal(k1, (m, k), dtype)
+    b = jax.random.normal(k2, (k, n), dtype)
+    got = ops.moa_gemm(a, b, interpret=True)
+    want = ref.gemm_ref(a, b)
+    assert got.shape == want.shape and got.dtype == want.dtype
+    assert _err(got, want) < _tol(dtype, k), (m, k, n, dtype)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 200), st.integers(1, 200), st.integers(1, 200),
+       st.integers(0, 2 ** 31))
+def test_moa_gemm_hypothesis_shapes(m, k, n, seed):
+    kk = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(kk)
+    a = jax.random.normal(k1, (m, k), jnp.float32)
+    b = jax.random.normal(k2, (k, n), jnp.float32)
+    got = ops.moa_gemm(a, b, interpret=True)
+    assert _err(got, ref.gemm_ref(a, b)) < _tol(jnp.float32, k)
+
+
+def test_explicit_solver_blocks():
+    bc = BlockChoice(bm=128, bk=128, bn=128, vmem_bytes=0,
+                     arithmetic_intensity=0, utilization=1)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    a = jax.random.normal(k1, (384, 256), jnp.float32)
+    b = jax.random.normal(k2, (256, 384), jnp.float32)
+    got = ops.moa_gemm(a, b, blocks=bc, interpret=True)
+    assert _err(got, ref.gemm_ref(a, b)) < 1e-3
+
+
+def test_out_dtype_override():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(2))
+    a = jax.random.normal(k1, (64, 64), jnp.bfloat16)
+    b = jax.random.normal(k2, (64, 64), jnp.bfloat16)
+    got = ops.moa_gemm(a, b, out_dtype=jnp.float32, interpret=True)
+    assert got.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("e,cap,d,f", [(4, 64, 96, 48), (1, 8, 8, 8),
+                                       (8, 100, 130, 70)])
+def test_expert_gemm_matches_oracle(e, cap, d, f):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    x = jax.random.normal(k1, (e, cap, d), jnp.float32)
+    w = jax.random.normal(k2, (e, d, f), jnp.float32)
+    got = ops.expert_gemm(x, w, interpret=True)
+    want = ref.expert_gemm_ref(x, w)
+    assert _err(got, want) < _tol(jnp.float32, d)
+
+
+def test_gemm_under_jit_and_vmap_composes():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(4))
+    a = jax.random.normal(k1, (3, 64, 32), jnp.float32)
+    b = jax.random.normal(k2, (3, 32, 48), jnp.float32)
+    got = jax.jit(jax.vmap(lambda x, y: ops.moa_gemm(x, y, interpret=True)))(a, b)
+    want = jnp.einsum("bmk,bkn->bmn", a, b)
+    assert _err(got, want) < 1e-3

@@ -1,0 +1,56 @@
+"""The static block-size solver must reproduce the paper's derivation."""
+import dataclasses
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import blocking
+from repro.core.lifting import TPU_V5E, V100
+
+
+def test_paper_v100_block_is_32():
+    """§3.4: 3 blocks of 32x32 doubles = 24 KiB <= 32 KiB L1 per SM."""
+    assert blocking.solve_blocks_square(V100, "float64", n_arrays=3) == 32
+
+
+def test_paper_v100_shared_memory_block_is_64():
+    """§3.4: with shared-memory L1 aggregation (128 KiB) the optimum doubles."""
+    shared = dataclasses.replace(
+        V100, vmem=dataclasses.replace(V100.vmem, capacity_bytes=128 * 2**10))
+    assert blocking.solve_blocks_square(shared, "float64", n_arrays=3) == 64
+
+
+def test_block_working_set_fits_budget():
+    bc = blocking.solve_blocks(4096, 4096, 4096, "bfloat16", TPU_V5E,
+                               vmem_budget_frac=0.5)
+    assert bc.vmem_bytes <= TPU_V5E.vmem.capacity_bytes * 0.5
+
+
+def test_blocks_are_mxu_aligned():
+    bc = blocking.solve_blocks(4096, 4096, 4096, "bfloat16", TPU_V5E)
+    assert bc.bm % 128 == 0 and bc.bn % 128 == 0
+    assert bc.bk % 16 == 0          # bf16 sublane packing
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from(["bfloat16", "float32"]),
+       st.sampled_from([(512, 512, 512), (4096, 1024, 2048), (128, 8192, 128)]))
+def test_solver_feasible_across_shapes(dtype, mkn):
+    m, k, n = mkn
+    bc = blocking.solve_blocks(m, k, n, dtype)
+    assert bc.bm >= 128 and bc.bn >= 128 and bc.bk >= 1
+    assert bc.arithmetic_intensity > 0
+
+
+def test_bigger_budget_never_lowers_intensity():
+    a = blocking.solve_blocks(8192, 8192, 8192, "bfloat16",
+                              vmem_budget_frac=0.25)
+    b = blocking.solve_blocks(8192, 8192, 8192, "bfloat16",
+                              vmem_budget_frac=0.5)
+    assert b.arithmetic_intensity >= a.arithmetic_intensity
+
+
+def test_grid_covers_problem():
+    bc = blocking.solve_blocks(1000, 700, 900, "float32")
+    gm, gn, gk = blocking.grid_for(1000, 700, 900, bc)
+    assert gm * bc.bm >= 1000 and gn * bc.bn >= 900 and gk * bc.bk >= 700

@@ -1,0 +1,66 @@
+"""Roofline cost model + HLO collective parsing."""
+import numpy as np
+
+from repro.core import cost
+from repro.core.lifting import TPU_V5E
+
+HLO = """
+HloModule jit_step
+
+%add { ... }
+
+ENTRY %main {
+  %p0 = bf16[16,128]{1,0} parameter(0)
+  %p1 = f32[4,4]{1,0} parameter(1)
+  %ag = bf16[256,128]{1,0} all-gather(bf16[16,128]{1,0} %p0), dimensions={0}
+  %ar = f32[4,4]{1,0} all-reduce(f32[4,4]{1,0} %p1), to_apply=%add
+  %rs = f32[1,4]{1,0} reduce-scatter(f32[4,4]{1,0} %ar), dimensions={0}
+  %cp = bf16[16,128]{1,0} collective-permute(bf16[16,128]{1,0} %p0), source_target_pairs={{0,1}}
+  %ata = f32[4,4]{1,0} all-to-all(f32[4,4]{1,0} %p1), dimensions={0}
+  %ags = (bf16[16,128]{1,0}, bf16[256,128]{1,0}) all-gather-start(bf16[16,128]{1,0} %p0), dimensions={0}
+  %agd = bf16[256,128]{1,0} all-gather-done((bf16[16,128], bf16[256,128]) %ags)
+  ROOT %t = (bf16[256,128]{1,0}) tuple(%ag)
+}
+"""
+
+
+def test_collective_parsing_counts_and_bytes():
+    st = cost.collective_bytes_from_hlo(HLO)
+    assert st.count_by_op["all-gather"] == 2          # incl. -start, not -done
+    assert st.bytes_by_op["all-gather"] == 2 * 16 * 128 * 2
+    assert st.bytes_by_op["all-reduce"] == 4 * 4 * 4
+    assert st.bytes_by_op["reduce-scatter"] == 4 * 4 * 4
+    assert st.bytes_by_op["collective-permute"] == 16 * 128 * 2
+    assert st.bytes_by_op["all-to-all"] == 4 * 4 * 4
+
+
+def test_shape_bytes_handles_tuples_and_scalars():
+    assert cost._shape_bytes("f32[]") == 4
+    assert cost._shape_bytes("(bf16[2,2]{1,0}, s32[3]{0})") == 8 + 12
+    assert cost._shape_bytes("token[]") == 0
+
+
+def test_roofline_terms_and_dominance():
+    st = cost.CollectiveStats(bytes_by_op={"all-reduce": 10 * 2**20})
+    rl = cost.from_quantities("x", n_chips=256, per_device_flops=1e12,
+                              per_device_hbm_bytes=1e9, collective_stats=st,
+                              hardware=TPU_V5E, model_flops=2e14)
+    np.testing.assert_allclose(rl.compute_s, 1e12 / TPU_V5E.peak_flops)
+    np.testing.assert_allclose(rl.memory_s, 1e9 / TPU_V5E.hbm.bandwidth_Bps)
+    assert rl.dominant == "compute"
+    assert 0 < rl.useful_flops_ratio < 1
+    assert rl.step_time_s == max(rl.compute_s, rl.memory_s, rl.collective_s)
+
+
+def test_wire_bytes_ring_multipliers():
+    st = cost.CollectiveStats(bytes_by_op={"all-reduce": 1000,
+                                           "all-gather": 1000,
+                                           "collective-permute": 1000})
+    wb = cost.wire_bytes(st, n_chips=4)
+    np.testing.assert_allclose(wb, 1000 * 2 * 0.75 + 1000 * 0.75 + 1000)
+
+
+def test_model_flops():
+    assert cost.model_flops_lm(1e9, 1e6) == 6e15
+    assert cost.model_flops_lm(1e9, 1e6, active_params=1e8) == 6e14
+    assert cost.model_flops_lm(1e9, 1e6, training=False) == 2e15

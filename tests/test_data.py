@@ -1,0 +1,54 @@
+"""Data pipeline: determinism, shard consistency, learnability, resume."""
+import numpy as np
+
+from repro.data import PipelineConfig, SyntheticLM
+
+
+def test_deterministic_across_instances():
+    a = SyntheticLM(PipelineConfig(1000, 16, 8, seed=3))
+    b = SyntheticLM(PipelineConfig(1000, 16, 8, seed=3))
+    for step in [0, 1, 17]:
+        np.testing.assert_array_equal(a.global_batch(step)["tokens"],
+                                      b.global_batch(step)["tokens"])
+
+
+def test_different_steps_differ():
+    p = SyntheticLM(PipelineConfig(1000, 16, 8))
+    assert not np.array_equal(p.global_batch(0)["tokens"],
+                              p.global_batch(1)["tokens"])
+
+
+def test_host_shards_tile_the_global_batch():
+    """Elastic invariant: any sharding reproduces the same global batch."""
+    p = SyntheticLM(PipelineConfig(997, 12, 8, seed=1))
+    g = p.global_batch(5)["tokens"]
+    for n_shards in [1, 2, 4, 8]:
+        parts = [p.host_shard(5, i, n_shards)["tokens"] for i in range(n_shards)]
+        np.testing.assert_array_equal(np.concatenate(parts, 0), g)
+
+
+def test_targets_are_shifted_tokens():
+    p = SyntheticLM(PipelineConfig(50, 10, 4, noise=0.0))
+    b = p.global_batch(0)
+    # affine recurrence: next token = (31*t + off) % 50 -> targets follow
+    t, y = b["tokens"], b["targets"]
+    np.testing.assert_array_equal(t[:, 1:], y[:, :-1])
+
+
+def test_learnable_structure():
+    """Without noise the stream is a deterministic affine map — a model that
+    learned it would reach ~0 loss; verify conditional entropy is low by
+    checking the recurrence holds."""
+    p = SyntheticLM(PipelineConfig(101, 32, 4, noise=0.0))
+    b = p.global_batch(0)
+    t = b["tokens"]
+    # token[t+1] - 31*token[t] must be constant per row (the offset)
+    diff = (t[:, 1:] - 31 * t[:, :-1]) % 101
+    assert (diff == diff[:, :1]).all()
+
+
+def test_vocab_bounds():
+    p = SyntheticLM(PipelineConfig(64, 16, 8))
+    b = p.global_batch(0)
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < 64
+    assert b["tokens"].dtype == np.int32

@@ -1,0 +1,63 @@
+"""Energy model must reproduce the paper's empirical relationships."""
+import numpy as np
+
+from repro.core import energy
+from repro.core.blocking import solve_blocks
+from repro.core.lifting import TPU_V5E
+
+
+def test_energy_tracks_time_across_block_sizes():
+    """Figs 6-8: the energy-optimal block size is (near-)time-optimal and
+    vice versa (ties on time are broken by the lower-traffic block)."""
+    res = dict(energy.energy_vs_blocksize(8192, [64, 128, 256, 512, 1024]))
+    t_min = min(r.time_s for r in res.values())
+    e_min = min(r.energy_J for r in res.values())
+    best_e = min(res, key=lambda b: res[b].energy_J)
+    best_t = min(res, key=lambda b: res[b].time_s)
+    assert res[best_e].time_s <= 1.05 * t_min
+    assert res[best_t].energy_J <= 1.10 * e_min
+    # and both orderings agree on the bad blocks: smallest block is worst
+    assert res[64].time_s == max(r.time_s for r in res.values())
+    assert res[64].energy_J == max(r.energy_J for r in res.values())
+
+
+def test_power_flat_while_time_varies():
+    """§3.6.3: power max/min ~1.1x while time varies much more."""
+    res = [r for _, r in energy.energy_vs_blocksize(8192, [64, 128, 256, 512, 1024])]
+    p = [r.power_W for r in res]
+    t = [r.time_s for r in res]
+    power_ratio = max(p) / min(p)
+    time_ratio = max(t) / min(t)
+    assert power_ratio < 1.6
+    assert time_ratio > 2.0
+    assert time_ratio > 2 * power_ratio
+
+
+def test_energy_linear_in_matrix_size_when_bandwidth_bound():
+    """Abstract claim: energy quadratic in N (linear in elements) in the
+    bandwidth-bound regime — E(2N)/E(N) ~ 4 with small blocks."""
+    b = 128       # small block => memory bound
+    blocks = lambda n: energy.energy_vs_blocksize(n, [b])[0][1]
+    e1, e2 = blocks(4096), blocks(8192)
+    assert e1.bound == "memory" and e2.bound == "memory"
+    ratio = e2.energy_J / e1.energy_J
+    assert 3.0 < ratio < 9.0      # between quadratic(4) and cubic(8) + static
+
+
+def test_blocked_traffic_beats_unblocked():
+    n = 4096
+    bc = solve_blocks(n, n, n, "bfloat16", TPU_V5E)
+    hbm_blocked, _ = energy.gemm_traffic(n, n, n, bc)
+    hbm_naive = energy.gemm_unblocked_traffic(n, n, n)
+    assert hbm_blocked < hbm_naive / 10
+
+
+def test_solver_block_is_energy_optimal_among_squares():
+    """The paper's central claim, on the TPU table: the solver-chosen block
+    beats smaller/larger square blocks on modeled energy."""
+    n = 16384
+    candidates = [64, 128, 256, 512, 1024, 2048]
+    res = dict(energy.energy_vs_blocksize(n, candidates))
+    bc = solve_blocks(n, n, n, "bfloat16", TPU_V5E)
+    solver_e = energy.gemm_energy(n, n, n, bc).energy_J
+    assert solver_e <= min(r.energy_J for r in res.values()) * 1.05

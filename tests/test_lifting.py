@@ -1,0 +1,57 @@
+"""Dimension lifting: factorization invariants + emitters."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lifting
+from repro.core.lifting import TPU_V5E, TPU_V5E_2POD, lift, lift_shape
+
+
+def test_lift_factors_multiply_to_size():
+    ax = lift("i", 4096, [("pod", 2), ("data", 16)])
+    assert ax.factors == (("pod", 2), ("data", 16), (None, 128))
+
+
+def test_lift_rejects_non_divisor():
+    with pytest.raises(ValueError):
+        lift("i", 10, [("data", 3)])
+
+
+def test_partition_spec_from_lifting():
+    ls = lifting.batch_lifting(TPU_V5E_2POD, 256, ("seq", 4096), ("d", 512))
+    spec = ls.partition_spec()
+    assert spec[0] == ("pod", "data")
+    assert ls.local_shape() == (8, 4096, 512)
+
+
+def test_model_lifting_spec():
+    ls = lifting.model_lifting(TPU_V5E, "d_ff", 33792, ("d_model", 12288))
+    assert ls.partition_spec()[0] == "model"
+    assert ls.local_shape() == (33792 // 16, 12288)
+
+
+def test_grid_emission():
+    ls = lift_shape(TPU_V5E, [
+        ("m", 4096, [("grid", 8)]),
+        ("n", 4096, [("grid", 16)]),
+    ])
+    assert ls.grid() == (8, 16)
+    assert ls.block_shape() == (512, 256)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 8).map(lambda k: 2 ** k))
+def test_lift_roundtrip_any_pow2(size):
+    ax = lift("x", size * 16, [(None, 16)])
+    assert ax.size == size * 16
+    total = 1
+    for _, e in ax.factors:
+        total *= e
+    assert total == ax.size
+
+
+def test_hardware_table_matches_task_constants():
+    assert TPU_V5E.peak_flops == 197e12
+    assert TPU_V5E.hbm.bandwidth_Bps == 819e9
+    assert TPU_V5E.ici_Bps == 50e9
+    assert TPU_V5E.n_chips == 256
+    assert TPU_V5E_2POD.n_chips == 512

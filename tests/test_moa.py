@@ -1,0 +1,182 @@
+"""Property tests for the MoA algebra core (shapes, psi, gamma, ONF)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import moa, onf
+
+dims = st.integers(1, 6)
+small_shapes = st.lists(st.integers(1, 5), min_size=1, max_size=4).map(tuple)
+
+
+# ---------------------------------------------------------------------------
+# gamma family
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(small_shapes, st.data())
+def test_gamma_row_bijection(shape, data):
+    n = moa.pi(shape)
+    off = data.draw(st.integers(0, n - 1))
+    idx = moa.gamma_row_inverse(off, shape)
+    assert moa.gamma_row(idx, shape) == off
+
+
+@settings(max_examples=50, deadline=None)
+@given(small_shapes)
+def test_gamma_row_enumerates_all_offsets(shape):
+    offsets = {moa.gamma_row(tuple(i), shape) for i in
+               moa.iota(shape).reshape(-1, len(shape))}
+    assert offsets == set(range(moa.pi(shape)))
+
+
+def test_gamma_row_is_paper_formula():
+    # eq. (3): gamma(<i,j>; <m,p>) = i*p + j
+    m, p = 7, 11
+    for i in range(m):
+        for j in range(p):
+            assert moa.gamma_row((i, j), (m, p)) == i * p + j
+
+
+def test_gamma_col_matches_fortran_order():
+    a = np.arange(24).reshape(2, 3, 4)
+    flat_f = a.flatten(order="F")
+    for idx in moa.iota(a.shape).reshape(-1, 3):
+        assert flat_f[moa.gamma_col(tuple(idx), a.shape)] == a[tuple(idx)]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 4), st.integers(1, 3), st.integers(1, 3))
+def test_gamma_blocked_bijection(mo, no, bm, bn):
+    shape = (mo * bm, no * bn)
+    block = (bm, bn)
+    offs = {moa.gamma_blocked(tuple(i), shape, block)
+            for i in moa.iota(shape).reshape(-1, 2)}
+    assert offs == set(range(moa.pi(shape)))
+
+
+# ---------------------------------------------------------------------------
+# psi
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(small_shapes, st.integers(0, 100))
+def test_psi_identity(shape, seed):
+    """(iota(rho x)) psi x == x — the fundamental MoA identity."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(shape)
+    idxs = moa.iota(shape).reshape(-1, len(shape))
+    rebuilt = np.array([moa.psi(tuple(i), x) for i in idxs]).reshape(shape)
+    np.testing.assert_array_equal(rebuilt, x)
+
+
+@settings(max_examples=30, deadline=None)
+@given(small_shapes, st.integers(0, 100))
+def test_psi_distributes_over_scalar_ops(shape, seed):
+    rng = np.random.default_rng(seed)
+    a, b = rng.standard_normal(shape), rng.standard_normal(shape)
+    for idx in moa.iota(shape).reshape(-1, len(shape))[:10]:
+        i = tuple(idx)
+        assert moa.psi(i, a * b) == moa.psi(i, a) * moa.psi(i, b)
+
+
+@settings(max_examples=30, deadline=None)
+@given(small_shapes, st.integers(0, 100))
+def test_onf_equals_dnf_indexing(shape, seed):
+    """rav(x)[gamma(i)] == x[i] — DNF/ONF agreement."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(shape)
+    for idx in moa.iota(shape).reshape(-1, len(shape))[:10]:
+        assert moa.psi_flat(tuple(idx), x) == moa.psi(tuple(idx), x)
+
+
+# ---------------------------------------------------------------------------
+# GEMM normal forms
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 6), st.integers(1, 6), st.integers(0, 99))
+def test_onf_gemm_equals_linear_algebra(m, n, p, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, n))
+    b = rng.standard_normal((n, p))
+    c = moa.onf_gemm(moa.rav(a), moa.rav(b), m, n, p)
+    np.testing.assert_allclose(c.reshape(m, p), a @ b, rtol=1e-12)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 5), st.integers(1, 5), st.integers(1, 5), st.integers(0, 99))
+def test_classical_equals_moa(m, n, p, seed):
+    rng = np.random.default_rng(seed)
+    a, b = rng.standard_normal((m, n)), rng.standard_normal((n, p))
+    np.testing.assert_allclose(
+        moa.onf_gemm(moa.rav(a), moa.rav(b), m, n, p),
+        moa.classical_gemm(moa.rav(a), moa.rav(b), m, n, p), rtol=1e-12)
+
+
+def test_moa_inner_loop_is_contiguous_and_classical_is_not():
+    m, n, p = 64, 64, 64
+    assert moa.moa_access_trace(m, n, p).contiguous
+    assert not moa.classical_access_trace(m, n, p).contiguous
+    # and the modeled line traffic is strictly lower for MoA
+    assert (moa.cacheline_traffic(moa.moa_access_trace(m, n, p), m, n, p)
+            < moa.cacheline_traffic(moa.classical_access_trace(m, n, p), m, n, p))
+
+
+def test_moa_unified_ops_oracles():
+    rng = np.random.default_rng(0)
+    a, b = rng.standard_normal((3, 4)), rng.standard_normal((2, 5))
+    np.testing.assert_allclose(moa.kron(a, b), np.kron(a, b), rtol=1e-12)
+    h = moa.hadamard(a, a)
+    np.testing.assert_allclose(h, a * a)
+    op = moa.outer_product(a, b)
+    assert op.shape == (3, 4, 2, 5)
+    np.testing.assert_allclose(op, np.einsum("mn,pq->mnpq", a, b))
+    ip = moa.inner_product(a, rng.standard_normal((4, 6)))
+    assert ip.shape == (3, 6)
+
+
+# ---------------------------------------------------------------------------
+# ONF loop nests + dimension lifting (paper figs 3-5)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from([(2, 4, 8), (4, 8, 16), (6, 6, 6), (2, 2, 2)]),
+       st.integers(0, 99))
+def test_lifted_onf_preserves_semantics(mnp, seed):
+    m, n, p = mnp
+    rng = np.random.default_rng(seed)
+    a, b = rng.standard_normal((m, n)), rng.standard_normal((n, p))
+    want = (a @ b).ravel()
+    base = onf.gemm_onf(m, n, p)
+    np.testing.assert_allclose(base.execute(np.zeros(m * p), a.ravel(), b.ravel()),
+                               want, rtol=1e-12)
+    rows = onf.gemm_lifted_rows(m, n, p, np_procs=2)
+    np.testing.assert_allclose(rows.execute(np.zeros(m * p), a.ravel(), b.ravel()),
+                               want, rtol=1e-12)
+    cols = onf.gemm_lifted_cols(m, n, p, rsize=2)
+    np.testing.assert_allclose(cols.execute(np.zeros(m * p), a.ravel(), b.ravel()),
+                               want, rtol=1e-12)
+    full = onf.gemm_fully_lifted(m, n, p, procs=2, bk=max(n // 2, 1),
+                                 bn=max(p // 2, 1))
+    np.testing.assert_allclose(full.execute(np.zeros(m * p), a.ravel(), b.ravel()),
+                               want, rtol=1e-12)
+
+
+def test_lifting_raises_on_non_divisor():
+    with pytest.raises(ValueError):
+        onf.lift_loop(onf.gemm_onf(3, 4, 5), "i", 2, "proc")
+
+
+def test_innermost_strides_match_paper():
+    o = onf.gemm_onf(4, 5, 6)
+    s = o.innermost_strides()
+    assert s == {"A": 0, "B": 1, "C": 1}          # scalar x contiguous rows
+    c = onf.gemm_classical_onf(4, 5, 6)
+    sc = c.innermost_strides()
+    assert sc["B"] == 6 and sc["A"] == 1 and sc["C"] == 0   # strided B
+
+
+def test_render_c_smoke():
+    txt = onf.gemm_fully_lifted(8, 8, 8, procs=2, bk=4, bn=4).render_c()
+    assert "lifted: proc" in txt and "lifted: block" in txt and "+=" in txt

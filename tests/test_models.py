@@ -1,0 +1,165 @@
+"""Per-architecture smoke + decode-cache consistency tests (reduced configs,
+one forward/train step on CPU, asserting shapes and finiteness — full configs
+are exercised only via the dry-run)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import registry
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, b=2, s=32, seed=1):
+    kt = jax.random.PRNGKey(seed)
+    batch = {"tokens": jax.random.randint(kt, (b, s), 0, cfg.vocab_size),
+             "targets": jax.random.randint(kt, (b, s), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["tokens"] = batch["tokens"][:, :s - cfg.num_patches]
+        batch["targets"] = batch["targets"][:, :s - cfg.num_patches]
+        batch["patches"] = jax.random.normal(
+            kt, (b, cfg.num_patches, cfg.d_model), jnp.float32)
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            kt, (b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_loss_finite(arch):
+    cfg = get_config(arch, reduced=True)
+    params, axes = registry.init(cfg, KEY)
+    assert jax.tree.structure(params) == jax.tree.structure(
+        axes, is_leaf=lambda x: isinstance(x, tuple))
+    batch = make_batch(cfg)
+    loss, metrics = jax.jit(lambda p, b: registry.loss(p, cfg, b))(params, batch)
+    assert np.isfinite(float(loss))
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_grads_finite(arch):
+    cfg = get_config(arch, reduced=True)
+    params, _ = registry.init(cfg, KEY)
+    batch = make_batch(cfg)
+    g = jax.jit(jax.grad(lambda p: registry.loss(p, cfg, batch)[0]))(params)
+    for leaf in jax.tree.leaves(g):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all(), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode_step(arch):
+    cfg = get_config(arch, reduced=True)
+    params, _ = registry.init(cfg, KEY)
+    b, cache_len = 2, 32
+    cache = registry.init_cache(cfg, b, cache_len, dtype=jnp.float32)
+    logits, new_cache = jax.jit(
+        lambda p, t, pos, c: registry.decode_step(p, cfg, t, pos, c))(
+        params, jnp.zeros((b,), jnp.int32), jnp.zeros((b,), jnp.int32), cache)
+    assert logits.shape == (b, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert jax.tree.structure(new_cache) == jax.tree.structure(cache)
+
+
+# ---------------------------------------------------------------------------
+# decode-cache consistency: token-by-token decode == full forward
+# ---------------------------------------------------------------------------
+
+CONSISTENCY_ARCHS = ["command-r-plus-104b", "minicpm3-4b", "gemma-2b",
+                     "stablelm-1.6b", "mamba2-780m", "recurrentgemma-9b",
+                     "whisper-base"]
+
+
+@pytest.mark.parametrize("arch", CONSISTENCY_ARCHS)
+def test_decode_matches_forward(arch):
+    """Greedy caches must reproduce teacher-forced logits — validates every
+    cache type (KV, latent MLA, SSM state, RG-LRU state, ring buffers,
+    enc-dec cross attention)."""
+    cfg = get_config(arch, reduced=True).with_(remat=False)
+    params, _ = registry.init(cfg, KEY)
+    b, s = 2, 16
+    batch = make_batch(cfg, b, s)
+    toks = batch["tokens"]
+
+    from repro.models import encdec, transformer
+    from repro.models.layers import logits_from_hidden
+    if cfg.family == "audio":
+        enc = encdec.encode(params, cfg, batch["frames"])
+        hidden, _ = encdec.decoder_forward(params, cfg, toks, enc)
+        full_logits = logits_from_hidden(params, hidden, cfg)
+        cache = encdec.init_encdec_cache(cfg, b, s, dtype=jnp.float32)
+        cache = cache._replace(cross_kv=jax.vmap(
+            lambda lp: encdec._cross_kv(lp, enc, cfg))(
+            params["decoder"]["cross_attn"]))
+        step = jax.jit(lambda t, pos, c: encdec.encdec_decode_step(
+            params, cfg, t, pos, c))
+    else:
+        hidden, _, _ = transformer.forward(params, cfg, toks)
+        full_logits = logits_from_hidden(params, hidden, cfg)
+        cache = registry.init_cache(cfg, b, s, dtype=jnp.float32)
+        step = jax.jit(lambda t, pos, c: registry.decode_step(
+            params, cfg, t, pos, c))
+
+    errs = []
+    for t in range(s):
+        logits, cache = step(toks[:, t], jnp.full((b,), t, jnp.int32), cache)
+        errs.append(float(jnp.max(jnp.abs(
+            logits - full_logits[:, t, :]))))
+    assert max(errs) < 2e-2, (arch, errs)
+
+
+def test_vlm_prefix_attention_is_bidirectional():
+    cfg = get_config("paligemma-3b", reduced=True).with_(remat=False)
+    params, _ = registry.init(cfg, KEY)
+    from repro.models import transformer
+    b, s = 1, 24
+    batch = make_batch(cfg, b, s)
+    h1, _, _ = transformer.forward(params, cfg, batch["tokens"],
+                                   patches=batch["patches"])
+    # permuting patch 0/1 must change position-0 patch outputs (bidir prefix)
+    patches2 = batch["patches"].at[:, [0, 1]].set(batch["patches"][:, [1, 0]])
+    h2, _, _ = transformer.forward(params, cfg, batch["tokens"], patches=patches2)
+    assert float(jnp.max(jnp.abs(h1[:, 0] - h2[:, 0]))) > 1e-6
+
+
+def test_causality_dense():
+    """Future-token perturbation cannot change past logits."""
+    cfg = get_config("stablelm-1.6b", reduced=True).with_(remat=False)
+    params, _ = registry.init(cfg, KEY)
+    from repro.models import transformer
+    from repro.models.layers import logits_from_hidden
+    toks = jax.random.randint(jax.random.PRNGKey(7), (1, 12), 0, cfg.vocab_size)
+    h1, _, _ = transformer.forward(params, cfg, toks)
+    toks2 = toks.at[0, -1].set((toks[0, -1] + 1) % cfg.vocab_size)
+    h2, _, _ = transformer.forward(params, cfg, toks2)
+    np.testing.assert_allclose(np.asarray(h1[:, :-1], np.float32),
+                               np.asarray(h2[:, :-1], np.float32), atol=1e-5)
+
+
+def test_ssm_chunked_matches_tiny_chunks():
+    """SSD chunk size must not change semantics (chunking = lifting)."""
+    cfg = get_config("mamba2-780m", reduced=True).with_(remat=False)
+    params, _ = registry.init(cfg, KEY)
+    from repro.models import transformer
+    toks = jax.random.randint(jax.random.PRNGKey(9), (2, 16), 0, cfg.vocab_size)
+    h1, _, _ = transformer.forward(params, cfg.with_(ssm_chunk=4), toks)
+    h2, _, _ = transformer.forward(params, cfg.with_(ssm_chunk=16), toks)
+    np.testing.assert_allclose(np.asarray(h1, np.float32),
+                               np.asarray(h2, np.float32), atol=2e-3)
+
+
+def test_param_counts_match_analytic():
+    """Analytic param_count (used for MODEL_FLOPS) vs real init, per arch."""
+    import numpy as np
+    for arch in ["gemma-2b", "stablelm-1.6b"]:
+        cfg = get_config(arch)
+        total, _ = cfg.param_count()
+        # reduced check at full scale is too big to init; verify the analytic
+        # formula on the reduced config against its own init instead
+        r = get_config(arch, reduced=True)
+        params, _ = registry.init(r, KEY)
+        got = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+        want, _ = r.param_count()
+        assert abs(got - want) / got < 0.15, (arch, got, want)
