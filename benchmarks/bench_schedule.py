@@ -1,0 +1,76 @@
+"""Derived-schedule kernels vs the legacy hand-written ones vs jnp.dot.
+
+Seeds the perf trajectory for the Schedule subsystem: wall-clock on this host
+(interpret-mode Pallas on CPU — the correctness path; TPU is the perf target)
+plus the modeled TPU time/energy from ``core.energy`` for the block choice the
+schedule cache derived.  Also writes ``BENCH_schedule.json`` at the repo root
+so later PRs can diff the trajectory.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.core import schedule as sched
+from repro.core.energy import gemm_energy
+from repro.core.hardware import get_entry
+from repro.kernels import ops
+
+SHAPES = [(128, 128, 128), (256, 256, 256), (100, 70, 130)]
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
+                         "BENCH_schedule.json")
+
+
+def run():
+    rows, records = [], []
+    entry = get_entry("tpu_v5e")
+    for m, k, n in SHAPES:
+        k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+        a = jax.random.normal(k1, (m, k), jnp.float32)
+        b = jax.random.normal(k2, (k, n), jnp.float32)
+        tag = f"schedule/gemm_{m}x{k}x{n}"
+        us_derived = time_fn(lambda: ops.moa_gemm(a, b, interpret=True),
+                             warmup=1, iters=3)
+        us_legacy = time_fn(lambda: ops.moa_gemm(a, b, interpret=True,
+                                                 legacy=True),
+                            warmup=1, iters=3)
+        us_xla = time_fn(jax.jit(lambda x, y: jnp.dot(x, y)), a, b)
+
+        bundle = sched.get_schedule("gemm", (m, k, n), "float32", entry)
+        rep = gemm_energy(m, k, n, bundle.blocks, "float32",
+                          hardware=entry.shape)
+        derived = (f"blocks={bundle.blocks.as_tuple()} "
+                   f"modeled_t={rep.time_s:.3e}s E={rep.energy_J:.3e}J")
+        rows.append((f"{tag}/derived", us_derived, derived))
+        rows.append((f"{tag}/legacy", us_legacy, "hand-written cross-check"))
+        rows.append((f"{tag}/jnp_dot", us_xla, "XLA oracle"))
+        records.append({
+            "shape": [m, k, n],
+            "us_derived_interpret": us_derived,
+            "us_legacy_interpret": us_legacy,
+            "us_jnp_dot": us_xla,
+            "blocks": list(bundle.blocks.as_tuple()),
+            "grid": list(bundle.schedule.grid_extents),
+            "modeled_time_s": rep.time_s,
+            "modeled_energy_J": rep.energy_J,
+            "modeled_power_W": rep.power_W,
+            "bound": rep.bound,
+        })
+    stats = sched.schedule_cache_stats()
+    payload = {"hardware": entry.name, "entries": records,
+               "schedule_cache": stats}
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    rows.append(("schedule/cache",
+                 "-", f"hits={stats['hits']} misses={stats['misses']} "
+                      f"solves={stats['solves']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

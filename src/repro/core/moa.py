@@ -278,10 +278,9 @@ def cacheline_traffic(trace: AccessTrace, m: int, n: int, p: int,
     loops over a full GEMM, for a line of ``line_elems`` elements.  This is
     the quantity the paper's contiguity argument minimizes."""
     def lines(total_iters: int, stride: int) -> int:
-        if stride == 0:
+        if stride == 0:                 # operand held in a register all loop
             return 0
-        step = min(abs(stride), line_elems)
-        return total_iters * step // line_elems if stride else 0
+        return total_iters * min(abs(stride), line_elems) // line_elems
     inner = m * n * p
     return (lines(inner, trace.a_stride)
             + lines(inner, trace.b_stride)

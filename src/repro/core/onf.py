@@ -194,3 +194,52 @@ def gemm_fully_lifted(m: int, n: int, p: int, *, procs: int, bk: int,
     o = lift_loop(o, "k", max(n // bk, 1), "block")
     o = lift_loop(o, "j", max(p // bn, 1), "vector")
     return o
+
+
+def expert_gemm_onf(e: int, cap: int, d: int, f: int) -> Onf:
+    """Capacity-padded MoE expert GEMM as an ONF:
+
+        C[(ee*cap + i)*f + j] += X[(ee*cap + i)*d + k] * W[(ee*d + k)*f + j]
+
+    The expert axis ``ee`` batches ``e`` independent MoA GEMMs over flat
+    row-major (E, cap, d) / (E, d, f) / (E, cap, f) buffers."""
+    return Onf(
+        name="expert_gemm",
+        loops=(Loop("e", e), Loop("i", cap), Loop("k", d), Loop("j", f)),
+        out=Access("C", {"e": cap * f, "i": f, "j": 1}),
+        ins=(Access("X", {"e": cap * d, "i": d, "k": 1}),
+             Access("W", {"e": d * f, "k": f, "j": 1})),
+        reduce_indices=frozenset({"k"}),
+    )
+
+
+def expert_gemm_fully_lifted(e: int, cap: int, d: int, f: int, *, bm: int,
+                             bk: int, bn: int) -> Onf:
+    """The expert GEMM schedule is ONE MORE dimension lift of fig 2: the
+    expert axis lifts fully onto a processor resource (each grid cell an
+    independent MoA GEMM), then rows/sigma-blocks/register-groups as before."""
+    o = expert_gemm_onf(e, cap, d, f)
+    o = lift_loop(o, "e", e, "proc")
+    o = lift_loop(o, "i", max(cap // bm, 1), "proc")
+    o = lift_loop(o, "k", max(d // bk, 1), "block")
+    o = lift_loop(o, "j", max(f // bn, 1), "vector")
+    return o
+
+
+def hadamard_onf(m: int, n: int) -> Onf:
+    """Elementwise product — the contraction-degenerate member of the unified
+    ipophp circuit: same nest shape, empty reduce set."""
+    return Onf(
+        name="hadamard",
+        loops=(Loop("i", m), Loop("j", n)),
+        out=Access("C", {"i": n, "j": 1}),
+        ins=(Access("A", {"i": n, "j": 1}), Access("B", {"i": n, "j": 1})),
+    )
+
+
+def hadamard_lifted(m: int, n: int, *, bm: int, bn: int) -> Onf:
+    """Blocked Hadamard: both axes lifted, no sigma loop."""
+    o = hadamard_onf(m, n)
+    o = lift_loop(o, "i", max(m // bm, 1), "proc")
+    o = lift_loop(o, "j", max(n // bn, 1), "vector")
+    return o

@@ -1,0 +1,355 @@
+"""Derive Pallas schedules from lifted ONF loop nests.
+
+This is the paper's missing executable link: "code was derived from the MoA
+expression's normal form" — here literally.  ``derive_schedule`` consumes a
+*lifted* ``Onf`` (the symbolic artifact of ``lift_loop``/``gemm_fully_lifted``)
+plus a ``HardwareShape`` and computes everything a ``pl.pallas_call`` needs:
+
+* grid extents — the resource-tagged loops, parallel resources first,
+  sigma-block (reduction) loops last;
+* per-operand block shapes and index maps — recovered from the affine
+  ``Access`` coefficients (each operand must be a dense row-major view of its
+  loop axes, which the derivation *verifies*, it does not assume);
+* ``dimension_semantics`` — "proc"/"vector"/"grid"/"expert" resources are
+  parallel, "block" (the sigma loop) is arbitrary;
+* the f32 scratch accumulator implied by a lifted reduce axis.
+
+``kernels/emit.py`` turns a ``Schedule`` into an executable kernel.  This
+module is pure Python + dataclasses (no jax import), so deriving schedules
+never touches device state, and a process-wide LRU cache keyed on
+``(op, shapes, dtype, hardware)`` makes repeated derivation (and the brute
+force ``solve_blocks`` search inside it) free on hot serving/training paths.
+"""
+from __future__ import annotations
+
+import string
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core import onf as onf_mod
+from repro.core.blocking import BlockChoice, solve_blocks, _dtype_size
+from repro.core.lifting import HardwareShape
+from repro.core.moa import pi
+
+#: resources whose grid loops are independent ("parallel" to Mosaic); the
+#: sigma block loop ("block") carries the accumulator and stays "arbitrary".
+PARALLEL_RESOURCES = frozenset({"proc", "vector", "grid", "expert"})
+
+
+def _base(index: str) -> str:
+    """Logical axis behind a lifted loop index: i_o / i_i -> i."""
+    return index[:-2] if index.endswith(("_o", "_i")) else index
+
+
+@dataclass(frozen=True)
+class GridAxis:
+    index: str           # lifted loop index, e.g. "i_o"
+    base: str            # logical axis it partitions, e.g. "i"
+    extent: int
+    semantics: str       # "parallel" | "arbitrary"
+
+
+@dataclass(frozen=True)
+class OperandSpec:
+    """One operand's BlockSpec, symbolically: which logical axis each array
+    dimension walks, its full (padded) extent, the VMEM-resident block extent,
+    and which grid position drives the block index (None -> pinned at 0)."""
+    array: str
+    axes: tuple[str, ...]
+    shape: tuple[int, ...]
+    block: tuple[int, ...]
+    grid_dims: tuple[Optional[int], ...]
+
+
+@dataclass(frozen=True)
+class Schedule:
+    """Everything ``pl.pallas_call`` needs, derived — not hand-written."""
+    name: str
+    grid: tuple[GridAxis, ...]
+    ins: tuple[OperandSpec, ...]
+    out: OperandSpec
+    contracted: tuple[str, ...]          # logical axes summed inside a block
+    reduce_grid_dim: Optional[int]       # grid axis accumulated across steps
+
+    @property
+    def grid_extents(self) -> tuple[int, ...]:
+        return tuple(g.extent for g in self.grid)
+
+    @property
+    def dimension_semantics(self) -> tuple[str, ...]:
+        return tuple(g.semantics for g in self.grid)
+
+    @property
+    def needs_scratch(self) -> bool:
+        return self.reduce_grid_dim is not None
+
+    def einsum_plan(self) -> tuple[str, tuple[tuple[int, ...], ...]]:
+        """The in-block computation as an einsum over non-unit block axes.
+
+        Returns ``(spec, kept_dims_per_input)``: each input ref is reshaped to
+        its kept (block extent > 1) dims, contracted per ``spec``, and the
+        result reshaped back to the output block.  Unit axes (e.g. the lifted
+        expert axis, block extent 1) drop out of the contraction — summing a
+        one-element axis is the identity — which keeps the emitted body
+        bit-identical to a hand-written 2-D ``jnp.dot``.
+        """
+        letters: dict[str, str] = {}
+        pool = iter(string.ascii_lowercase)
+        for spec_ in (self.out,) + self.ins:
+            for ax in spec_.axes:
+                if ax not in letters:
+                    letters[ax] = next(pool)
+        in_specs, in_keep = [], []
+        for opn in self.ins:
+            keep = tuple(i for i, b in enumerate(opn.block) if b > 1)
+            in_keep.append(keep)
+            in_specs.append("".join(letters[opn.axes[i]] for i in keep))
+        out_spec = "".join(letters[self.out.axes[i]]
+                           for i, b in enumerate(self.out.block) if b > 1)
+        return ",".join(in_specs) + "->" + out_spec, tuple(in_keep)
+
+    def vmem_bytes(self, dtype, buffering: int = 2, acc_bytes: int = 4) -> int:
+        """Modeled resident working set: double-buffered input blocks plus
+        the output block and (if reducing) the f32 accumulator."""
+        esize = _dtype_size(dtype)
+        ws = sum(pi(opn.block) for opn in self.ins) * esize * buffering
+        ws += pi(self.out.block) * esize
+        if self.needs_scratch:
+            ws += pi(self.out.block) * acc_bytes
+        return ws
+
+
+def derive_schedule(o: "onf_mod.Onf", hardware: Optional[HardwareShape] = None,
+                    dtype="float32") -> Schedule:
+    """Derive the full Pallas schedule from a lifted ONF.
+
+    Raises ``ValueError`` if the nest is not lifted, if an access is not a
+    dense row-major view of its loop axes, or if the derived blocks exceed
+    the hardware's VMEM capacity (when ``hardware`` is given).
+    """
+    grid_loops = [l for l in o.loops if l.resource is not None]
+    inner_loops = [l for l in o.loops if l.resource is None]
+    if not grid_loops:
+        raise ValueError(
+            f"Onf {o.name!r} has no resource-tagged loops — lift it first "
+            "(lift_loop / gemm_fully_lifted)")
+    reduce_bases = {_base(i) for i in o.reduce_indices}
+
+    # logical extents and in-block (inner) extents per base axis
+    full_extent: dict[str, int] = {}
+    inner_extent: dict[str, int] = {}
+    for l in o.loops:
+        b = _base(l.index)
+        full_extent[b] = full_extent.get(b, 1) * l.extent
+        if l.resource is None:
+            inner_extent[b] = inner_extent.get(b, 1) * l.extent
+
+    # grid ordering: parallel loops first, sigma/reduce loops last, each
+    # group in the order their base axes appear in the remaining inner nest
+    # (order among resource loops is free by independence — paper fig 4)
+    inner_order: list[str] = []
+    for l in inner_loops:
+        b = _base(l.index)
+        if b not in inner_order:
+            inner_order.append(b)
+
+    def _position(loop) -> int:
+        b = _base(loop.index)
+        return inner_order.index(b) if b in inner_order else len(inner_order)
+
+    def _semantics(loop) -> str:
+        if loop.resource in PARALLEL_RESOURCES and _base(loop.index) not in reduce_bases:
+            return "parallel"
+        return "arbitrary"
+
+    ordered = (sorted([l for l in grid_loops if _semantics(l) == "parallel"],
+                      key=_position)
+               + sorted([l for l in grid_loops if _semantics(l) == "arbitrary"],
+                        key=_position))
+    grid = tuple(GridAxis(l.index, _base(l.index), l.extent, _semantics(l))
+                 for l in ordered)
+    grid_pos: dict[str, int] = {}
+    for i, g in enumerate(grid):
+        if g.base in grid_pos:
+            raise ValueError(f"axis {g.base!r} lifted onto two grid resources")
+        grid_pos[g.base] = i
+
+    def _operand(a: "onf_mod.Access") -> OperandSpec:
+        strides: dict[str, int] = {}
+        for idx, c in a.coeffs.items():
+            if c == 0:
+                continue
+            b = _base(idx)
+            strides[b] = min(strides.get(b, c), c)
+            # a lifted pair must stay a single blocked axis: coeff(x_o) ==
+            # coeff(x_i) * |x_i| (the lift_loop rewrite, and nothing else)
+        for idx, c in a.coeffs.items():
+            b = _base(idx)
+            if idx.endswith("_o") and c != strides[b] * inner_extent.get(b, 1):
+                raise ValueError(
+                    f"{a.array}: {idx} coefficient {c} inconsistent with a "
+                    f"row-major lift of {b!r}")
+        axes = sorted(strides, key=lambda b: -strides[b])
+        expected = 1
+        for b in reversed(axes):
+            if strides[b] != expected:
+                raise ValueError(
+                    f"{a.array} is not a dense row-major view: axis {b!r} "
+                    f"stride {strides[b]}, expected {expected}")
+            expected *= full_extent[b]
+        return OperandSpec(
+            array=a.array,
+            axes=tuple(axes),
+            shape=tuple(full_extent[b] for b in axes),
+            block=tuple(inner_extent.get(b, 1) for b in axes),
+            grid_dims=tuple(grid_pos.get(b) for b in axes),
+        )
+
+    out_spec = _operand(o.out)
+    in_specs = tuple(_operand(a) for a in o.ins)
+
+    in_bases = {b for s in in_specs for b in s.axes}
+    contracted = tuple(b for b in inner_order
+                       if b in reduce_bases and b in in_bases
+                       and b not in out_spec.axes)
+    reduce_dims = [i for i, g in enumerate(grid) if g.base in reduce_bases]
+    if len(reduce_dims) > 1:
+        raise ValueError("more than one lifted reduction axis is unsupported")
+    reduce_grid_dim = reduce_dims[0] if reduce_dims else None
+
+    sched = Schedule(o.name, grid, in_specs, out_spec, contracted,
+                     reduce_grid_dim)
+    if hardware is not None:
+        ws = sched.vmem_bytes(dtype)
+        if ws > hardware.vmem.capacity_bytes:
+            raise ValueError(
+                f"derived blocks need {ws} B VMEM, over {hardware.name}'s "
+                f"{hardware.vmem.capacity_bytes} B capacity")
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# block policies (the static a-priori choices of paper §3.3/3.4)
+# ---------------------------------------------------------------------------
+
+def default_gemm_blocks(m: int, k: int, n: int, dtype,
+                        hardware: HardwareShape) -> BlockChoice:
+    """Solver defaults tuned for kernel use: quarter-VMEM budget keeps
+    double-buffering headroom; caps keep the grid >= a few cells."""
+    return solve_blocks(min(m, 512), min(k, 2048), min(n, 512), dtype,
+                        hardware=hardware, vmem_budget_frac=0.25)
+
+
+def _pad(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+# ---------------------------------------------------------------------------
+# the process-wide schedule cache
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ScheduleBundle:
+    """A cached derivation: the schedule plus the block choice and padded
+    problem dims the wrapper needs for pad/slice."""
+    op: str
+    schedule: Schedule
+    blocks: Optional[BlockChoice]
+    shapes: tuple[int, ...]          # logical (caller) shapes
+    padded: tuple[int, ...]          # block-multiple problem dims
+
+
+SCHEDULE_CACHE_SIZE = 256
+_cache: "OrderedDict[tuple, ScheduleBundle]" = OrderedDict()
+_lock = threading.Lock()
+_stats = {"hits": 0, "misses": 0, "solves": 0}
+
+
+def schedule_cache_stats() -> dict[str, int]:
+    """Counters for tests/monitoring: cache hits/misses and how many times
+    the brute-force ``solve_blocks`` search actually ran."""
+    with _lock:
+        return dict(_stats)
+
+
+def reset_schedule_cache() -> None:
+    with _lock:
+        _cache.clear()
+        for k in _stats:
+            _stats[k] = 0
+
+
+def _build_gemm(shapes, dtype, hw_shape, blocks) -> ScheduleBundle:
+    m, k, n = shapes
+    if blocks is None:
+        _stats["solves"] += 1
+        blocks = default_gemm_blocks(m, k, n, dtype, hw_shape)
+    bm, bk, bn = blocks.as_tuple()
+    mp, kp, np_ = _pad(m, bm), _pad(k, bk), _pad(n, bn)
+    lifted = onf_mod.gemm_fully_lifted(mp, kp, np_, procs=mp // bm, bk=bk,
+                                       bn=bn)
+    return ScheduleBundle("gemm", derive_schedule(lifted, hw_shape, dtype),
+                          blocks, shapes, (mp, kp, np_))
+
+
+def _build_expert_gemm(shapes, dtype, hw_shape, blocks) -> ScheduleBundle:
+    e, cap, d, f = shapes
+    if blocks is None:
+        _stats["solves"] += 1
+        blocks = default_gemm_blocks(cap, d, f, dtype, hw_shape)
+    bm, bk, bn = blocks.as_tuple()
+    cp, dp, fp = _pad(cap, bm), _pad(d, bk), _pad(f, bn)
+    lifted = onf_mod.expert_gemm_fully_lifted(e, cp, dp, fp, bm=bm, bk=bk,
+                                              bn=bn)
+    return ScheduleBundle("expert_gemm",
+                          derive_schedule(lifted, hw_shape, dtype),
+                          blocks, shapes, (e, cp, dp, fp))
+
+
+def _build_hadamard(shapes, dtype, hw_shape, blocks) -> ScheduleBundle:
+    m, n = shapes
+    bm, bn = blocks                   # a (bm, bn) tuple, not a BlockChoice
+    mp, np_ = _pad(m, bm), _pad(n, bn)
+    lifted = onf_mod.hadamard_lifted(mp, np_, bm=bm, bn=bn)
+    return ScheduleBundle("hadamard",
+                          derive_schedule(lifted, hw_shape, dtype),
+                          None, shapes, (mp, np_))
+
+
+_BUILDERS = {
+    "gemm": _build_gemm,
+    "expert_gemm": _build_expert_gemm,
+    "hadamard": _build_hadamard,
+}
+
+
+def get_schedule(op: str, shapes: tuple[int, ...], dtype,
+                 hardware, blocks=None) -> ScheduleBundle:
+    """LRU-cached schedule derivation keyed on ``(op, shapes, dtype,
+    hardware, blocks)``.  ``hardware`` may be a ``HardwareEntry`` (preferred —
+    its name keys the cache) or a bare ``HardwareShape``."""
+    hw_shape = getattr(hardware, "shape", hardware)
+    hw_name = getattr(hardware, "name", None) or hw_shape.name
+    dtype_key = str(dtype)
+    block_key = blocks if not isinstance(blocks, list) else tuple(blocks)
+    key = (op, tuple(shapes), dtype_key, hw_name, block_key)
+    with _lock:
+        hit = _cache.get(key)
+        if hit is not None:
+            _stats["hits"] += 1
+            _cache.move_to_end(key)
+            return hit
+        _stats["misses"] += 1
+        try:
+            builder = _BUILDERS[op]
+        except KeyError:
+            raise ValueError(
+                f"unknown schedule op {op!r}; known: {sorted(_BUILDERS)}"
+            ) from None
+        bundle = builder(tuple(shapes), dtype_key, hw_shape, blocks)
+        _cache[key] = bundle
+        while len(_cache) > SCHEDULE_CACHE_SIZE:
+            _cache.popitem(last=False)
+        return bundle

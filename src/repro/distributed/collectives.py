@@ -24,12 +24,23 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.kernels import ops
+
+
+def _axis_size(axis_name: str) -> int:
+    """Static ring size: jax.lax.axis_size where it exists, else the classic
+    psum(1) idiom (constant-folded to a Python int on older jax)."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis_name)
+    return jax.lax.psum(1, axis_name)
+
 
 def ag_matmul(x: jax.Array, w: jax.Array, axis_name: str) -> jax.Array:
     """Inside shard_map: x (m_shard, k) sharded on rows over ``axis_name``;
     w (k, n) replicated.  Returns y = all_gather(x) @ w, (m_full, n),
     computed as a ppermute ring (no full gather buffer)."""
-    p = jax.lax.axis_size(axis_name)
+    p = _axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     m_shard = x.shape[0]
     n = w.shape[1]
@@ -39,8 +50,7 @@ def ag_matmul(x: jax.Array, w: jax.Array, axis_name: str) -> jax.Array:
     def body(t, carry):
         y, chunk = carry
         src = (idx - t) % p                       # whose rows we now hold
-        part = jnp.dot(chunk, w, preferred_element_type=jnp.float32
-                       ).astype(x.dtype)
+        part = ops.matmul(chunk, w, out_dtype=x.dtype)
         y = jax.lax.dynamic_update_slice(y, part, (src * m_shard, 0))
         chunk = jax.lax.ppermute(chunk, axis_name, perm)
         return (y, chunk)
@@ -56,14 +66,14 @@ def psum_matmul(x: jax.Array, w: jax.Array, axis_name: str) -> jax.Array:
     accumulations (reduce-then-broadcast fused into one rotation of 2p-2
     steps is approximated here by chunked psum over row blocks so transfers
     overlap matmuls)."""
-    p = jax.lax.axis_size(axis_name)
+    p = _axis_size(axis_name)
     m = x.shape[0]
     chunks = min(p, max(m // 8, 1))
     rows = m // chunks
 
     def chunk_fn(i, acc):
         xi = jax.lax.dynamic_slice_in_dim(x, i * rows, rows, 0)
-        part = jnp.dot(xi, w, preferred_element_type=jnp.float32)
+        part = ops.matmul(xi, w, out_dtype=jnp.float32)
         part = jax.lax.psum(part, axis_name)      # per-chunk reduction
         return jax.lax.dynamic_update_slice(acc, part.astype(x.dtype),
                                             (i * rows, 0))
@@ -71,7 +81,7 @@ def psum_matmul(x: jax.Array, w: jax.Array, axis_name: str) -> jax.Array:
     y = jnp.zeros((m, w.shape[1]), x.dtype)
     y = jax.lax.fori_loop(0, chunks, chunk_fn, y)
     if m % chunks:
-        tail = jnp.dot(x[chunks * rows:], w, preferred_element_type=jnp.float32)
+        tail = ops.matmul(x[chunks * rows:], w, out_dtype=jnp.float32)
         y = y.at[chunks * rows:].set(jax.lax.psum(tail, axis_name).astype(x.dtype))
     return y
 

@@ -1,8 +1,13 @@
-"""Pallas TPU kernels for the paper's compute hot-spot: blocked MoA GEMM and
-its unified-operator family (inner/outer/hadamard/kron), plus the MoE
-expert-GEMM extension.  ``ref`` holds the pure-jnp oracles; ``ops`` the
-public jit wrappers with static block solving and padding."""
+"""Pallas TPU kernels for the paper's compute hot-spot, now *derived*: every
+kernel's grid, BlockSpecs and semantics come from ``derive_schedule`` over a
+lifted ONF (``repro.core.schedule``) and the generic ``emit_pallas`` emitter.
+``ops`` holds the public jit wrappers (schedule cache + hardware-registry
+dispatch + the unified ``matmul``/``expert_matmul`` model entries); ``ref``
+the pure-jnp oracles; ``moa_gemm`` the legacy hand-written kernels kept one
+release as a cross-check (REPRO_LEGACY_KERNELS=1)."""
 from repro.kernels.ops import (  # noqa: F401
     moa_gemm, expert_gemm, hadamard, outer, kron, ipophp,
+    matmul, expert_matmul,
 )
+from repro.kernels.emit import emit_pallas  # noqa: F401
 from repro.kernels import ref  # noqa: F401

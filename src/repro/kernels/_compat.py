@@ -1,0 +1,13 @@
+"""Version shims for the Pallas TPU API surface used by this package."""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams; support both so the
+# kernels run on every jax this repo targets.
+_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+
+def compiler_params(*, dimension_semantics) -> object:
+    return _PARAMS_CLS(dimension_semantics=tuple(dimension_semantics))

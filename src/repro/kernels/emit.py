@@ -1,0 +1,125 @@
+"""Generic Pallas emitter: an executable kernel from a derived ``Schedule``.
+
+``emit_pallas(schedule, combine)`` is the single code generator behind
+``moa_gemm``, ``expert_gemm`` and ``hadamard``: the grid, BlockSpecs,
+dimension semantics and scratch accumulator all come from the schedule (which
+in turn was derived from the lifted ONF), so no kernel hand-writes its
+layout.  The in-block body is the einsum the schedule's axis structure
+implies — a plain MXU dot for GEMM, elementwise multiply for Hadamard, a
+batched dot for the lifted expert axis — with f32 accumulation across the
+sigma (reduce) grid steps, flushed to the output dtype on the last step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.schedule import Schedule
+from repro.kernels._compat import compiler_params
+
+
+def _index_map(grid_dims: tuple[Optional[int], ...]) -> Callable:
+    def imap(*gids):
+        return tuple(gids[d] if d is not None else 0 for d in grid_dims)
+    return imap
+
+
+def _is_multiply(combine) -> bool:
+    return combine is None or combine in (np.multiply, jnp.multiply)
+
+
+def _general_combine(schedule: Schedule, combine, vals):
+    """Fallback body for non-multiplicative combines: align every block to
+    (out axes + contracted axes), fold with ``combine``, sum the contraction."""
+    joint = tuple(schedule.out.axes) + tuple(schedule.contracted)
+    aligned = []
+    for opn, v in zip(schedule.ins, vals):
+        src = {ax: i for i, ax in enumerate(opn.axes)}
+        v = jnp.transpose(v, [src[ax] for ax in joint if ax in src])
+        for pos, ax in enumerate(joint):
+            if ax not in src:
+                v = jnp.expand_dims(v, pos)
+        aligned.append(v.astype(jnp.float32))
+    out = functools.reduce(combine, aligned)
+    if schedule.contracted:
+        red = tuple(range(len(schedule.out.axes), len(joint)))
+        out = jnp.sum(out, axis=red)
+    return out
+
+
+def emit_pallas(schedule: Schedule, combine=None, *, out_dtype=None,
+                interpret: bool = False) -> Callable:
+    """Build the ``pl.pallas_call`` a schedule describes.
+
+    Returns ``fn(*operands) -> out`` over arrays of exactly the schedule's
+    (padded) operand shapes.  ``combine`` is the ONF's pairing op; the default
+    (multiply) lowers to the einsum implied by the schedule's axes.
+    """
+    ni = len(schedule.ins)
+    out_dtype = jnp.dtype(out_dtype or jnp.float32)
+    spec, in_keep = schedule.einsum_plan()
+    red = schedule.reduce_grid_dim
+    gk = schedule.grid[red].extent if red is not None else 0
+    multiplicative = _is_multiply(combine)
+    out_block = schedule.out.block
+
+    def body(*refs):
+        o_ref = refs[ni]
+        if multiplicative:
+            squeezed = [
+                refs[i][...].reshape(tuple(opn.block[d] for d in keep))
+                for i, (opn, keep) in enumerate(zip(schedule.ins, in_keep))
+            ]
+            val = jnp.einsum(spec, *squeezed,
+                             preferred_element_type=jnp.float32)
+        else:
+            val = _general_combine(schedule, combine,
+                                   [refs[i][...] for i in range(ni)])
+        val = val.reshape(out_block)
+        if red is None:
+            o_ref[...] = val.astype(out_dtype)
+        else:
+            acc_ref = refs[ni + 1]
+            kk = pl.program_id(red)
+
+            @pl.when(kk == 0)
+            def _init():
+                acc_ref[...] = jnp.zeros_like(acc_ref)
+
+            acc_ref[...] += val
+
+            @pl.when(kk == gk - 1)
+            def _flush():
+                o_ref[...] = acc_ref[...].astype(out_dtype)
+
+    call = pl.pallas_call(
+        body,
+        grid=schedule.grid_extents,
+        in_specs=[pl.BlockSpec(opn.block, _index_map(opn.grid_dims))
+                  for opn in schedule.ins],
+        out_specs=pl.BlockSpec(out_block, _index_map(schedule.out.grid_dims)),
+        out_shape=jax.ShapeDtypeStruct(schedule.out.shape, out_dtype),
+        scratch_shapes=([pltpu.VMEM(out_block, jnp.float32)]
+                        if red is not None else []),
+        compiler_params=compiler_params(
+            dimension_semantics=schedule.dimension_semantics),
+        interpret=interpret,
+    )
+
+    def fn(*arrays):
+        if len(arrays) != ni:
+            raise ValueError(f"{schedule.name}: expected {ni} operands")
+        for arr, opn in zip(arrays, schedule.ins):
+            if tuple(arr.shape) != opn.shape:
+                raise ValueError(
+                    f"{schedule.name}: operand {opn.array} has shape "
+                    f"{arr.shape}, schedule derived {opn.shape} — pad first")
+        return call(*arrays)
+
+    return fn

@@ -1,29 +1,49 @@
-"""Public, jit-friendly wrappers around the Pallas kernels.
+"""Public, jit-friendly entry points for the derived-schedule Pallas kernels.
 
-These handle: static block-size solving (via ``repro.core.blocking``),
-padding to block multiples (the grid covers the padded problem; the pad is
-sliced away), dtype policy (f32 accumulation), backend dispatch (Pallas on
-TPU, interpret-mode Pallas for CPU validation, jnp oracle fallback), and the
-``ipophp`` unified-operator dispatcher of the paper's appendix.
+Execution pipeline — the paper's derivation end to end, per call:
+
+    shapes ──solve_blocks──► lifted ONF ──derive_schedule──► emit_pallas
+
+Every stage is cached: ``repro.core.schedule`` memoizes the derivation (and
+the brute-force block search inside it) on ``(op, shapes, dtype, hardware)``,
+and this module memoizes the emitted, jitted callables, so hot serving and
+training paths never re-derive.
+
+Dispatch is registry-driven (``repro.core.hardware``): the entry detected
+once per process decides whether kernels compile (TPU), run through the
+Pallas interpreter (CPU validation), or — for the high-level ``matmul`` /
+``expert_matmul`` entries the models call — fall back to the XLA oracle with
+identical f32-accumulation semantics.
+
+The hand-written kernels remain available for one release as a numerical
+cross-check behind ``REPRO_LEGACY_KERNELS=1`` (or ``legacy=True``).
 """
 from __future__ import annotations
 
 import functools
+import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.blocking import BlockChoice, solve_blocks
-from repro.core.lifting import TPU_V5E
+from repro.core.blocking import BlockChoice
+from repro.core import schedule as _sched
+from repro.core.hardware import HardwareEntry, current_hardware, get_entry
 from repro.kernels import ref
-from repro.kernels import moa_gemm as _k
+from repro.kernels import moa_gemm as _legacy
+from repro.kernels.emit import emit_pallas
 
 
-def _auto_interpret(interpret: Optional[bool]) -> bool:
-    if interpret is not None:
-        return interpret
-    return jax.default_backend() != "tpu"
+def _use_legacy(flag: Optional[bool]) -> bool:
+    if flag is not None:
+        return flag
+    return os.environ.get("REPRO_LEGACY_KERNELS", "") not in ("", "0")
+
+
+def _resolve(hardware, interpret) -> tuple[HardwareEntry, bool]:
+    hw = hardware or current_hardware()
+    return hw, (hw.interpret if interpret is None else interpret)
 
 
 def _pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
@@ -33,76 +53,246 @@ def _pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
     return x
 
 
-def default_blocks(m: int, k: int, n: int, dtype) -> BlockChoice:
-    """Solver defaults tuned for kernel use: quarter-VMEM budget keeps
-    double-buffering headroom; caps keep the grid >= a few cells."""
-    bc = solve_blocks(min(m, 512), min(k, 2048), min(n, 512), dtype,
-                      hardware=TPU_V5E, vmem_budget_frac=0.25)
-    return bc
+def default_blocks(m: int, k: int, n: int, dtype,
+                   hardware: Optional[HardwareEntry] = None) -> BlockChoice:
+    """The registry-aware block policy (see schedule.default_gemm_blocks)."""
+    hw = hardware or current_hardware()
+    return _sched.default_gemm_blocks(m, k, n, dtype, hw.shape)
 
 
-@functools.partial(jax.jit, static_argnames=("blocks", "out_dtype", "interpret"))
-def _moa_gemm_impl(a, b, blocks: BlockChoice, out_dtype, interpret: bool):
-    m, k = a.shape
-    _, n = b.shape
-    ap = _pad_to(a, (blocks.bm, blocks.bk))
-    bp = _pad_to(b, (blocks.bk, blocks.bn))
-    out = _k.moa_gemm_kernel(ap, bp, blocks, out_dtype=out_dtype,
-                             interpret=interpret)
-    return out[:m, :n]
+# ---------------------------------------------------------------------------
+# derived-schedule executors (cached per (op, shapes, dtype, hardware))
+# ---------------------------------------------------------------------------
 
+@functools.lru_cache(maxsize=512)
+def _gemm_callable(m, k, n, dtype_s, out_dtype_s, blocks, hw_name, interpret):
+    bundle = _sched.get_schedule("gemm", (m, k, n), dtype_s,
+                                 get_entry(hw_name), blocks=blocks)
+    kern = emit_pallas(bundle.schedule, out_dtype=out_dtype_s,
+                       interpret=interpret)
+    bm, bk, bn = bundle.blocks.as_tuple()
+
+    @jax.jit
+    def call(a, b):
+        out = kern(_pad_to(a, (bm, bk)), _pad_to(b, (bk, bn)))
+        return out[:m, :n]
+
+    return call
+
+
+@functools.lru_cache(maxsize=512)
+def _expert_callable(e, cap, d, f, dtype_s, out_dtype_s, blocks, hw_name,
+                     interpret):
+    bundle = _sched.get_schedule("expert_gemm", (e, cap, d, f), dtype_s,
+                                 get_entry(hw_name), blocks=blocks)
+    kern = emit_pallas(bundle.schedule, out_dtype=out_dtype_s,
+                       interpret=interpret)
+    bm, bk, bn = bundle.blocks.as_tuple()
+
+    @jax.jit
+    def call(x, w):
+        out = kern(_pad_to(x, (1, bm, bk)), _pad_to(w, (1, bk, bn)))
+        return out[:, :cap, :f]
+
+    return call
+
+
+@functools.lru_cache(maxsize=512)
+def _hadamard_callable(m, n, block, dtype_s, hw_name, interpret):
+    bundle = _sched.get_schedule("hadamard", (m, n), dtype_s,
+                                 get_entry(hw_name), blocks=block)
+    kern = emit_pallas(bundle.schedule, out_dtype=dtype_s,
+                       interpret=interpret)
+
+    @jax.jit
+    def call(a, b):
+        return kern(_pad_to(a, block), _pad_to(b, block))[:m, :n]
+
+    return call
+
+
+# ---------------------------------------------------------------------------
+# kernel entry points
+# ---------------------------------------------------------------------------
 
 def moa_gemm(a: jax.Array, b: jax.Array, *, blocks: Optional[BlockChoice] = None,
-             out_dtype=None, interpret: Optional[bool] = None) -> jax.Array:
-    """C = A @ B through the MoA blocked-contiguous Pallas kernel."""
+             out_dtype=None, interpret: Optional[bool] = None,
+             legacy: Optional[bool] = None,
+             hardware: Optional[HardwareEntry] = None) -> jax.Array:
+    """C = A @ B through the derived MoA blocked-contiguous schedule."""
     m, k = a.shape
     k2, n = b.shape
     if k != k2:
         raise ValueError(f"contraction mismatch {a.shape} @ {b.shape}")
-    blocks = blocks or default_blocks(m, k, n, a.dtype)
-    out_dtype = out_dtype or a.dtype
-    return _moa_gemm_impl(a, b, blocks, jnp.dtype(out_dtype),
-                          _auto_interpret(interpret))
-
-
-@functools.partial(jax.jit, static_argnames=("blocks", "out_dtype", "interpret"))
-def _expert_gemm_impl(x, w, blocks: BlockChoice, out_dtype, interpret: bool):
-    e, cap, d = x.shape
-    _, _, f = w.shape
-    xp = _pad_to(x, (1, blocks.bm, blocks.bk))
-    wp = _pad_to(w, (1, blocks.bk, blocks.bn))
-    out = _k.expert_gemm_kernel(xp, wp, blocks, out_dtype=out_dtype,
-                                interpret=interpret)
-    return out[:, :cap, :f]
+    hw, interp = _resolve(hardware, interpret)
+    out_dtype = jnp.dtype(out_dtype or a.dtype)
+    if _use_legacy(legacy):
+        bc = blocks or default_blocks(m, k, n, a.dtype, hw)
+        return _legacy_gemm(a, b, bc, out_dtype, interp)
+    fn = _gemm_callable(m, k, n, str(jnp.dtype(a.dtype)), str(out_dtype),
+                        blocks, hw.name, interp)
+    return fn(a, b)
 
 
 def expert_gemm(x: jax.Array, w: jax.Array, *, blocks: Optional[BlockChoice] = None,
-                out_dtype=None, interpret: Optional[bool] = None) -> jax.Array:
-    """(E, cap, d) x (E, d, f) -> (E, cap, f) capacity-padded expert GEMM."""
+                out_dtype=None, interpret: Optional[bool] = None,
+                legacy: Optional[bool] = None,
+                hardware: Optional[HardwareEntry] = None) -> jax.Array:
+    """(E, cap, d) x (E, d, f) -> (E, cap, f) capacity-padded expert GEMM —
+    the same derived schedule with the expert axis as one more lift."""
     e, cap, d = x.shape
     e2, d2, f = w.shape
     if e != e2 or d != d2:
         raise ValueError(f"expert gemm mismatch {x.shape} x {w.shape}")
-    blocks = blocks or default_blocks(cap, d, f, x.dtype)
-    out_dtype = out_dtype or x.dtype
-    return _expert_gemm_impl(x, w, blocks, jnp.dtype(out_dtype),
-                             _auto_interpret(interpret))
-
-
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def _hadamard_impl(a, b, block, interpret: bool):
-    m, n = a.shape
-    ap = _pad_to(a, block)
-    bp = _pad_to(b, block)
-    return _k.hadamard_kernel(ap, bp, block, interpret=interpret)[:m, :n]
+    hw, interp = _resolve(hardware, interpret)
+    out_dtype = jnp.dtype(out_dtype or x.dtype)
+    if _use_legacy(legacy):
+        bc = blocks or default_blocks(cap, d, f, x.dtype, hw)
+        return _legacy_expert(x, w, bc, out_dtype, interp)
+    fn = _expert_callable(e, cap, d, f, str(jnp.dtype(x.dtype)),
+                          str(out_dtype), blocks, hw.name, interp)
+    return fn(x, w)
 
 
 def hadamard(a: jax.Array, b: jax.Array, *, block: tuple[int, int] = (256, 256),
-             interpret: Optional[bool] = None) -> jax.Array:
+             interpret: Optional[bool] = None, legacy: Optional[bool] = None,
+             hardware: Optional[HardwareEntry] = None) -> jax.Array:
     if a.shape != b.shape:
         raise ValueError(f"hadamard shape mismatch {a.shape} vs {b.shape}")
-    block = (min(block[0], max(a.shape[0], 8)), min(block[1], max(a.shape[1], 128)))
-    return _hadamard_impl(a, b, block, _auto_interpret(interpret))
+    m, n = a.shape
+    block = (min(block[0], max(m, 8)), min(block[1], max(n, 128)))
+    hw, interp = _resolve(hardware, interpret)
+    if _use_legacy(legacy):
+        return _legacy_hadamard(a, b, block, interp)
+    fn = _hadamard_callable(m, n, block, str(jnp.dtype(a.dtype)), hw.name,
+                            interp)
+    return fn(a, b)
+
+
+# ---------------------------------------------------------------------------
+# legacy hand-written kernels (cross-check path, one release)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("blocks", "out_dtype", "interpret"))
+def _legacy_gemm(a, b, blocks: BlockChoice, out_dtype, interpret: bool):
+    m, k = a.shape
+    _, n = b.shape
+    ap = _pad_to(a, (blocks.bm, blocks.bk))
+    bp = _pad_to(b, (blocks.bk, blocks.bn))
+    out = _legacy.moa_gemm_kernel(ap, bp, blocks, out_dtype=out_dtype,
+                                  interpret=interpret)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("blocks", "out_dtype", "interpret"))
+def _legacy_expert(x, w, blocks: BlockChoice, out_dtype, interpret: bool):
+    e, cap, d = x.shape
+    _, _, f = w.shape
+    xp = _pad_to(x, (1, blocks.bm, blocks.bk))
+    wp = _pad_to(w, (1, blocks.bk, blocks.bn))
+    out = _legacy.expert_gemm_kernel(xp, wp, blocks, out_dtype=out_dtype,
+                                     interpret=interpret)
+    return out[:, :cap, :f]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def _legacy_hadamard(a, b, block, interpret: bool):
+    m, n = a.shape
+    ap = _pad_to(a, block)
+    bp = _pad_to(b, block)
+    return _legacy.hadamard_kernel(ap, bp, block, interpret=interpret)[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# unified model-facing entries: derived schedules on Pallas backends, the
+# identical-semantics XLA oracle elsewhere.  These are what the models,
+# collectives and benchmarks call — the single execution path.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _pallas_matmul_f32(x2, w2, hw_name, interpret):
+    return moa_gemm(x2, w2, out_dtype=jnp.float32, interpret=interpret,
+                    hardware=get_entry(hw_name))
+
+
+def _pallas_matmul_fwd(x2, w2, hw_name, interpret):
+    return _pallas_matmul_f32(x2, w2, hw_name, interpret), (x2, w2)
+
+
+def _pallas_matmul_bwd(hw_name, interpret, resid, g):
+    x2, w2 = resid
+    hw = get_entry(hw_name)
+    dx = moa_gemm(g, w2.T, out_dtype=x2.dtype, interpret=interpret,
+                  hardware=hw)
+    dw = moa_gemm(x2.T, g, out_dtype=w2.dtype, interpret=interpret,
+                  hardware=hw)
+    return dx, dw
+
+
+_pallas_matmul_f32.defvjp(_pallas_matmul_fwd, _pallas_matmul_bwd)
+
+
+def matmul(x: jax.Array, w: jax.Array, *, out_dtype=None,
+           interpret: Optional[bool] = None,
+           hardware: Optional[HardwareEntry] = None) -> jax.Array:
+    """Unified MoA matmul: ``y[..., :] = x[..., k] @ w[k, ...]``.
+
+    Leading dims of ``x`` and trailing dims of ``w`` collapse to the 2-D MoA
+    GEMM (one gamma re-layout each way).  On a Pallas backend this executes
+    the derived schedule (differentiable: the VJP is two more derived GEMMs);
+    elsewhere it is the XLA oracle with the same f32-accumulation contract,
+    so CPU tests and TPU serving share semantics.
+    """
+    kdim = x.shape[-1]
+    if w.shape[0] != kdim:
+        raise ValueError(f"matmul contraction mismatch {x.shape} @ {w.shape}")
+    hw, interp = _resolve(hardware, interpret)
+    out_dtype = jnp.dtype(out_dtype or x.dtype)
+    x2 = x.reshape(-1, kdim)
+    w2 = w.reshape(kdim, -1)
+    if hw.backend == "pallas" or interpret:
+        y = _pallas_matmul_f32(x2, w2, hw.name, bool(interp))
+    else:
+        y = jnp.dot(x2, w2, preferred_element_type=jnp.float32)
+    return y.astype(out_dtype).reshape(x.shape[:-1] + w.shape[1:])
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _pallas_expert_f32(x, w, hw_name, interpret):
+    return expert_gemm(x, w, out_dtype=jnp.float32, interpret=interpret,
+                       hardware=get_entry(hw_name))
+
+
+def _pallas_expert_fwd(x, w, hw_name, interpret):
+    return _pallas_expert_f32(x, w, hw_name, interpret), (x, w)
+
+
+def _pallas_expert_bwd(hw_name, interpret, resid, g):
+    x, w = resid
+    hw = get_entry(hw_name)
+    dx = expert_gemm(g, jnp.swapaxes(w, 1, 2), out_dtype=x.dtype,
+                     interpret=interpret, hardware=hw)
+    dw = expert_gemm(jnp.swapaxes(x, 1, 2), g, out_dtype=w.dtype,
+                     interpret=interpret, hardware=hw)
+    return dx, dw
+
+
+_pallas_expert_f32.defvjp(_pallas_expert_fwd, _pallas_expert_bwd)
+
+
+def expert_matmul(x: jax.Array, w: jax.Array, *, out_dtype=None,
+                  interpret: Optional[bool] = None,
+                  hardware: Optional[HardwareEntry] = None) -> jax.Array:
+    """Unified batched expert contraction ``ecd,edf->ecf`` — the MoE dispatch
+    hot path, through the derived expert schedule on Pallas backends."""
+    hw, interp = _resolve(hardware, interpret)
+    out_dtype = jnp.dtype(out_dtype or x.dtype)
+    if hw.backend == "pallas" or interpret:
+        y = _pallas_expert_f32(x, w, hw.name, bool(interp))
+    else:
+        y = jnp.einsum("ecd,edf->ecf", x, w,
+                       preferred_element_type=jnp.float32)
+    return y.astype(out_dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -16,11 +16,24 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import constrain
+from repro.kernels import ops
 from repro.models.chunked_attention import chunked_attention
 from repro.models.common import ArchConfig, Collector
 from repro.models.layers import apply_rope, rope_tables
 
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _proj(x: jax.Array, w: jax.Array) -> jax.Array:
+    '''bsd,d...->bs... through the unified MoA matmul entry.'''
+    return ops.matmul(x, w, out_dtype=x.dtype)
+
+
+def _out_proj(out: jax.Array, wo: jax.Array, out_dtype) -> jax.Array:
+    '''bshk,hkd->bsd: collapse (heads, head_dim), one derived GEMM.'''
+    b, s = out.shape[:2]
+    return ops.matmul(out.reshape(b, s, -1),
+                      wo.reshape(-1, wo.shape[-1]), out_dtype=out_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -129,18 +142,15 @@ def attention_fwd(p: dict, x: jax.Array, cfg: ArchConfig, *,
     b, s, d = x.shape
     hd = p["wq"].shape[-1]
     scale = hd ** -0.5
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"],
-                   preferred_element_type=jnp.float32).astype(x.dtype)
+    q = _proj(x, p["wq"])
     q = constrain(q, "batch", "seq_sp", None, None) \
         if cfg.attn_sharding == "sp" else constrain(q, "batch", None, "heads", None)
     if cfg.use_bias:
         q = q + p["bq"].astype(x.dtype)
     if kv_override is None:
-        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"],
-                       preferred_element_type=jnp.float32).astype(x.dtype)
+        k = _proj(x, p["wk"])
         k = constrain(k, "batch", "seq_sp", None, None)
-        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"],
-                       preferred_element_type=jnp.float32).astype(x.dtype)
+        v = _proj(x, p["wv"])
         v = constrain(v, "batch", "seq_sp", None, None)
         if cfg.use_bias:
             k = k + p["bk"].astype(x.dtype)
@@ -199,8 +209,7 @@ def attention_fwd(p: dict, x: jax.Array, cfg: ArchConfig, *,
         out = constrain(out, "batch", "seq_sp", None, None)
     else:
         out = constrain(out, "batch", None, "heads", None)
-    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"],
-                   preferred_element_type=jnp.float32).astype(x.dtype)
+    o = _out_proj(out, p["wo"], x.dtype)
     o = constrain(o, "batch", "seq_sp", None)
     if cfg.use_bias:
         o = o + p["bo"].astype(x.dtype)
@@ -215,12 +224,9 @@ def attention_decode(p: dict, x: jax.Array, cache: KV, pos: jax.Array,
     b, _, d = x.shape
     hd = p["wq"].shape[-1]
     scale = hd ** -0.5
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"],
-                   preferred_element_type=jnp.float32).astype(x.dtype)
-    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"],
-                   preferred_element_type=jnp.float32).astype(x.dtype)
-    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"],
-                   preferred_element_type=jnp.float32).astype(x.dtype)
+    q = _proj(x, p["wq"])
+    k = _proj(x, p["wk"])
+    v = _proj(x, p["wv"])
     if cfg.use_bias:
         q = q + p["bq"].astype(x.dtype)
         k = k + p["bk"].astype(x.dtype)
@@ -242,8 +248,7 @@ def attention_decode(p: dict, x: jax.Array, cache: KV, pos: jax.Array,
         valid &= kpos[None, :] > (pos[:, None] - window)
     mask = valid[:, None, None, None, :]
     out = _attend(qg, ck, cv, mask, scale)
-    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"],
-                   preferred_element_type=jnp.float32).astype(x.dtype)
+    o = _out_proj(out, p["wo"], x.dtype)
     if cfg.use_bias:
         o = o + p["bo"].astype(x.dtype)
     return o, KV(ck, cv)
@@ -262,12 +267,9 @@ def attention_decode_ring(p: dict, x: jax.Array, cache: KV, pos: jax.Array,
     hd = p["wq"].shape[-1]
     scale = hd ** -0.5
     wlen = cache.k.shape[1]
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"],
-                   preferred_element_type=jnp.float32).astype(x.dtype)
-    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"],
-                   preferred_element_type=jnp.float32).astype(x.dtype)
-    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"],
-                   preferred_element_type=jnp.float32).astype(x.dtype)
+    q = _proj(x, p["wq"])
+    k = _proj(x, p["wk"])
+    v = _proj(x, p["wv"])
     if cfg.rope_pct > 0:
         sin, cos = rope_tables(pos[:, None], int(hd * cfg.rope_pct), cfg.rope_theta)
         pct = 1.0 if cfg.rope_pct == 1.0 else (hd * cfg.rope_pct) / hd
@@ -282,8 +284,7 @@ def attention_decode_ring(p: dict, x: jax.Array, cache: KV, pos: jax.Array,
     mask = valid[:, None, None, None, :]
     kvh = ck.shape[2]
     out = _attend(_split_groups(q, kvh), ck, cv, mask, scale)
-    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"],
-                   preferred_element_type=jnp.float32).astype(x.dtype)
+    o = _out_proj(out, p["wo"], x.dtype)
     if cfg.use_bias:
         o = o + p["bo"].astype(x.dtype)
     return o, KV(ck, cv)
@@ -319,21 +320,16 @@ def mla_fwd(p: dict, x: jax.Array, cfg: ArchConfig, *, positions: jax.Array
     b, s, d = x.shape
     h = cfg.n_heads
     scale = (nope + rope) ** -0.5
-    cq = _rms(jnp.einsum("bsd,dr->bsr", x, p["wq_a"],
-                         preferred_element_type=jnp.float32).astype(x.dtype),
-              p["q_norm"])
-    q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"],
-                   preferred_element_type=jnp.float32).astype(x.dtype)
+    cq = _rms(_proj(x, p["wq_a"]), p["q_norm"])
+    q = _proj(cq, p["wq_b"])
     q_nope, q_pe = q[..., :nope], q[..., nope:]
-    kv_all = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"],
-                        preferred_element_type=jnp.float32).astype(x.dtype)
+    kv_all = _proj(x, p["wkv_a"])
     c_kv = _rms(kv_all[..., :kvr], p["kv_norm"])
     k_pe = kv_all[..., kvr:]
     sin, cos = rope_tables(positions, rope, cfg.rope_theta)
     q_pe = apply_rope(q_pe, sin, cos)
     k_pe = apply_rope(k_pe[:, :, None, :], sin, cos)[:, :, 0, :]
-    kv = jnp.einsum("bsr,rhk->bshk", c_kv, p["wkv_b"],
-                    preferred_element_type=jnp.float32).astype(x.dtype)
+    kv = _proj(c_kv, p["wkv_b"])
     k_nope, v = kv[..., :nope], kv[..., nope:]
     if s >= cfg.attn_chunk_min_seq:
         # chunked path: fold both score terms into one contraction —
@@ -360,8 +356,7 @@ def mla_fwd(p: dict, x: jax.Array, cfg: ArchConfig, *, positions: jax.Array
         w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
         out = jnp.einsum("bhqk,bkhn->bqhn", w, v,
                          preferred_element_type=jnp.float32).astype(x.dtype)
-    o = jnp.einsum("bshn,hnd->bsd", out, p["wo"],
-                   preferred_element_type=jnp.float32).astype(x.dtype)
+    o = _out_proj(out, p["wo"], x.dtype)
     return o, MLACache(c_kv, k_pe)
 
 
@@ -372,14 +367,10 @@ def mla_decode(p: dict, x: jax.Array, cache: MLACache, pos: jax.Array,
     b, _, d = x.shape
     h = cfg.n_heads
     scale = (nope + rope) ** -0.5
-    cq = _rms(jnp.einsum("bsd,dr->bsr", x, p["wq_a"],
-                         preferred_element_type=jnp.float32).astype(x.dtype),
-              p["q_norm"])
-    q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"],
-                   preferred_element_type=jnp.float32).astype(x.dtype)
+    cq = _rms(_proj(x, p["wq_a"]), p["q_norm"])
+    q = _proj(cq, p["wq_b"])
     q_nope, q_pe = q[..., :nope], q[..., nope:]
-    kv_all = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"],
-                        preferred_element_type=jnp.float32).astype(x.dtype)
+    kv_all = _proj(x, p["wkv_a"])
     c_new = _rms(kv_all[..., :kvr], p["kv_norm"])
     kpe_new = kv_all[..., kvr:]
     sin, cos = rope_tables(pos[:, None], rope, cfg.rope_theta)
@@ -404,6 +395,5 @@ def mla_decode(p: dict, x: jax.Array, cache: MLACache, pos: jax.Array,
                      preferred_element_type=jnp.float32).astype(x.dtype)
     out = jnp.einsum("bshr,rhn->bshn", ctx, w_uv,
                      preferred_element_type=jnp.float32).astype(x.dtype)
-    o = jnp.einsum("bshn,hnd->bsd", out, p["wo"],
-                   preferred_element_type=jnp.float32).astype(x.dtype)
+    o = _out_proj(out, p["wo"], x.dtype)
     return o, MLACache(c_kv, k_pe)

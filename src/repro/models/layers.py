@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import constrain
+from repro.kernels import ops
 from repro.models.common import ArchConfig, Collector
 
 
@@ -75,8 +76,7 @@ def _gate_act(cfg: ArchConfig, u: jax.Array) -> jax.Array:
 
 
 def apply_mlp(p: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
-    h = jnp.einsum("bsd,df->bsf", x, p["wi"],
-                   preferred_element_type=jnp.float32)
+    h = ops.matmul(x, p["wi"], out_dtype=jnp.float32)
     # NOTE: do NOT with_sharding_constraint the f32 pre-activation — measured
     # to make SPMD replicate the FFN over "model" (7x flops at decode, ~6x at
     # train).  The bf16 post-activation constraint below is sufficient.
@@ -89,8 +89,7 @@ def apply_mlp(p: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
         h = _gate_act(cfg, h)
     h = h.astype(x.dtype)
     h = constrain(h, "batch", None, "d_ff")
-    out = jnp.einsum("bsf,fd->bsd", h, p["wo"],
-                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = ops.matmul(h, p["wo"], out_dtype=x.dtype)
     if x.shape[1] > 1:
         # seq-sharded output (train/prefill): the TP partial-sum becomes a
         # reduce-scatter.  NEVER at decode (s=1): forcing a replicated-spec
@@ -162,12 +161,15 @@ def embed_tokens(params: dict, tokens: jax.Array, cfg: ArchConfig) -> jax.Array:
 
 def logits_from_hidden(params: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
     if cfg.tie_embeddings:
+        # tied head contracts the (vocab, d) table in its STORED layout —
+        # routing through ops.matmul would transpose-copy the largest tensor
+        # in the model every step.  Needs a transposed-operand derived
+        # schedule before it can join the unified path (see ROADMAP).
         w = params["embed"]["table"]
         logits = jnp.einsum("bsd,vd->bsv", x, w,
                             preferred_element_type=jnp.float32)
     else:
-        logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"]["w"],
-                            preferred_element_type=jnp.float32)
+        logits = ops.matmul(x, params["unembed"]["w"], out_dtype=jnp.float32)
     if cfg.logit_softcap:
         c = cfg.logit_softcap
         logits = jnp.tanh(logits / c) * c

@@ -18,7 +18,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.distributed.sharding import constrain
+from repro.distributed.sharding import constrain, shard_map
+from repro.kernels import ops
 from repro.models.common import ArchConfig, Collector
 from repro.models.layers import _gate_act
 
@@ -73,7 +74,8 @@ def _apply_moe_global(p: dict, x: jax.Array, cfg: ArchConfig
     t = b * s
     xt = x.reshape(t, d)
 
-    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    logits = ops.matmul(xt.astype(jnp.float32), p["router"],
+                        out_dtype=jnp.float32)
     probs = jax.nn.softmax(logits, axis=-1)
     gate_vals, idx = jax.lax.top_k(probs, k)                  # (t, k)
     gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
@@ -103,14 +105,13 @@ def _apply_moe_global(p: dict, x: jax.Array, cfg: ArchConfig
     xe = xe.reshape(e, cap, d)
     xe = constrain(xe, "experts", None, None)
 
-    # ---- expert FFN (gated) — batched MoA GEMM over the lifted expert axis
-    h = jnp.einsum("ecd,edf->ecf", xe, p["wi"],
-                   preferred_element_type=jnp.float32)
+    # ---- expert FFN (gated) — the derived expert-GEMM schedule, batched
+    # over the lifted expert axis (repro.kernels.ops.expert_matmul)
+    h = ops.expert_matmul(xe, p["wi"], out_dtype=jnp.float32)
     u, v = jnp.split(h, 2, axis=-1)
     h = (_gate_act(cfg, u) * v).astype(x.dtype)
     h = constrain(h, "experts", None, "moe_ff")
-    ye = jnp.einsum("ecf,efd->ecd", h, p["wo"],
-                    preferred_element_type=jnp.float32).astype(x.dtype)
+    ye = ops.expert_matmul(h, p["wo"], out_dtype=x.dtype)
     ye = constrain(ye, "experts", None, None)
 
     # ---- combine ----
@@ -121,12 +122,10 @@ def _apply_moe_global(p: dict, x: jax.Array, cfg: ArchConfig
     y = constrain(y, "batch", None, None)
 
     if cfg.n_shared_experts:
-        hs = jnp.einsum("bsd,df->bsf", x, p["shared_wi"],
-                        preferred_element_type=jnp.float32)
+        hs = ops.matmul(x, p["shared_wi"], out_dtype=jnp.float32)
         us, vs = jnp.split(hs, 2, axis=-1)
         hs = (_gate_act(cfg, us) * vs).astype(x.dtype)
-        y = y + jnp.einsum("bsf,fd->bsd", hs, p["shared_wo"],
-                           preferred_element_type=jnp.float32).astype(x.dtype)
+        y = y + ops.matmul(hs, p["shared_wo"], out_dtype=x.dtype)
 
     dropped = 1.0 - jnp.sum(keep) / (t * k)
     return y, MoEStats(aux, z, dropped)
@@ -168,7 +167,8 @@ def _apply_moe_shardmap(p: dict, x: jax.Array, cfg: ArchConfig, mesh
         bl, sl, _ = x_blk.shape
         tl = bl * sl
         xt = x_blk.reshape(tl, d)
-        logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), router)
+        logits = ops.matmul(xt.astype(jnp.float32), router,
+                            out_dtype=jnp.float32)
         probs = jax.nn.softmax(logits, axis=-1)
         gate_vals, idx = jax.lax.top_k(probs, k)
         gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
@@ -196,12 +196,10 @@ def _apply_moe_shardmap(p: dict, x: jax.Array, cfg: ArchConfig, mesh
         xe = xe.at[slot].add(jnp.where(keep[:, None], xt[st], 0))
         xe = xe[:-1].reshape(e_loc, cap, d)
 
-        h = jnp.einsum("ecd,edf->ecf", xe, wi,
-                       preferred_element_type=jnp.float32)
+        h = ops.expert_matmul(xe, wi, out_dtype=jnp.float32)
         u, v = jnp.split(h, 2, axis=-1)
         h = (_gate_act(cfg, u) * v).astype(x.dtype)
-        ye = jnp.einsum("ecf,efd->ecd", h, wo,
-                        preferred_element_type=jnp.float32).astype(x.dtype)
+        ye = ops.expert_matmul(h, wo, out_dtype=x.dtype)
 
         contrib = jnp.concatenate([ye.reshape(e_loc * cap, d),
                                    jnp.zeros((1, d), x.dtype)])[slot]
@@ -223,7 +221,7 @@ def _apply_moe_shardmap(p: dict, x: jax.Array, cfg: ArchConfig, mesh
     # checkpoint INSIDE the shard_map: outer remat treats the shard_map call
     # as opaque and would otherwise save every internal expert intermediate
     # (measured: 0.94 GiB f32 per layer on llama4-scout)
-    y, aux, z, dropped = jax.shard_map(
+    y, aux, z, dropped = shard_map(
         jax.checkpoint(body), mesh=mesh,
         in_specs=(P(batch_spec, None, None), P(None, None),
                   P("model", None, None), P("model", None, None)),
@@ -232,12 +230,10 @@ def _apply_moe_shardmap(p: dict, x: jax.Array, cfg: ArchConfig, mesh
     )(x, p["router"], p["wi"], p["wo"])
 
     if cfg.n_shared_experts:
-        hs = jnp.einsum("bsd,df->bsf", x, p["shared_wi"],
-                        preferred_element_type=jnp.float32)
+        hs = ops.matmul(x, p["shared_wi"], out_dtype=jnp.float32)
         us, vs = jnp.split(hs, 2, axis=-1)
         hs = (_gate_act(cfg, us) * vs).astype(x.dtype)
-        y = y + jnp.einsum("bsf,fd->bsd", hs, p["shared_wo"],
-                           preferred_element_type=jnp.float32).astype(x.dtype)
+        y = y + ops.matmul(hs, p["shared_wo"], out_dtype=x.dtype)
     return y, MoEStats(aux, z, dropped)
 
 

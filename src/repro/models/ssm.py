@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import constrain
+from repro.kernels import ops
 from repro.models.common import ArchConfig, Collector
 
 
@@ -141,8 +142,7 @@ def apply_mamba2(p: dict, x: jax.Array, cfg: ArchConfig) -> tuple[jax.Array, SSM
     b, s, d = x.shape
     din, h, n = d_inner(cfg), n_ssd_heads(cfg), cfg.ssm_state
     hp = cfg.ssm_head_dim
-    zxbcdt = jnp.einsum("bsd,de->bse", x, p["w_in"],
-                        preferred_element_type=jnp.float32).astype(x.dtype)
+    zxbcdt = ops.matmul(x, p["w_in"], out_dtype=x.dtype)
     z, xbc, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * n], axis=-1)
     xbc = _causal_conv(xbc, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype))
     xbc = jax.nn.silu(xbc)
@@ -160,11 +160,10 @@ def apply_mamba2(p: dict, x: jax.Array, cfg: ArchConfig) -> tuple[jax.Array, SSM
     yf = y.astype(jnp.float32)
     y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
          * p["norm_scale"].astype(jnp.float32)).astype(x.dtype)
-    out = jnp.einsum("bse,ed->bsd", y, p["w_out"],
-                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = ops.matmul(y, p["w_out"], out_dtype=x.dtype)
     # cache: last conv_width-1 pre-conv inputs + final state
-    pre = jnp.einsum("bsd,de->bse", x[:, -(cfg.conv_width - 1):], p["w_in"],
-                     preferred_element_type=jnp.float32).astype(x.dtype)
+    pre = ops.matmul(x[:, -(cfg.conv_width - 1):], p["w_in"],
+                     out_dtype=x.dtype)
     conv_tail = pre[..., din:2 * din + 2 * n]
     return out, SSMCache(conv=conv_tail, state=final)
 
@@ -175,8 +174,7 @@ def decode_mamba2(p: dict, x: jax.Array, cache: SSMCache, cfg: ArchConfig
     b, _, d = x.shape
     din, h, n = d_inner(cfg), n_ssd_heads(cfg), cfg.ssm_state
     hp = cfg.ssm_head_dim
-    zxbcdt = jnp.einsum("bsd,de->bse", x, p["w_in"],
-                        preferred_element_type=jnp.float32).astype(x.dtype)
+    zxbcdt = ops.matmul(x, p["w_in"], out_dtype=x.dtype)
     z, xbc_new, dt = jnp.split(zxbcdt[:, 0], [din, 2 * din + 2 * n], axis=-1)
     # conv over (cached W-1 inputs, new input)
     hist = jnp.concatenate([cache.conv, xbc_new[:, None]], axis=1)  # (B,W,C)
@@ -197,8 +195,7 @@ def decode_mamba2(p: dict, x: jax.Array, cache: SSMCache, cfg: ArchConfig
     yf = y.astype(jnp.float32)
     y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
          * p["norm_scale"].astype(jnp.float32)).astype(x.dtype)
-    out = jnp.einsum("be,ed->bd", y, p["w_out"],
-                     preferred_element_type=jnp.float32).astype(x.dtype)[:, None]
+    out = ops.matmul(y, p["w_out"], out_dtype=x.dtype)[:, None]
     new_conv = hist[:, 1:]
     return out, SSMCache(conv=new_conv, state=state)
 

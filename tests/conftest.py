@@ -1,0 +1,6 @@
+"""Make the shared test helpers (``_hypothesis_compat``) importable from
+every test directory, including ``tests/kernels``."""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

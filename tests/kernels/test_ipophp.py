@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ops, ref
 
@@ -64,6 +64,26 @@ def test_kron_mixed_product_property():
 @given(st.integers(1, 16), st.integers(1, 16), st.integers(0, 999))
 def test_hadamard_random(m, n, seed):
     a = jax.random.normal(jax.random.PRNGKey(seed), (m, n), jnp.float32)
+    got = ops.hadamard(a, a, interpret=True)
+    assert _err(got, a * a) < 1e-5
+
+
+@pytest.mark.parametrize("mode,shape_b", [("ip", (20, 24)), ("op", (8, 16)),
+                                          ("hp", (12, 20)), ("kp", (8, 16))])
+def test_ipophp_smoke_no_hypothesis(mode, shape_b):
+    """Plain-pytest smoke for every ipophp mode, so the unified-circuit path
+    runs even where hypothesis is unavailable (never silently skipped)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    a = jax.random.normal(k1, (12, 20), jnp.float32)
+    b = a if mode == "hp" else jax.random.normal(k2, shape_b, jnp.float32)
+    got = ops.ipophp(a, b, mode, interpret=True)
+    want = ref.ipophp_ref(a, b, mode)
+    assert got.shape == want.shape
+    assert _err(got, want) < 1e-3
+
+
+def test_hadamard_smoke_no_hypothesis():
+    a = jax.random.normal(jax.random.PRNGKey(11), (9, 33), jnp.float32)
     got = ops.hadamard(a, a, interpret=True)
     assert _err(got, a * a) < 1e-5
 

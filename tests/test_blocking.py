@@ -2,7 +2,7 @@
 import dataclasses
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import blocking
 from repro.core.lifting import TPU_V5E, V100

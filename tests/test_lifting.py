@@ -1,6 +1,6 @@
 """Dimension lifting: factorization invariants + emitters."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import lifting
 from repro.core.lifting import TPU_V5E, TPU_V5E_2POD, lift, lift_shape

@@ -1,7 +1,7 @@
 """Property tests for the MoA algebra core (shapes, psi, gamma, ONF)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import moa, onf
 
@@ -121,6 +121,27 @@ def test_moa_inner_loop_is_contiguous_and_classical_is_not():
     # and the modeled line traffic is strictly lower for MoA
     assert (moa.cacheline_traffic(moa.moa_access_trace(m, n, p), m, n, p)
             < moa.cacheline_traffic(moa.classical_access_trace(m, n, p), m, n, p))
+
+
+@pytest.mark.parametrize("m,n,p", [(4, 4, 16), (8, 8, 8), (16, 32, 64),
+                                   (64, 64, 64)])
+def test_cacheline_traffic_ratio_pinned(m, n, p):
+    """MoA's contiguous inner loop moves (1+1)/line lines per iteration;
+    classical moves 1/line for A plus a full min(p, line)-elem burst for B's
+    strided column walk.  Ratio classical/moa == (1 + min(p, line)) / 2."""
+    line = 8
+    moa_t = moa.cacheline_traffic(moa.moa_access_trace(m, n, p), m, n, p, line)
+    cls_t = moa.cacheline_traffic(moa.classical_access_trace(m, n, p), m, n, p,
+                                  line)
+    inner = m * n * p
+    assert moa_t == 2 * inner // line
+    assert cls_t == inner // line + inner * min(p, line) // line
+    assert cls_t / moa_t == pytest.approx((1 + min(p, line)) / 2)
+
+
+def test_cacheline_traffic_zero_stride_is_free():
+    t = moa.AccessTrace("held", 0, 0, 0)
+    assert moa.cacheline_traffic(t, 8, 8, 8) == 0
 
 
 def test_moa_unified_ops_oracles():
