@@ -1,10 +1,13 @@
-"""Derived-schedule kernels vs the legacy hand-written ones vs jnp.dot.
+"""Derived-schedule kernels (expression-keyed) vs the jnp oracles.
 
 Seeds the perf trajectory for the Schedule subsystem: wall-clock on this host
 (interpret-mode Pallas on CPU — the correctness path; TPU is the perf target)
 plus the modeled TPU time/energy from ``core.energy`` for the block choice the
-schedule cache derived.  Also writes ``BENCH_schedule.json`` at the repo root
-so later PRs can diff the trajectory.
+schedule cache derived.  Rows cover the redesigned expression API: the plain
+derived GEMM, the transposed-operand ``matmul(transpose_b=True)`` schedule
+(column-gamma coefficients, no relayout copy) and the max-plus semiring
+through the same emitter.  Also writes ``BENCH_schedule.json`` at the repo
+root so later PRs can diff the trajectory.
 """
 from __future__ import annotations
 
@@ -15,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import time_fn
+from repro.core import expr as E
 from repro.core import schedule as sched
 from repro.core.energy import gemm_energy
 from repro.core.hardware import get_entry
@@ -32,29 +36,55 @@ def run():
         k1, k2 = jax.random.split(jax.random.PRNGKey(0))
         a = jax.random.normal(k1, (m, k), jnp.float32)
         b = jax.random.normal(k2, (k, n), jnp.float32)
+        bt = jax.random.normal(k2, (n, k), jnp.float32)
         tag = f"schedule/gemm_{m}x{k}x{n}"
         us_derived = time_fn(lambda: ops.moa_gemm(a, b, interpret=True),
                              warmup=1, iters=3)
-        us_legacy = time_fn(lambda: ops.moa_gemm(a, b, interpret=True,
-                                                 legacy=True),
-                            warmup=1, iters=3)
         us_xla = time_fn(jax.jit(lambda x, y: jnp.dot(x, y)), a, b)
+        us_tb = time_fn(lambda: ops.matmul(a, bt, transpose_b=True,
+                                           interpret=True),
+                        warmup=1, iters=3)
+        us_tb_xla = time_fn(jax.jit(
+            lambda x, y: jnp.einsum("mk,nk->mn", x, y)), a, bt)
+        us_maxplus = time_fn(lambda: ops.semiring_matmul(
+            a, b, plus="max", times="add", interpret=True), warmup=1, iters=3)
+        us_maxplus_xla = time_fn(jax.jit(
+            lambda x, y: jnp.max(x[:, :, None] + y[None, :, :], axis=1)),
+            a, b)
 
-        bundle = sched.get_schedule("gemm", (m, k, n), "float32", entry)
+        bundle = sched.get_schedule(E.matmul_expr(m, k, n), dtype="float32",
+                                    hardware=entry)
         rep = gemm_energy(m, k, n, bundle.blocks, "float32",
                           hardware=entry.shape)
         derived = (f"blocks={bundle.blocks.as_tuple()} "
                    f"modeled_t={rep.time_s:.3e}s E={rep.energy_J:.3e}J")
+        tb_bundle = sched.get_schedule(
+            E.matmul_expr(m, k, n, transpose_b=True), dtype="float32",
+            hardware=entry)
+        mp_bundle = sched.get_schedule(
+            E.inner("max", "add", E.arr("A", (m, k)), E.arr("B", (k, n))),
+            dtype="float32", hardware=entry)
         rows.append((f"{tag}/derived", us_derived, derived))
-        rows.append((f"{tag}/legacy", us_legacy, "hand-written cross-check"))
         rows.append((f"{tag}/jnp_dot", us_xla, "XLA oracle"))
+        rows.append((f"{tag}/matmul_transpose_b", us_tb,
+                     "derived transposed-operand (column-gamma, no copy)"))
+        rows.append((f"{tag}/transpose_b_jnp", us_tb_xla, "XLA dot_general"))
+        rows.append((f"{tag}/maxplus", us_maxplus,
+                     "tropical semiring, same emitter"))
+        rows.append((f"{tag}/maxplus_jnp", us_maxplus_xla,
+                     "XLA broadcast+fold oracle"))
         records.append({
             "shape": [m, k, n],
             "us_derived_interpret": us_derived,
-            "us_legacy_interpret": us_legacy,
             "us_jnp_dot": us_xla,
+            "us_transpose_b_interpret": us_tb,
+            "us_transpose_b_jnp": us_tb_xla,
+            "us_maxplus_interpret": us_maxplus,
+            "us_maxplus_jnp": us_maxplus_xla,
             "blocks": list(bundle.blocks.as_tuple()),
             "grid": list(bundle.schedule.grid_extents),
+            "transpose_b_blocks": list(tb_bundle.blocks.as_tuple()),
+            "maxplus_blocks": list(mp_bundle.blocks.as_tuple()),
             "modeled_time_s": rep.time_s,
             "modeled_energy_J": rep.energy_J,
             "modeled_power_W": rep.power_W,

@@ -20,7 +20,7 @@ SECTIONS = [
     ("paper_figs9-11_energy", "benchmarks.bench_energy_model"),
     ("paper_refs29-30_moa_vs_classical", "benchmarks.bench_moa_vs_classical"),
     ("kernels", "benchmarks.bench_kernels"),
-    ("schedule_derived_vs_legacy", "benchmarks.bench_schedule"),
+    ("schedule_derived_vs_oracle", "benchmarks.bench_schedule"),
     ("paper_table1_roofline", "benchmarks.bench_roofline"),
 ]
 

@@ -96,6 +96,25 @@ def gamma_row_inverse(offset: int, shape: Sequence[int]) -> Index:
     return tuple(reversed(idx))
 
 
+def gamma_col_inverse(offset: int, shape: Sequence[int]) -> Index:
+    """Inverse of gamma_col: flat offset -> Cartesian index.
+
+    The column-major dual of ``gamma_row_inverse`` — axis 0 varies fastest.
+    Transposed-operand schedules rely on this round-trip:
+    ``gamma_col(i; s) == gamma_row(reverse(i); reverse(s))``, so a stored
+    row-major (n, k) array read through its transpose is exactly a
+    column-major (k, n) view, and recovering Cartesian indices from flat
+    offsets must invert that layout."""
+    n = pi(shape)
+    if not 0 <= offset < max(n, 1):
+        raise IndexError(f"offset {offset} out of range for shape {tuple(shape)}")
+    idx = []
+    for s in tuple(shape):
+        idx.append(offset % s)
+        offset //= s
+    return tuple(idx)
+
+
 def gamma_blocked(idx: Sequence[int], shape: Sequence[int], block: Sequence[int]) -> int:
     """Blocked (tiled) layout: the offset after dimension-lifting each axis
     ``d -> (d // b, b)`` and laying out *blocks* row-major, each block
@@ -208,7 +227,7 @@ def kron(a, b) -> np.ndarray:
 
 # ---------------------------------------------------------------------------
 # ONF GEMM — the paper's eq. (3), executed literally over flat buffers.
-# This is the *semantic reference* for kernels/moa_gemm (slow, exact).
+# This is the *semantic reference* for the derived GEMM kernels (slow, exact).
 # ---------------------------------------------------------------------------
 
 def onf_gemm(a_flat: np.ndarray, b_flat: np.ndarray, m: int, n: int, p: int) -> np.ndarray:

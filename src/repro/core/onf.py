@@ -18,11 +18,13 @@ documentation/debug.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
-from typing import Callable, Optional, Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 
+from repro.core import semiring
 from repro.core.lifting import LiftedAxis, lift
 from repro.core.moa import pi
 
@@ -38,12 +40,15 @@ class Loop:
 
 @dataclass(frozen=True)
 class Access:
-    """Flat affine access  base[ sum_i coeff[index_i] * index_i ]."""
+    """Flat affine access  base[ const + sum_i coeff[index_i] * index_i ].
+
+    ``const`` carries psi views (leading indices fixed to constants)."""
     array: str
     coeffs: dict[str, int]
+    const: int = 0
 
     def offset(self, env: dict[str, int]) -> int:
-        return sum(c * env[i] for i, c in self.coeffs.items())
+        return self.const + sum(c * env[i] for i, c in self.coeffs.items())
 
     def stride_in(self, index: str) -> int:
         return self.coeffs.get(index, 0)
@@ -51,31 +56,75 @@ class Access:
     def render(self) -> str:
         terms = [f"({c}*{i})" if c != 1 else i
                  for i, c in self.coeffs.items() if c != 0]
+        if self.const:
+            terms.append(str(self.const))
         return f"{self.array}[{' + '.join(terms) if terms else '0'}]"
 
 
 @dataclass(frozen=True)
 class Onf:
-    """out[...] (+)= f(in_0[...], in_1[...]) over the loop nest."""
+    """out[...] (reduce)= combine(in_0[...], in_1[...]) over the loop nest.
+
+    ``combine`` / ``reduce_op`` are names in the ``core.semiring`` registry
+    ("mul"/"add" is the linear inner product; "add"/"max" is max-plus), so a
+    normal form names its semiring symbolically and every emitter — the numpy
+    oracle here, the Pallas emitter in ``kernels/emit.py`` — resolves it
+    locally.
+    """
     name: str
     loops: tuple[Loop, ...]
     out: Access
     ins: tuple[Access, ...]
     reduce_indices: frozenset[str] = frozenset()
-    combine: Callable = np.multiply
+    combine: str = "mul"
+    reduce_op: str = "add"
+
+    @property
+    def identity(self) -> float:
+        """The reduce op's unit — what the output accumulator starts at."""
+        return semiring.reduce_def(self.reduce_op).identity
+
+    def init_out(self, n: int, dtype=np.float32) -> np.ndarray:
+        """A fresh accumulator buffer for ``execute`` (identity-filled)."""
+        return np.full(n, self.identity if self.reduce_indices else 0.0,
+                       dtype=dtype)
+
+    def key(self) -> tuple:
+        """Canonical hashable normal-form key: loops, accesses, semiring.
+
+        Two expressions with the same key derive the same schedule — this is
+        what the schedule cache is keyed on.  Loop index names are
+        canonicalized positionally (``L0, L1, ...``) so a normal form's
+        identity does not depend on how its axes were *named*, only on the
+        nest's structure; ``name`` is display-only and excluded.
+        """
+        ren = {l.index: f"L{i}" for i, l in enumerate(self.loops)}
+
+        def acc(a: Access) -> tuple:
+            return (a.array,
+                    tuple(sorted((ren[s], c) for s, c in a.coeffs.items())),
+                    a.const)
+
+        return (tuple((ren[l.index], l.extent, l.resource)
+                      for l in self.loops),
+                acc(self.out), tuple(acc(a) for a in self.ins),
+                tuple(sorted(ren[s] for s in self.reduce_indices)),
+                self.combine, self.reduce_op)
 
     # -- emitter (a): executable oracle ------------------------------------
     def execute(self, out_flat: np.ndarray, *in_flats: np.ndarray) -> np.ndarray:
+        comb = semiring.combine_def(self.combine).np_fn
+        red = semiring.reduce_def(self.reduce_op).np_fn
         out = np.array(out_flat, copy=True)
         extents = [l.extent for l in self.loops]
         names = [l.index for l in self.loops]
         for flat in np.ndindex(*extents):
             env = dict(zip(names, flat))
             vals = [f[a.offset(env)] for f, a in zip(in_flats, self.ins)]
-            v = self.combine(*vals) if len(vals) > 1 else vals[0]
+            v = functools.reduce(comb, vals)
             o = self.out.offset(env)
             if self.reduce_indices:
-                out[o] += v
+                out[o] = red(out[o], v)
             else:
                 out[o] = v
         return out
@@ -95,8 +144,12 @@ class Onf:
             tag = f"  /* lifted: {l.resource} */" if l.resource else ""
             lines.append(f"{indent}for ({l.index}=0; {l.index}<{l.extent}; {l.index}++){tag}")
             indent += "  "
-        op = "+=" if self.reduce_indices else "="
-        rhs = " * ".join(a.render() for a in self.ins)
+        if not self.reduce_indices:
+            op = "="
+        else:
+            op = "+=" if self.reduce_op == "add" else f"{self.reduce_op}="
+        glyph = {"mul": " * ", "add": " + "}.get(self.combine, f" {self.combine} ")
+        rhs = glyph.join(a.render() for a in self.ins)
         lines.append(f"{indent}{self.out.render()} {op} {rhs};")
         return "\n".join(lines)
 
@@ -107,25 +160,29 @@ class Onf:
 
 def gemm_onf(m: int, n: int, p: int) -> Onf:
     """Paper eq. (3): loops (i, k, j) so the innermost loop streams B and C
-    contiguously (fig 1 / ip.c of fig 3)."""
-    return Onf(
-        name="moa_gemm",
-        loops=(Loop("i", m), Loop("k", n), Loop("j", p)),
-        out=Access("C", {"i": p, "j": 1}),
-        ins=(Access("A", {"i": n, "k": 1}), Access("B", {"k": p, "j": 1})),
-        reduce_indices=frozenset({"k"}),
-    )
+    contiguously (fig 1 / ip.c of fig 3).
+
+    .. deprecated:: now a thin wrapper over the expression algebra —
+       compose ``expr.inner("add", "mul", ...)`` and ``expr.normalize``
+       directly; this alias is kept for one release.
+    """
+    from repro.core import expr as E
+    return E.normalize(E.inner("add", "mul", E.arr("A", (m, n)),
+                               E.arr("B", (n, p))),
+                       name="moa_gemm", out_axes=("i", "j"),
+                       reduce_axes=("k",))
 
 
 def gemm_classical_onf(m: int, n: int, p: int) -> Onf:
-    """Row-column baseline: loops (i, j, k); innermost strides B by p."""
-    return Onf(
-        name="classical_gemm",
-        loops=(Loop("i", m), Loop("j", p), Loop("k", n)),
-        out=Access("C", {"i": p, "j": 1}),
-        ins=(Access("A", {"i": n, "k": 1}), Access("B", {"k": p, "j": 1})),
-        reduce_indices=frozenset({"k"}),
-    )
+    """Row-column baseline: loops (i, j, k); innermost strides B by p.
+
+    .. deprecated:: thin wrapper — the same normal form as ``gemm_onf``
+       with the sigma loop rotated innermost (``reorder_loops``).
+    """
+    import dataclasses
+    return reorder_loops(
+        dataclasses.replace(gemm_onf(m, n, p), name="classical_gemm"),
+        ("i", "j", "k"))
 
 
 def lift_loop(onf: Onf, index: str, factor: int, resource: str,
@@ -161,7 +218,7 @@ def lift_loop(onf: Onf, index: str, factor: int, resource: str,
         k = c.pop(index)
         c[index + "_o"] = k * inner_extent
         c[index + "_i"] = k
-        return Access(a.array, c)
+        return Access(a.array, c, a.const)
 
     red = set(onf.reduce_indices)
     if index in red:
@@ -169,7 +226,18 @@ def lift_loop(onf: Onf, index: str, factor: int, resource: str,
         red |= {index + "_o", index + "_i"}
     return Onf(onf.name + f"+lift({index},{resource})", tuple(loops),
                rewrite(onf.out), tuple(rewrite(a) for a in onf.ins),
-               frozenset(red), onf.combine)
+               frozenset(red), onf.combine, onf.reduce_op)
+
+
+def reorder_loops(onf: Onf, order: Sequence[str]) -> Onf:
+    """Permute the (sequential) loop nest — accesses are order-independent;
+    only the streaming pattern (innermost strides) changes."""
+    by_name = {l.index: l for l in onf.loops}
+    if sorted(order) != sorted(by_name):
+        raise ValueError(f"order {tuple(order)} does not permute "
+                         f"{tuple(by_name)}")
+    return Onf(onf.name, tuple(by_name[i] for i in order), onf.out, onf.ins,
+               onf.reduce_indices, onf.combine, onf.reduce_op)
 
 
 def gemm_lifted_rows(m: int, n: int, p: int, np_procs: int) -> Onf:
@@ -202,15 +270,15 @@ def expert_gemm_onf(e: int, cap: int, d: int, f: int) -> Onf:
         C[(ee*cap + i)*f + j] += X[(ee*cap + i)*d + k] * W[(ee*d + k)*f + j]
 
     The expert axis ``ee`` batches ``e`` independent MoA GEMMs over flat
-    row-major (E, cap, d) / (E, d, f) / (E, cap, f) buffers."""
-    return Onf(
-        name="expert_gemm",
-        loops=(Loop("e", e), Loop("i", cap), Loop("k", d), Loop("j", f)),
-        out=Access("C", {"e": cap * f, "i": f, "j": 1}),
-        ins=(Access("X", {"e": cap * d, "i": d, "k": 1}),
-             Access("W", {"e": d * f, "k": f, "j": 1})),
-        reduce_indices=frozenset({"k"}),
-    )
+    row-major (E, cap, d) / (E, d, f) / (E, cap, f) buffers.
+
+    .. deprecated:: thin wrapper — a batched generalized inner product,
+       ``expr.inner("add", "mul", X, W, batch=1)``.
+    """
+    from repro.core import expr as E
+    return E.normalize(E.expert_gemm_expr(e, cap, d, f),
+                       name="expert_gemm", out_axes=("e", "i", "j"),
+                       reduce_axes=("k",))
 
 
 def expert_gemm_fully_lifted(e: int, cap: int, d: int, f: int, *, bm: int,
@@ -228,13 +296,13 @@ def expert_gemm_fully_lifted(e: int, cap: int, d: int, f: int, *, bm: int,
 
 def hadamard_onf(m: int, n: int) -> Onf:
     """Elementwise product — the contraction-degenerate member of the unified
-    ipophp circuit: same nest shape, empty reduce set."""
-    return Onf(
-        name="hadamard",
-        loops=(Loop("i", m), Loop("j", n)),
-        out=Access("C", {"i": n, "j": 1}),
-        ins=(Access("A", {"i": n, "j": 1}), Access("B", {"i": n, "j": 1})),
-    )
+    ipophp circuit: same nest shape, empty reduce set.
+
+    .. deprecated:: thin wrapper — ``expr.combine("mul", A, B)``.
+    """
+    from repro.core import expr as E
+    return E.normalize(E.hadamard_expr(m, n), name="hadamard",
+                       out_axes=("i", "j"))
 
 
 def hadamard_lifted(m: int, n: int, *, bm: int, bn: int) -> Onf:

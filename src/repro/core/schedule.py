@@ -2,32 +2,40 @@
 
 This is the paper's missing executable link: "code was derived from the MoA
 expression's normal form" — here literally.  ``derive_schedule`` consumes a
-*lifted* ``Onf`` (the symbolic artifact of ``lift_loop``/``gemm_fully_lifted``)
-plus a ``HardwareShape`` and computes everything a ``pl.pallas_call`` needs:
+*lifted* ``Onf`` (the symbolic artifact of ``lift_loop`` over a normalized
+expression) plus a ``HardwareShape`` and computes everything a
+``pl.pallas_call`` needs:
 
 * grid extents — the resource-tagged loops, parallel resources first,
   sigma-block (reduction) loops last;
 * per-operand block shapes and index maps — recovered from the affine
-  ``Access`` coefficients (each operand must be a dense row-major view of its
-  loop axes, which the derivation *verifies*, it does not assume);
+  ``Access`` coefficients (each operand must be a dense view of its loop
+  axes through *some* gamma — row- or column-major — which the derivation
+  *verifies*, it does not assume: a transposed operand simply presents its
+  axes in the other order);
 * ``dimension_semantics`` — "proc"/"vector"/"grid"/"expert" resources are
   parallel, "block" (the sigma loop) is arbitrary;
-* the f32 scratch accumulator implied by a lifted reduce axis.
+* the scratch accumulator implied by a lifted reduce axis, initialized to
+  the reduce op's identity (0 for add, -inf for max-plus).
 
 ``kernels/emit.py`` turns a ``Schedule`` into an executable kernel.  This
 module is pure Python + dataclasses (no jax import), so deriving schedules
-never touches device state, and a process-wide LRU cache keyed on
-``(op, shapes, dtype, hardware)`` makes repeated derivation (and the brute
-force ``solve_blocks`` search inside it) free on hot serving/training paths.
+never touches device state, and a process-wide LRU cache keyed on the
+*expression's normal form* (``Onf.key()``) makes repeated derivation (and
+the brute force ``solve_blocks`` search inside it) free on hot
+serving/training paths.  The old string-keyed ``get_schedule("gemm", ...)``
+signature is kept for one release behind a ``DeprecationWarning``.
 """
 from __future__ import annotations
 
 import string
 import threading
+import warnings
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Optional
+from typing import Optional, Union
 
+from repro.core import expr as expr_mod
 from repro.core import onf as onf_mod
 from repro.core.blocking import BlockChoice, solve_blocks, _dtype_size
 from repro.core.lifting import HardwareShape
@@ -70,8 +78,10 @@ class Schedule:
     grid: tuple[GridAxis, ...]
     ins: tuple[OperandSpec, ...]
     out: OperandSpec
-    contracted: tuple[str, ...]          # logical axes summed inside a block
+    contracted: tuple[str, ...]          # logical axes reduced inside a block
     reduce_grid_dim: Optional[int]       # grid axis accumulated across steps
+    combine: str = "mul"                 # semiring pairing (core.semiring)
+    reduce_op: str = "add"               # semiring accumulation
 
     @property
     def grid_extents(self) -> tuple[int, ...]:
@@ -177,6 +187,10 @@ def derive_schedule(o: "onf_mod.Onf", hardware: Optional[HardwareShape] = None,
         grid_pos[g.base] = i
 
     def _operand(a: "onf_mod.Access") -> OperandSpec:
+        if a.const:
+            raise ValueError(
+                f"{a.array}: constant offset {a.const} (a psi view) has no "
+                "BlockSpec lowering — materialize the view before scheduling")
         strides: dict[str, int] = {}
         for idx, c in a.coeffs.items():
             if c == 0:
@@ -220,7 +234,7 @@ def derive_schedule(o: "onf_mod.Onf", hardware: Optional[HardwareShape] = None,
     reduce_grid_dim = reduce_dims[0] if reduce_dims else None
 
     sched = Schedule(o.name, grid, in_specs, out_spec, contracted,
-                     reduce_grid_dim)
+                     reduce_grid_dim, o.combine, o.reduce_op)
     if hardware is not None:
         ws = sched.vmem_bytes(dtype)
         if ws > hardware.vmem.capacity_bytes:
@@ -247,18 +261,23 @@ def _pad(x: int, mult: int) -> int:
 
 
 # ---------------------------------------------------------------------------
-# the process-wide schedule cache
+# the process-wide schedule cache — keyed on expression normal forms
 # ---------------------------------------------------------------------------
 
 @dataclass(frozen=True)
 class ScheduleBundle:
-    """A cached derivation: the schedule plus the block choice and padded
-    problem dims the wrapper needs for pad/slice."""
+    """A cached derivation: the schedule plus the block choice and shapes the
+    executor needs for pad/slice.  ``schedule.ins[i].shape`` is the padded
+    *storage* shape operand ``i`` must be padded to; ``in_shapes`` are the
+    logical storage shapes callers bind (a col-layout leaf's is reversed);
+    ``out_shape`` the logical result shape."""
     op: str
     schedule: Schedule
     blocks: Optional[BlockChoice]
-    shapes: tuple[int, ...]          # logical (caller) shapes
-    padded: tuple[int, ...]          # block-multiple problem dims
+    shapes: tuple[int, ...]          # logical loop extents (out + reduce)
+    padded: tuple[int, ...]          # same, padded to block multiples
+    out_shape: tuple[int, ...] = ()
+    in_shapes: tuple[tuple[int, ...], ...] = ()
 
 
 SCHEDULE_CACHE_SIZE = 256
@@ -281,60 +300,128 @@ def reset_schedule_cache() -> None:
             _stats[k] = 0
 
 
-def _build_gemm(shapes, dtype, hw_shape, blocks) -> ScheduleBundle:
-    m, k, n = shapes
-    if blocks is None:
-        _stats["solves"] += 1
-        blocks = default_gemm_blocks(m, k, n, dtype, hw_shape)
-    bm, bk, bn = blocks.as_tuple()
-    mp, kp, np_ = _pad(m, bm), _pad(k, bk), _pad(n, bn)
-    lifted = onf_mod.gemm_fully_lifted(mp, kp, np_, procs=mp // bm, bk=bk,
-                                       bn=bn)
-    return ScheduleBundle("gemm", derive_schedule(lifted, hw_shape, dtype),
-                          blocks, shapes, (mp, kp, np_))
+#: alignment for the last (lane) and second-minor axes when a non-solver
+#: block policy applies (elementwise nests, semiring contractions)
+_LANE, _SUBLANE = 128, 8
 
 
-def _build_expert_gemm(shapes, dtype, hw_shape, blocks) -> ScheduleBundle:
-    e, cap, d, f = shapes
-    if blocks is None:
-        _stats["solves"] += 1
-        blocks = default_gemm_blocks(cap, d, f, dtype, hw_shape)
-    bm, bk, bn = blocks.as_tuple()
-    cp, dp, fp = _pad(cap, bm), _pad(d, bk), _pad(f, bn)
-    lifted = onf_mod.expert_gemm_fully_lifted(e, cp, dp, fp, bm=bm, bk=bk,
-                                              bn=bn)
-    return ScheduleBundle("expert_gemm",
-                          derive_schedule(lifted, hw_shape, dtype),
-                          blocks, shapes, (e, cp, dp, fp))
+def _build_bundle(nf: "expr_mod.NormalForm", dtype, hw_shape,
+                  blocks) -> ScheduleBundle:
+    """Pad, lift and derive a schedule for any normalized expression.
+
+    The policy generalizes the paper's fig-2 lifting: leading output axes
+    lift fully onto "proc" resources (each grid cell independent), the
+    trailing two output axes lift blockwise onto "proc"/"vector", and the
+    first contraction axis lifts onto the sigma "block" resource.  Block
+    extents come from ``solve_blocks`` for the (mul, add) semiring; other
+    semirings use fixed MXU-aligned tiles (their in-block combine
+    materializes a (bm, bn, bk) intermediate, so tiles stay small).
+    """
+    ext = nf.extent_map
+    out_syms, red_syms = nf.out_axes, nf.reduce_axes
+    msym = out_syms[-2] if len(out_syms) >= 2 else None
+    nsym = out_syms[-1] if out_syms else None
+    pads: dict[str, int] = {}
+    if red_syms:
+        ksym = red_syms[0]
+        m = ext[msym] if msym else 1
+        n = ext[nsym] if nsym else 1
+        k = ext[ksym]
+        if blocks is None:
+            if nf.combine == "mul" and nf.reduce_op == "add":
+                _stats["solves"] += 1
+                blocks = default_gemm_blocks(m, k, n, dtype, hw_shape)
+            else:
+                blocks = BlockChoice(min(_pad(m, _SUBLANE), _LANE),
+                                     min(_pad(k, _SUBLANE), _LANE),
+                                     min(_pad(n, _LANE), _LANE), 0, 0.0, 0.0)
+        bm, bk, bn = blocks.as_tuple()
+        if msym:
+            pads[msym] = _pad(m, bm)
+        if nsym:
+            pads[nsym] = _pad(n, bn)
+        pads[ksym] = _pad(k, bk)
+    else:
+        bm, bn = blocks if blocks is not None else (
+            min(_pad(ext[msym], _SUBLANE), 256) if msym else 1,
+            min(_pad(ext[nsym], _LANE), 256) if nsym else 1)
+        if msym:
+            pads[msym] = _pad(ext[msym], bm)
+        if nsym:
+            pads[nsym] = _pad(ext[nsym], bn)
+        blocks = None
+
+    lifted = nf.onf(pads)
+    for s in out_syms[:-2]:
+        lifted = onf_mod.lift_loop(lifted, s, ext[s], "proc")
+    if msym:
+        lifted = onf_mod.lift_loop(lifted, msym, pads[msym] // bm, "proc")
+    if nsym:
+        lifted = onf_mod.lift_loop(lifted, nsym, pads[nsym] // bn, "vector")
+    if red_syms:
+        lifted = onf_mod.lift_loop(lifted, red_syms[0],
+                                   pads[red_syms[0]] // bk, "block")
+
+    order = out_syms + red_syms
+    logical = tuple(ext[s] for s in order)
+    padded = tuple(pads.get(s, ext[s]) for s in order)
+    return ScheduleBundle(nf.name, derive_schedule(lifted, hw_shape, dtype),
+                          blocks, logical, padded,
+                          nf.out_shape(), nf.leaf_storage_shapes())
 
 
-def _build_hadamard(shapes, dtype, hw_shape, blocks) -> ScheduleBundle:
-    m, n = shapes
-    bm, bn = blocks                   # a (bm, bn) tuple, not a BlockChoice
-    mp, np_ = _pad(m, bm), _pad(n, bn)
-    lifted = onf_mod.hadamard_lifted(mp, np_, bm=bm, bn=bn)
-    return ScheduleBundle("hadamard",
-                          derive_schedule(lifted, hw_shape, dtype),
-                          None, shapes, (mp, np_))
+#: the deprecated string ops, as the expressions they always were
+def _expr_for_op(op: str, shapes: tuple[int, ...]) -> "expr_mod.Expr":
+    if op == "gemm":
+        m, k, n = shapes
+        return expr_mod.matmul_expr(m, k, n)
+    if op == "expert_gemm":
+        return expr_mod.expert_gemm_expr(*shapes)
+    if op == "hadamard":
+        return expr_mod.hadamard_expr(*shapes)
+    raise ValueError(f"unknown schedule op {op!r}; known: "
+                     "['expert_gemm', 'gemm', 'hadamard']")
 
 
-_BUILDERS = {
-    "gemm": _build_gemm,
-    "expert_gemm": _build_expert_gemm,
-    "hadamard": _build_hadamard,
-}
+def get_schedule(op, shapes=None, dtype="float32", hardware=None,
+                 blocks=None) -> ScheduleBundle:
+    """LRU-cached schedule derivation keyed on the expression's normal form.
 
+    New signature::
 
-def get_schedule(op: str, shapes: tuple[int, ...], dtype,
-                 hardware, blocks=None) -> ScheduleBundle:
-    """LRU-cached schedule derivation keyed on ``(op, shapes, dtype,
-    hardware, blocks)``.  ``hardware`` may be a ``HardwareEntry`` (preferred —
-    its name keys the cache) or a bare ``HardwareShape``."""
+        get_schedule(expr, dtype=..., hardware=..., blocks=...)
+
+    where ``expr`` is a ``core.expr.Expr``: the cache key is
+    ``(normalize(expr).key(), dtype, hardware, blocks)`` — the normal form
+    IS the identity of the computation, so two expressions that psi-reduce
+    to the same loop nest (e.g. ``transpose(arr(..., "row"))`` and
+    ``arr(..., "col")``) share one derivation.
+
+    .. deprecated:: the string signature ``get_schedule("gemm", (m, k, n),
+       dtype, hardware)`` is kept for one release; it builds the equivalent
+       expression and lands on the same cache lines.
+
+    ``hardware`` may be a ``HardwareEntry`` (preferred — its name keys the
+    cache) or a bare ``HardwareShape``.
+    """
+    if isinstance(op, str):
+        warnings.warn(
+            "string-keyed get_schedule(op, shapes, ...) is deprecated; "
+            "compose a repro.core.expr expression and pass it directly",
+            DeprecationWarning, stacklevel=2)
+        op = _expr_for_op(op, tuple(shapes))
+        shapes = None
+    if shapes is not None:
+        raise TypeError("shapes is only valid with the deprecated string op")
+    if hardware is None:
+        raise TypeError("get_schedule requires a hardware entry/shape")
+    nf = op if isinstance(op, expr_mod.NormalForm) else expr_mod.normal_form(
+        op, name=getattr(op, "name", None) or "expr")
     hw_shape = getattr(hardware, "shape", hardware)
     hw_name = getattr(hardware, "name", None) or hw_shape.name
     dtype_key = str(dtype)
-    block_key = blocks if not isinstance(blocks, list) else tuple(blocks)
-    key = (op, tuple(shapes), dtype_key, hw_name, block_key)
+    block_key = tuple(blocks) if isinstance(blocks, (list, tuple)) else blocks
+    key = (nf.key(), dtype_key, hw_name, block_key)
     with _lock:
         hit = _cache.get(key)
         if hit is not None:
@@ -342,13 +429,7 @@ def get_schedule(op: str, shapes: tuple[int, ...], dtype,
             _cache.move_to_end(key)
             return hit
         _stats["misses"] += 1
-        try:
-            builder = _BUILDERS[op]
-        except KeyError:
-            raise ValueError(
-                f"unknown schedule op {op!r}; known: {sorted(_BUILDERS)}"
-            ) from None
-        bundle = builder(tuple(shapes), dtype_key, hw_shape, blocks)
+        bundle = _build_bundle(nf, dtype_key, hw_shape, blocks)
         _cache[key] = bundle
         while len(_cache) > SCHEDULE_CACHE_SIZE:
             _cache.popitem(last=False)

@@ -1,0 +1,106 @@
+"""The combine registry: pairing/accumulation operators for ONF loop nests.
+
+The paper's derivation never inspects *what* the loop body computes — only
+its access pattern.  The body is a semiring: a pairing ("combine") op applied
+across operands and an accumulation ("reduce") op folding the contraction
+axes.  ``(mul, add)`` is the linear-algebra inner product; ``(add, max)`` /
+``(add, min)`` are the tropical semirings (longest / shortest path), which
+route through the *same* ``normalize -> derive_schedule -> emit_pallas``
+pipeline because the access pattern is identical.
+
+This module is the registry both ends share: ``core.onf.Onf.execute`` (the
+numpy oracle) resolves names through ``np_combine``/``np_reduce``, and
+``kernels/emit.py`` resolves the same names to jnp callables by attribute
+(kept as strings here so core stays jax-free).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class CombineDef:
+    """A pairing operator: applied between operand elements."""
+    name: str
+    np_fn: Callable
+    jnp_name: str                  # attribute of jax.numpy (binary ufunc)
+
+
+@dataclass(frozen=True)
+class ReduceDef:
+    """An accumulation operator: folds a contraction axis.
+
+    ``identity`` is the fold's unit (0 for add, -inf for max); ``jnp_name``
+    the elementwise jnp binary, ``jnp_reducer`` the axis-reducing jnp call.
+    """
+    name: str
+    np_fn: Callable
+    identity: float
+    jnp_name: str                  # elementwise: "add" / "maximum" / "minimum"
+    jnp_reducer: str               # axis fold: "sum" / "max" / "min"
+
+
+_COMBINES: dict[str, CombineDef] = {}
+_REDUCES: dict[str, ReduceDef] = {}
+
+
+def register_combine(d: CombineDef) -> CombineDef:
+    _COMBINES[d.name] = d
+    return d
+
+
+def register_reduce(d: ReduceDef) -> ReduceDef:
+    _REDUCES[d.name] = d
+    return d
+
+
+def combine_def(name: str) -> CombineDef:
+    try:
+        return _COMBINES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown combine op {name!r}; registered: {sorted(_COMBINES)}"
+        ) from None
+
+
+def reduce_def(name: str) -> ReduceDef:
+    try:
+        return _REDUCES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown reduce op {name!r}; registered: {sorted(_REDUCES)}"
+        ) from None
+
+
+register_combine(CombineDef("mul", np.multiply, "multiply"))
+register_combine(CombineDef("add", np.add, "add"))
+
+register_reduce(ReduceDef("add", np.add, 0.0, "add", "sum"))
+register_reduce(ReduceDef("max", np.maximum, float("-inf"), "maximum", "max"))
+register_reduce(ReduceDef("min", np.minimum, float("inf"), "minimum", "min"))
+
+
+#: safe padding values per (combine, reduce): padding both operands of a
+#: contraction axis with ``v`` must contribute the reduce identity, i.e.
+#: combine(v, v) == identity(reduce).  (mul, add): 0*0 = 0; tropical
+#: (add, max): -inf + -inf = -inf; (add, min): inf + inf = inf.
+_PAD_VALUES = {
+    ("mul", "add"): 0.0,
+    ("add", "add"): 0.0,
+    ("add", "max"): float("-inf"),
+    ("add", "min"): float("inf"),
+}
+
+
+def pad_value(combine: str, reduce_op: str) -> float:
+    """The element to pad contraction axes with so padded blocks are inert."""
+    try:
+        return _PAD_VALUES[(combine, reduce_op)]
+    except KeyError:
+        raise ValueError(
+            f"no inert padding element known for semiring "
+            f"({combine!r}, {reduce_op!r}); pad operands to block multiples "
+            "by hand") from None

@@ -1,13 +1,14 @@
 """Pallas TPU kernels for the paper's compute hot-spot, now *derived*: every
 kernel's grid, BlockSpecs and semantics come from ``derive_schedule`` over a
-lifted ONF (``repro.core.schedule``) and the generic ``emit_pallas`` emitter.
-``ops`` holds the public jit wrappers (schedule cache + hardware-registry
-dispatch + the unified ``matmul``/``expert_matmul`` model entries); ``ref``
-the pure-jnp oracles; ``moa_gemm`` the legacy hand-written kernels kept one
-release as a cross-check (REPRO_LEGACY_KERNELS=1)."""
+normalized, lifted MoA expression (``repro.core.expr`` ->
+``repro.core.schedule``) and the generic ``emit_pallas`` emitter.  ``ops``
+holds the public jit wrappers — ``apply`` for arbitrary expressions, the
+schedule cache + hardware-registry dispatch, and the unified
+``matmul``/``expert_matmul``/``semiring_matmul`` model entries; ``ref`` the
+pure-jnp oracles (including the generic expression evaluator)."""
 from repro.kernels.ops import (  # noqa: F401
-    moa_gemm, expert_gemm, hadamard, outer, kron, ipophp,
-    matmul, expert_matmul,
+    apply, moa_gemm, expert_gemm, hadamard, outer, kron, ipophp,
+    matmul, expert_matmul, semiring_matmul,
 )
 from repro.kernels.emit import emit_pallas  # noqa: F401
 from repro.kernels import ref  # noqa: F401

@@ -1,13 +1,20 @@
 """Generic Pallas emitter: an executable kernel from a derived ``Schedule``.
 
-``emit_pallas(schedule, combine)`` is the single code generator behind
-``moa_gemm``, ``expert_gemm`` and ``hadamard``: the grid, BlockSpecs,
-dimension semantics and scratch accumulator all come from the schedule (which
-in turn was derived from the lifted ONF), so no kernel hand-writes its
-layout.  The in-block body is the einsum the schedule's axis structure
-implies — a plain MXU dot for GEMM, elementwise multiply for Hadamard, a
-batched dot for the lifted expert axis — with f32 accumulation across the
-sigma (reduce) grid steps, flushed to the output dtype on the last step.
+``emit_pallas(schedule)`` is the single code generator behind every derived
+op: the grid, BlockSpecs, dimension semantics and scratch accumulator all
+come from the schedule (which in turn was derived from the normalized, lifted
+expression), so no kernel hand-writes its layout.  The in-block body is the
+schedule's semiring:
+
+* ``(mul, add)`` — the einsum the axis structure implies (a plain MXU dot
+  for GEMM, elementwise multiply for Hadamard, a batched dot for the lifted
+  expert axis), with f32 accumulation across the sigma (reduce) grid steps;
+* any other registered combine/reduce pair (max-plus, min-plus) — operands
+  are aligned to (out axes + contracted axes), paired with the combine op,
+  folded with the reduce op in-block, and accumulated across sigma steps
+  with the same reduce op from its identity element.
+
+The accumulator flushes to the output dtype on the last sigma step.
 """
 from __future__ import annotations
 
@@ -16,12 +23,20 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import semiring
 from repro.core.schedule import Schedule
-from repro.kernels._compat import compiler_params
+
+# jax renamed TPUCompilerParams -> CompilerParams; support both so the
+# kernels run on every jax this repo targets.
+_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+
+def compiler_params(*, dimension_semantics) -> object:
+    return _PARAMS_CLS(dimension_semantics=tuple(dimension_semantics))
 
 
 def _index_map(grid_dims: tuple[Optional[int], ...]) -> Callable:
@@ -30,13 +45,14 @@ def _index_map(grid_dims: tuple[Optional[int], ...]) -> Callable:
     return imap
 
 
-def _is_multiply(combine) -> bool:
-    return combine is None or combine in (np.multiply, jnp.multiply)
+def _jnp_combine(name: str) -> Callable:
+    return getattr(jnp, semiring.combine_def(name).jnp_name)
 
 
-def _general_combine(schedule: Schedule, combine, vals):
-    """Fallback body for non-multiplicative combines: align every block to
-    (out axes + contracted axes), fold with ``combine``, sum the contraction."""
+def _general_combine(schedule: Schedule, combine_fn, reducer, vals):
+    """Body for non-(mul, add) semirings: align every block to (out axes +
+    contracted axes), pair with ``combine_fn``, fold the contraction with
+    the reduce op's axis reducer."""
     joint = tuple(schedule.out.axes) + tuple(schedule.contracted)
     aligned = []
     for opn, v in zip(schedule.ins, vals):
@@ -46,10 +62,10 @@ def _general_combine(schedule: Schedule, combine, vals):
             if ax not in src:
                 v = jnp.expand_dims(v, pos)
         aligned.append(v.astype(jnp.float32))
-    out = functools.reduce(combine, aligned)
+    out = functools.reduce(combine_fn, aligned)
     if schedule.contracted:
         red = tuple(range(len(schedule.out.axes), len(joint)))
-        out = jnp.sum(out, axis=red)
+        out = reducer(out, axis=red)
     return out
 
 
@@ -58,16 +74,25 @@ def emit_pallas(schedule: Schedule, combine=None, *, out_dtype=None,
     """Build the ``pl.pallas_call`` a schedule describes.
 
     Returns ``fn(*operands) -> out`` over arrays of exactly the schedule's
-    (padded) operand shapes.  ``combine`` is the ONF's pairing op; the default
-    (multiply) lowers to the einsum implied by the schedule's axes.
+    (padded) operand shapes.  ``combine`` overrides the schedule's pairing op
+    by name (it defaults to ``schedule.combine``, which ``derive_schedule``
+    copied from the expression's normal form).
     """
     ni = len(schedule.ins)
     out_dtype = jnp.dtype(out_dtype or jnp.float32)
     spec, in_keep = schedule.einsum_plan()
     red = schedule.reduce_grid_dim
     gk = schedule.grid[red].extent if red is not None else 0
-    multiplicative = _is_multiply(combine)
+    combine_name = combine or schedule.combine
+    reduce_name = schedule.reduce_op
+    multiplicative = (combine_name, reduce_name) == ("mul", "add")
     out_block = schedule.out.block
+    if not multiplicative:
+        combine_fn = _jnp_combine(combine_name)
+        rdef = semiring.reduce_def(reduce_name)
+        reducer = getattr(jnp, rdef.jnp_reducer)
+        acc_step = getattr(jnp, rdef.jnp_name)
+        identity = rdef.identity
 
     def body(*refs):
         o_ref = refs[ni]
@@ -79,7 +104,7 @@ def emit_pallas(schedule: Schedule, combine=None, *, out_dtype=None,
             val = jnp.einsum(spec, *squeezed,
                              preferred_element_type=jnp.float32)
         else:
-            val = _general_combine(schedule, combine,
+            val = _general_combine(schedule, combine_fn, reducer,
                                    [refs[i][...] for i in range(ni)])
         val = val.reshape(out_block)
         if red is None:
@@ -90,9 +115,15 @@ def emit_pallas(schedule: Schedule, combine=None, *, out_dtype=None,
 
             @pl.when(kk == 0)
             def _init():
-                acc_ref[...] = jnp.zeros_like(acc_ref)
+                if multiplicative:
+                    acc_ref[...] = jnp.zeros_like(acc_ref)
+                else:
+                    acc_ref[...] = jnp.full_like(acc_ref, identity)
 
-            acc_ref[...] += val
+            if multiplicative:
+                acc_ref[...] += val
+            else:
+                acc_ref[...] = acc_step(acc_ref[...], val)
 
             @pl.when(kk == gk - 1)
             def _flush():

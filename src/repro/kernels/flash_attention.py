@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels._compat import compiler_params
+from repro.kernels.emit import compiler_params
 
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 

@@ -2,12 +2,16 @@
 
 Execution pipeline — the paper's derivation end to end, per call:
 
-    shapes ──solve_blocks──► lifted ONF ──derive_schedule──► emit_pallas
+    expression ──normalize──► ONF ──lift/derive_schedule──► emit_pallas
 
-Every stage is cached: ``repro.core.schedule`` memoizes the derivation (and
-the brute-force block search inside it) on ``(op, shapes, dtype, hardware)``,
-and this module memoizes the emitted, jitted callables, so hot serving and
-training paths never re-derive.
+The unit of dispatch is a **MoA expression** (``repro.core.expr``), not a
+string op name: ``apply(expr, *arrays)`` runs any normalizable expression
+through the derived-schedule pipeline, and the familiar entries
+(``matmul``, ``expert_matmul``, ``moa_gemm``, ``hadamard``,
+``semiring_matmul``) are one-line expression builders on top of it.  The
+schedule cache (``repro.core.schedule``) is keyed on the expression's
+*normal form*, and this module memoizes the emitted, jitted callables on the
+same key, so hot serving and training paths never re-derive.
 
 Dispatch is registry-driven (``repro.core.hardware``): the entry detected
 once per process decides whether kernels compile (TPU), run through the
@@ -15,30 +19,28 @@ Pallas interpreter (CPU validation), or — for the high-level ``matmul`` /
 ``expert_matmul`` entries the models call — fall back to the XLA oracle with
 identical f32-accumulation semantics.
 
-The hand-written kernels remain available for one release as a numerical
-cross-check behind ``REPRO_LEGACY_KERNELS=1`` (or ``legacy=True``).
+``matmul(..., transpose_b=True)`` lowers ``x @ w.T`` to a transposed-operand
+schedule: normalize turns the transposed leaf into column-gamma
+coefficients, so the stored ``(n, k)`` array is blocked in place — no
+relayout copy of (say) a vocab embedding table every step.
 """
 from __future__ import annotations
 
 import functools
-import os
+import threading
+from collections import OrderedDict
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.blocking import BlockChoice
+from repro.core import expr as E
 from repro.core import schedule as _sched
+from repro.core import semiring
+from repro.core.blocking import BlockChoice
 from repro.core.hardware import HardwareEntry, current_hardware, get_entry
 from repro.kernels import ref
-from repro.kernels import moa_gemm as _legacy
 from repro.kernels.emit import emit_pallas
-
-
-def _use_legacy(flag: Optional[bool]) -> bool:
-    if flag is not None:
-        return flag
-    return os.environ.get("REPRO_LEGACY_KERNELS", "") not in ("", "0")
 
 
 def _resolve(hardware, interpret) -> tuple[HardwareEntry, bool]:
@@ -46,78 +48,112 @@ def _resolve(hardware, interpret) -> tuple[HardwareEntry, bool]:
     return hw, (hw.interpret if interpret is None else interpret)
 
 
-def _pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
-    pads = [(0, (-d) % m) for d, m in zip(x.shape, mults)]
+def _pad_to_shape(x: jax.Array, shape: tuple[int, ...],
+                  value: float = 0.0) -> jax.Array:
+    pads = [(0, t - d) for d, t in zip(x.shape, shape)]
     if any(p for _, p in pads):
-        return jnp.pad(x, pads)
+        return jnp.pad(x, pads, constant_values=value)
     return x
 
 
-def default_blocks(m: int, k: int, n: int, dtype,
-                   hardware: Optional[HardwareEntry] = None) -> BlockChoice:
-    """The registry-aware block policy (see schedule.default_gemm_blocks)."""
-    hw = hardware or current_hardware()
-    return _sched.default_gemm_blocks(m, k, n, dtype, hw.shape)
-
-
 # ---------------------------------------------------------------------------
-# derived-schedule executors (cached per (op, shapes, dtype, hardware))
+# the generic executor: expression -> cached, jitted pad/kernel/slice callable
 # ---------------------------------------------------------------------------
 
-@functools.lru_cache(maxsize=512)
-def _gemm_callable(m, k, n, dtype_s, out_dtype_s, blocks, hw_name, interpret):
-    bundle = _sched.get_schedule("gemm", (m, k, n), dtype_s,
-                                 get_entry(hw_name), blocks=blocks)
+_CALLABLES: "OrderedDict[tuple, object]" = OrderedDict()
+_CALLABLES_LOCK = threading.Lock()
+_CALLABLES_SIZE = 512
+
+
+def _block_key(blocks):
+    return tuple(blocks) if isinstance(blocks, (list, tuple)) else blocks
+
+
+def _expr_callable(expr: "E.Expr", dtype_s: str, out_dtype_s: str,
+                   hw_name: str, interpret: bool, blocks=None):
+    """The memoized executable for one normal form: pad operands to the
+    schedule's storage shapes (with the semiring's inert element), run the
+    emitted kernel, slice the logical result back out."""
+    nf = expr if isinstance(expr, E.NormalForm) else E.normal_form(expr)
+    key = (nf.key(), dtype_s, out_dtype_s, hw_name, interpret,
+           _block_key(blocks))
+    with _CALLABLES_LOCK:
+        fn = _CALLABLES.get(key)
+        if fn is not None:
+            _CALLABLES.move_to_end(key)
+            return fn
+    bundle = _sched.get_schedule(nf, dtype=dtype_s,
+                                 hardware=get_entry(hw_name), blocks=blocks)
     kern = emit_pallas(bundle.schedule, out_dtype=out_dtype_s,
                        interpret=interpret)
-    bm, bk, bn = bundle.blocks.as_tuple()
+    in_shapes = tuple(s.shape for s in bundle.schedule.ins)
+    if in_shapes == tuple(bundle.in_shapes):
+        pad_val = 0.0                       # nothing is ever padded
+    elif len(bundle.schedule.ins) == 1:
+        # single operand: no pairing happens, so the inert pad is just the
+        # reduce identity (e.g. -inf for a lone max-reduce)
+        pad_val = semiring.reduce_def(bundle.schedule.reduce_op).identity
+    else:
+        pad_val = semiring.pad_value(bundle.schedule.combine,
+                                     bundle.schedule.reduce_op)
+    out_slices = tuple(slice(0, d) for d in bundle.out_shape)
 
     @jax.jit
-    def call(a, b):
-        out = kern(_pad_to(a, (bm, bk)), _pad_to(b, (bk, bn)))
-        return out[:m, :n]
+    def call(*arrays):
+        padded = [_pad_to_shape(x, shp, pad_val)
+                  for x, shp in zip(arrays, in_shapes)]
+        return kern(*padded)[out_slices]
 
-    return call
-
-
-@functools.lru_cache(maxsize=512)
-def _expert_callable(e, cap, d, f, dtype_s, out_dtype_s, blocks, hw_name,
-                     interpret):
-    bundle = _sched.get_schedule("expert_gemm", (e, cap, d, f), dtype_s,
-                                 get_entry(hw_name), blocks=blocks)
-    kern = emit_pallas(bundle.schedule, out_dtype=out_dtype_s,
-                       interpret=interpret)
-    bm, bk, bn = bundle.blocks.as_tuple()
-
-    @jax.jit
-    def call(x, w):
-        out = kern(_pad_to(x, (1, bm, bk)), _pad_to(w, (1, bk, bn)))
-        return out[:, :cap, :f]
-
-    return call
+    with _CALLABLES_LOCK:
+        call = _CALLABLES.setdefault(key, call)
+        _CALLABLES.move_to_end(key)
+        while len(_CALLABLES) > _CALLABLES_SIZE:
+            _CALLABLES.popitem(last=False)
+        return call
 
 
-@functools.lru_cache(maxsize=512)
-def _hadamard_callable(m, n, block, dtype_s, hw_name, interpret):
-    bundle = _sched.get_schedule("hadamard", (m, n), dtype_s,
-                                 get_entry(hw_name), blocks=block)
-    kern = emit_pallas(bundle.schedule, out_dtype=dtype_s,
-                       interpret=interpret)
+def apply(expr: "E.Expr", *arrays: jax.Array, out_dtype=None,
+          interpret: Optional[bool] = None,
+          hardware: Optional[HardwareEntry] = None,
+          blocks=None) -> jax.Array:
+    """Evaluate a composed MoA expression — the public derived-kernel entry.
 
-    @jax.jit
-    def call(a, b):
-        return kern(_pad_to(a, block), _pad_to(b, block))[:m, :n]
-
-    return call
+    ``arrays`` bind the expression's leaves in composition order by their
+    *storage* shapes: a row-major leaf takes its logical shape, a
+    column-major leaf takes the reversed (physical buffer) shape — so
+    ``transpose(arr((n, k)))`` and ``arr((k, n), layout="col")`` bind the
+    identical ``(n, k)`` array, as they share a normal form.  On a Pallas
+    backend the normal form is lifted, scheduled and emitted (cached per
+    normal form); elsewhere the jnp oracle (``kernels.ref.eval_expr``)
+    evaluates the same semantics.
+    """
+    nf = E.normal_form(expr)
+    shapes = nf.leaf_storage_shapes()
+    if len(arrays) != len(shapes):
+        raise ValueError(f"expression has {len(shapes)} leaves, got "
+                         f"{len(arrays)} arrays")
+    for i, (a, s) in enumerate(zip(arrays, shapes)):
+        if tuple(a.shape) != s:
+            raise ValueError(f"leaf {i} ({nf.leaves[i].array!r}) expects "
+                             f"storage shape {s}, got {tuple(a.shape)}")
+    hw, interp = _resolve(hardware, interpret)
+    out_dtype = jnp.dtype(out_dtype or arrays[0].dtype)
+    # kernel path on Pallas backends or by explicit request; the registry's
+    # "interpret"/"xla" entries otherwise use the jnp oracle (interpret-mode
+    # Pallas is the validation path, not the default execution path)
+    if hw.backend == "pallas" or interpret:
+        fn = _expr_callable(nf, str(jnp.dtype(arrays[0].dtype)),
+                            str(out_dtype), hw.name, interp, blocks)
+        return fn(*arrays)
+    return ref.eval_expr(expr, *arrays).astype(out_dtype)
 
 
 # ---------------------------------------------------------------------------
-# kernel entry points
+# kernel entry points (expression builders over the generic executor)
 # ---------------------------------------------------------------------------
 
 def moa_gemm(a: jax.Array, b: jax.Array, *, blocks: Optional[BlockChoice] = None,
              out_dtype=None, interpret: Optional[bool] = None,
-             legacy: Optional[bool] = None,
              hardware: Optional[HardwareEntry] = None) -> jax.Array:
     """C = A @ B through the derived MoA blocked-contiguous schedule."""
     m, k = a.shape
@@ -126,17 +162,13 @@ def moa_gemm(a: jax.Array, b: jax.Array, *, blocks: Optional[BlockChoice] = None
         raise ValueError(f"contraction mismatch {a.shape} @ {b.shape}")
     hw, interp = _resolve(hardware, interpret)
     out_dtype = jnp.dtype(out_dtype or a.dtype)
-    if _use_legacy(legacy):
-        bc = blocks or default_blocks(m, k, n, a.dtype, hw)
-        return _legacy_gemm(a, b, bc, out_dtype, interp)
-    fn = _gemm_callable(m, k, n, str(jnp.dtype(a.dtype)), str(out_dtype),
-                        blocks, hw.name, interp)
+    fn = _expr_callable(E.matmul_expr(m, k, n), str(jnp.dtype(a.dtype)),
+                        str(out_dtype), hw.name, interp, blocks)
     return fn(a, b)
 
 
 def expert_gemm(x: jax.Array, w: jax.Array, *, blocks: Optional[BlockChoice] = None,
                 out_dtype=None, interpret: Optional[bool] = None,
-                legacy: Optional[bool] = None,
                 hardware: Optional[HardwareEntry] = None) -> jax.Array:
     """(E, cap, d) x (E, d, f) -> (E, cap, f) capacity-padded expert GEMM —
     the same derived schedule with the expert axis as one more lift."""
@@ -146,61 +178,43 @@ def expert_gemm(x: jax.Array, w: jax.Array, *, blocks: Optional[BlockChoice] = N
         raise ValueError(f"expert gemm mismatch {x.shape} x {w.shape}")
     hw, interp = _resolve(hardware, interpret)
     out_dtype = jnp.dtype(out_dtype or x.dtype)
-    if _use_legacy(legacy):
-        bc = blocks or default_blocks(cap, d, f, x.dtype, hw)
-        return _legacy_expert(x, w, bc, out_dtype, interp)
-    fn = _expert_callable(e, cap, d, f, str(jnp.dtype(x.dtype)),
-                          str(out_dtype), blocks, hw.name, interp)
+    fn = _expr_callable(E.expert_gemm_expr(e, cap, d, f),
+                        str(jnp.dtype(x.dtype)), str(out_dtype),
+                        hw.name, interp, blocks)
     return fn(x, w)
 
 
 def hadamard(a: jax.Array, b: jax.Array, *, block: tuple[int, int] = (256, 256),
-             interpret: Optional[bool] = None, legacy: Optional[bool] = None,
+             interpret: Optional[bool] = None,
              hardware: Optional[HardwareEntry] = None) -> jax.Array:
     if a.shape != b.shape:
         raise ValueError(f"hadamard shape mismatch {a.shape} vs {b.shape}")
     m, n = a.shape
     block = (min(block[0], max(m, 8)), min(block[1], max(n, 128)))
     hw, interp = _resolve(hardware, interpret)
-    if _use_legacy(legacy):
-        return _legacy_hadamard(a, b, block, interp)
-    fn = _hadamard_callable(m, n, block, str(jnp.dtype(a.dtype)), hw.name,
-                            interp)
+    fn = _expr_callable(E.hadamard_expr(m, n), str(jnp.dtype(a.dtype)),
+                        str(jnp.dtype(a.dtype)), hw.name, interp, block)
     return fn(a, b)
 
 
-# ---------------------------------------------------------------------------
-# legacy hand-written kernels (cross-check path, one release)
-# ---------------------------------------------------------------------------
-
-@functools.partial(jax.jit, static_argnames=("blocks", "out_dtype", "interpret"))
-def _legacy_gemm(a, b, blocks: BlockChoice, out_dtype, interpret: bool):
+def semiring_matmul(a: jax.Array, b: jax.Array, *, plus: str, times: str,
+                    interpret: Optional[bool] = None,
+                    hardware: Optional[HardwareEntry] = None,
+                    blocks=None) -> jax.Array:
+    """Matmul over any registered semiring, e.g. ``plus="min", times="add"``
+    (tropical shortest path) — the same derived schedule as ``moa_gemm``;
+    only the emitted block body changes."""
     m, k = a.shape
-    _, n = b.shape
-    ap = _pad_to(a, (blocks.bm, blocks.bk))
-    bp = _pad_to(b, (blocks.bk, blocks.bn))
-    out = _legacy.moa_gemm_kernel(ap, bp, blocks, out_dtype=out_dtype,
-                                  interpret=interpret)
-    return out[:m, :n]
-
-
-@functools.partial(jax.jit, static_argnames=("blocks", "out_dtype", "interpret"))
-def _legacy_expert(x, w, blocks: BlockChoice, out_dtype, interpret: bool):
-    e, cap, d = x.shape
-    _, _, f = w.shape
-    xp = _pad_to(x, (1, blocks.bm, blocks.bk))
-    wp = _pad_to(w, (1, blocks.bk, blocks.bn))
-    out = _legacy.expert_gemm_kernel(xp, wp, blocks, out_dtype=out_dtype,
-                                     interpret=interpret)
-    return out[:, :cap, :f]
-
-
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def _legacy_hadamard(a, b, block, interpret: bool):
-    m, n = a.shape
-    ap = _pad_to(a, block)
-    bp = _pad_to(b, block)
-    return _legacy.hadamard_kernel(ap, bp, block, interpret=interpret)[:m, :n]
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch {a.shape} . {b.shape}")
+    hw, interp = _resolve(hardware, interpret)
+    expr = E.inner(plus, times, E.arr("A", (m, k)), E.arr("B", (k, n)))
+    if hw.backend == "pallas" or interpret:
+        fn = _expr_callable(expr, str(jnp.dtype(a.dtype)), "float32",
+                            hw.name, interp, blocks)
+        return fn(a, b)
+    return ref.eval_expr(expr, a, b)
 
 
 # ---------------------------------------------------------------------------
@@ -209,31 +223,64 @@ def _legacy_hadamard(a, b, block, interpret: bool):
 # collectives and benchmarks call — the single execution path.
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
-def _pallas_matmul_f32(x2, w2, hw_name, interpret):
-    return moa_gemm(x2, w2, out_dtype=jnp.float32, interpret=interpret,
-                    hardware=get_entry(hw_name))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _pallas_matmul_f32(x2, w2, hw_name, interpret, transpose_b):
+    m, k = x2.shape
+    n = w2.shape[0] if transpose_b else w2.shape[1]
+    fn = _expr_callable(E.matmul_expr(m, k, n, transpose_b=transpose_b),
+                        str(jnp.dtype(x2.dtype)), "float32", hw_name,
+                        interpret)
+    return fn(x2, w2)
 
 
-def _pallas_matmul_fwd(x2, w2, hw_name, interpret):
-    return _pallas_matmul_f32(x2, w2, hw_name, interpret), (x2, w2)
+def _gemm_tb(a, b, out_dtype_s, hw_name, interpret):
+    """a (m, k) @ b (n, k).T via the transposed-second-operand schedule."""
+    fn = _expr_callable(E.matmul_expr(a.shape[0], a.shape[1], b.shape[0],
+                                      transpose_b=True),
+                        str(jnp.dtype(a.dtype)), out_dtype_s, hw_name,
+                        bool(interpret))
+    return fn(a, b)
 
 
-def _pallas_matmul_bwd(hw_name, interpret, resid, g):
+def _gemm_ta(a, b, out_dtype_s, hw_name, interpret):
+    """a (t, m).T @ b (t, n) — the transposed-FIRST-operand schedule (both
+    VJP weight gradients have this shape), again with no relayout copy."""
+    t, m = a.shape
+    t2, n = b.shape
+    expr = E.inner("add", "mul", E.transpose(E.arr("A", (t, m))),
+                   E.arr("B", (t2, n)))
+    fn = _expr_callable(expr, str(jnp.dtype(a.dtype)), out_dtype_s, hw_name,
+                        bool(interpret))
+    return fn(a, b)
+
+
+def _pallas_matmul_fwd(x2, w2, hw_name, interpret, transpose_b):
+    return _pallas_matmul_f32(x2, w2, hw_name, interpret, transpose_b), (x2, w2)
+
+
+def _pallas_matmul_bwd(hw_name, interpret, transpose_b, resid, g):
+    """Both gradients are two more derived GEMMs, every transposed operand
+    read through its gamma coefficients — no transpose copy of either the
+    weight or the (often vocab-sized) logits gradient."""
     x2, w2 = resid
     hw = get_entry(hw_name)
-    dx = moa_gemm(g, w2.T, out_dtype=x2.dtype, interpret=interpret,
-                  hardware=hw)
-    dw = moa_gemm(x2.T, g, out_dtype=w2.dtype, interpret=interpret,
-                  hardware=hw)
+    if transpose_b:
+        # y = x w^T: dx = g @ w (stored layout); dw = g^T @ x
+        dx = moa_gemm(g, w2, out_dtype=x2.dtype, interpret=interpret,
+                      hardware=hw)
+        dw = _gemm_ta(g, x2, str(w2.dtype), hw_name, interpret)
+    else:
+        # dx = g @ w^T; dw = x^T @ g
+        dx = _gemm_tb(g, w2, str(x2.dtype), hw_name, interpret)
+        dw = _gemm_ta(x2, g, str(w2.dtype), hw_name, interpret)
     return dx, dw
 
 
 _pallas_matmul_f32.defvjp(_pallas_matmul_fwd, _pallas_matmul_bwd)
 
 
-def matmul(x: jax.Array, w: jax.Array, *, out_dtype=None,
-           interpret: Optional[bool] = None,
+def matmul(x: jax.Array, w: jax.Array, *, transpose_b: bool = False,
+           out_dtype=None, interpret: Optional[bool] = None,
            hardware: Optional[HardwareEntry] = None) -> jax.Array:
     """Unified MoA matmul: ``y[..., :] = x[..., k] @ w[k, ...]``.
 
@@ -242,19 +289,36 @@ def matmul(x: jax.Array, w: jax.Array, *, out_dtype=None,
     the derived schedule (differentiable: the VJP is two more derived GEMMs);
     elsewhere it is the XLA oracle with the same f32-accumulation contract,
     so CPU tests and TPU serving share semantics.
+
+    ``transpose_b`` contracts against the *stored* layout of a ``(..., k)``
+    weight: ``y[..., :] = x[..., k] @ w[..., k].T``.  The derived schedule
+    reads the table through column-gamma coefficients — no transpose copy —
+    which is what lets the tied-embeddings logits head share this entry.
     """
     kdim = x.shape[-1]
-    if w.shape[0] != kdim:
-        raise ValueError(f"matmul contraction mismatch {x.shape} @ {w.shape}")
+    if transpose_b:
+        if w.shape[-1] != kdim:
+            raise ValueError(
+                f"matmul(transpose_b) contraction mismatch {x.shape} @ "
+                f"{w.shape}.T")
+        w2 = w.reshape(-1, kdim)
+        out_tail = w.shape[:-1]
+    else:
+        if w.shape[0] != kdim:
+            raise ValueError(f"matmul contraction mismatch {x.shape} @ {w.shape}")
+        w2 = w.reshape(kdim, -1)
+        out_tail = w.shape[1:]
     hw, interp = _resolve(hardware, interpret)
     out_dtype = jnp.dtype(out_dtype or x.dtype)
     x2 = x.reshape(-1, kdim)
-    w2 = w.reshape(kdim, -1)
     if hw.backend == "pallas" or interpret:
-        y = _pallas_matmul_f32(x2, w2, hw.name, bool(interp))
+        y = _pallas_matmul_f32(x2, w2, hw.name, bool(interp), transpose_b)
+    elif transpose_b:
+        y = jax.lax.dot_general(x2, w2, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
     else:
         y = jnp.dot(x2, w2, preferred_element_type=jnp.float32)
-    return y.astype(out_dtype).reshape(x.shape[:-1] + w.shape[1:])
+    return y.astype(out_dtype).reshape(x.shape[:-1] + out_tail)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))

@@ -2,12 +2,17 @@
 
 Each function is the *semantic definition* the kernels are tested against
 (tests sweep shapes/dtypes and assert_allclose kernel-vs-oracle).  These are
-also the fallback execution path on backends without Pallas.
+also the fallback execution path on backends without Pallas.  ``eval_expr``
+is the general case: a direct jnp evaluator for any ``repro.core.expr``
+expression (the DNF semantics, before any normal-form derivation).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import expr as E
+from repro.core import semiring
 
 
 def gemm_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
@@ -37,6 +42,63 @@ def expert_gemm_ref(x: jax.Array, w: jax.Array, out_dtype=None) -> jax.Array:
     out_dtype = out_dtype or x.dtype
     return jnp.einsum("ecd,edf->ecf", x, w,
                       preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def _combine_fn(name: str):
+    return getattr(jnp, semiring.combine_def(name).jnp_name)
+
+
+def _reducer_fn(name: str):
+    return getattr(jnp, semiring.reduce_def(name).jnp_reducer)
+
+
+def eval_expr(expr: "E.Expr", *arrays: jax.Array) -> jax.Array:
+    """Evaluate a MoA expression directly with jnp (f32 accumulation) —
+    the semantic oracle / XLA fallback for ``ops.apply``.  ``arrays`` bind
+    leaves in composition order."""
+    it = iter(arrays)
+
+    def ev(e: "E.Expr") -> jax.Array:
+        if isinstance(e, E.Arr):
+            # leaves bind by STORAGE shape (same contract as ops.apply):
+            # a column-major leaf takes the reversed-shape row-major buffer
+            x = next(it)
+            storage = e.shape if e.layout == "row" else tuple(reversed(e.shape))
+            if tuple(x.shape) != storage:
+                raise ValueError(f"leaf {e.name!r} expects storage shape "
+                                 f"{storage}, got {tuple(x.shape)}")
+            if e.layout == "col":
+                x = jnp.transpose(x, tuple(reversed(range(x.ndim))))
+            return x.astype(jnp.float32)
+        if isinstance(e, E.Transpose):
+            return jnp.transpose(ev(e.x), e.perm)
+        if isinstance(e, E.Psi):
+            return ev(e.x)[e.idx]
+        if isinstance(e, E.Combine):
+            return _combine_fn(e.op)(ev(e.a), ev(e.b))
+        if isinstance(e, E.Reduce):
+            return _reducer_fn(e.op)(ev(e.x), axis=e.axis)
+        if isinstance(e, E.Inner):
+            a, b = ev(e.a), ev(e.b)
+            nb = e.batch
+            if (e.plus, e.times) == ("add", "mul"):
+                # linear contraction (batched or not): dot_general, so the
+                # XLA fallback never materializes the broadcast intermediate
+                return jax.lax.dot_general(
+                    a, b, (((a.ndim - 1,), (nb,)),
+                           (tuple(range(nb)), tuple(range(nb)))))
+            # general semiring: broadcast-pair then fold the contraction
+            ar = a.reshape(a.shape + (1,) * (b.ndim - nb - 1))
+            br = b.reshape(b.shape[:nb] + (1,) * (a.ndim - nb - 1)
+                           + b.shape[nb:])
+            return _reducer_fn(e.plus)(_combine_fn(e.times)(ar, br),
+                                       axis=a.ndim - 1)
+        raise TypeError(f"not an Expr node: {e!r}")
+
+    out = ev(expr)
+    if next(it, None) is not None:
+        raise ValueError("more arrays than expression leaves")
+    return out
 
 
 def ipophp_ref(a: jax.Array, b: jax.Array, mode: str) -> jax.Array:

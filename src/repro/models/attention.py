@@ -378,11 +378,21 @@ def mla_decode(p: dict, x: jax.Array, cache: MLACache, pos: jax.Array,
     kpe_new = apply_rope(kpe_new[:, :, None, :], sin, cos)[:, :, 0, :]
     c_kv = _cache_write(cache.c_kv, c_new, pos)
     k_pe = _cache_write(cache.k_pe, kpe_new, pos)
-    # absorb W_UK:  q_tilde = q_nope @ W_UK  -> latent space
+    # absorb W_UK:  q_tilde[h] = q_nope[h] @ W_UK[:, h, :].T  -> latent
+    # space.  The head axis batches independent GEMMs — exactly the expert
+    # schedule (one more dimension lift) — so this routes through the
+    # unified ops.expert_matmul entry instead of a bespoke einsum.  The
+    # per-step w_uk relayout is kvr*h*nope elements (small, unlike the vocab
+    # table); a batch-axis transpose_b expert schedule would remove it (see
+    # ROADMAP).
     w_uk = p["wkv_b"][..., :nope]                       # (kvr, h, nope)
     w_uv = p["wkv_b"][..., nope:]                       # (kvr, h, vd)
-    q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk,
-                       preferred_element_type=jnp.float32).astype(x.dtype)
+    b_, s_ = q_nope.shape[:2]
+    q_lat = ops.expert_matmul(
+        q_nope.transpose(2, 0, 1, 3).reshape(h, b_ * s_, nope),
+        w_uk.transpose(1, 2, 0),                        # (h, nope, kvr)
+        out_dtype=x.dtype,
+    ).reshape(h, b_, s_, kvr).transpose(1, 2, 0, 3)     # (b, s, h, kvr)
     sc = jnp.einsum("bshr,bkr->bhsk", q_lat, c_kv,
                     preferred_element_type=jnp.float32)
     sp = jnp.einsum("bshr,bkr->bhsk", q_pe, k_pe,

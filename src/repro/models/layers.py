@@ -161,13 +161,12 @@ def embed_tokens(params: dict, tokens: jax.Array, cfg: ArchConfig) -> jax.Array:
 
 def logits_from_hidden(params: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
     if cfg.tie_embeddings:
-        # tied head contracts the (vocab, d) table in its STORED layout —
-        # routing through ops.matmul would transpose-copy the largest tensor
-        # in the model every step.  Needs a transposed-operand derived
-        # schedule before it can join the unified path (see ROADMAP).
-        w = params["embed"]["table"]
-        logits = jnp.einsum("bsd,vd->bsv", x, w,
-                            preferred_element_type=jnp.float32)
+        # tied head contracts the (vocab, d) table in its STORED layout:
+        # matmul(transpose_b=True) lowers to a transposed-operand derived
+        # schedule (column-gamma coefficients on the table), so the largest
+        # tensor in the model is never transpose-copied.
+        logits = ops.matmul(x, params["embed"]["table"], transpose_b=True,
+                            out_dtype=jnp.float32)
     else:
         logits = ops.matmul(x, params["unembed"]["w"], out_dtype=jnp.float32)
     if cfg.logit_softcap:

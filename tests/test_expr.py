@@ -1,0 +1,461 @@
+"""The expression algebra: compose -> normalize (DNF->ONF) -> schedule -> emit.
+
+Property tests (via the hypothesis shim) that every expression's emitted
+kernel matches the ``Onf.execute`` oracle and the jnp oracles
+(``jnp.dot``/``jnp.einsum``/tropical folds), including non-divisible shapes,
+``transpose_b`` and max-plus — plus the acceptance checks of the API
+redesign: the transposed-operand schedule's column-gamma coefficients, the
+no-relayout jaxpr, and the tied-embeddings head joining ``ops.matmul``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import expr as E
+from repro.core import hardware as hw
+from repro.core import onf as onf_mod
+from repro.core import schedule as sched
+from repro.kernels import ops, ref
+from repro.kernels.emit import emit_pallas
+
+
+def _err(got, want):
+    return float(np.max(np.abs(np.asarray(got, np.float32)
+                               - np.asarray(want, np.float32))))
+
+
+def _rand(key, shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# normalize: structure
+# ---------------------------------------------------------------------------
+
+def test_normalize_gemm_reproduces_paper_onf():
+    o = E.normalize(E.matmul_expr(4, 6, 5), out_axes=("i", "j"),
+                    reduce_axes=("k",))
+    assert [(l.index, l.extent) for l in o.loops] == [("i", 4), ("k", 6), ("j", 5)]
+    assert o.out.coeffs == {"i": 5, "j": 1}
+    assert o.ins[0].coeffs == {"i": 6, "k": 1}
+    assert o.ins[1].coeffs == {"k": 5, "j": 1}
+    assert o.reduce_indices == {"k"} and (o.combine, o.reduce_op) == ("mul", "add")
+
+
+def test_normalize_transposed_leaf_gives_column_gamma_coeffs():
+    """The acceptance property: B read through its transpose has the
+    column-gamma coefficient pattern — stride 1 on the contraction axis,
+    stride k on the output axis — with no data movement implied."""
+    m, k, n = 4, 6, 5
+    o = E.normalize(E.matmul_expr(m, k, n, transpose_b=True),
+                    out_axes=("i", "j"), reduce_axes=("k",))
+    assert o.ins[1].coeffs == {"j": k, "k": 1}
+    # identical to declaring the leaf column-major at the transposed shape
+    o2 = E.normalize(E.inner("add", "mul", E.arr("A", (m, k)),
+                             E.arr("B", (k, n), layout="col")),
+                     out_axes=("i", "j"), reduce_axes=("k",))
+    assert o.key() == o2.key()
+
+
+def test_normalize_operator_sugar():
+    a, b = E.arr("A", (3, 4)), E.arr("B", (4, 5))
+    assert E.normalize(a @ b).key() == E.normalize(
+        E.inner("add", "mul", a, b)).key()
+    c = E.arr("C", (3, 4))
+    assert E.normalize(a * c).combine == "mul"
+    assert E.normalize(a + c).combine == "add"
+    assert E.normalize(a @ E.arr("B2", (5, 4)).T).ins[1].coeffs == \
+        {"j": 4, "k": 1}
+
+
+def test_normalize_rejects_non_distributive_hoist():
+    """A reduce nested under a combine operand is hoisted to the single
+    loop-nest reduction — sound only under the semiring law.  add does not
+    distribute over add, so this must be rejected, not mis-compiled."""
+    bad = E.combine("add", E.reduce("add", E.arr("A", (3, 4)), axis=1),
+                    E.arr("B", (3,)))
+    with pytest.raises(ValueError, match="distribute"):
+        E.normalize(bad)
+    # mul DOES distribute over add: scaling a row-sum is a valid ONF and
+    # matches both oracles through the kernel path
+    ok = E.combine("mul", E.reduce("add", E.arr("A", (3, 4)), axis=1),
+                   E.arr("B", (3,)))
+    a = _rand(jax.random.PRNGKey(20), (3, 4))
+    b = _rand(jax.random.PRNGKey(21), (3,))
+    got = ops.apply(ok, a, b, interpret=True, out_dtype=jnp.float32)
+    assert _err(got, jnp.sum(a, axis=1) * b) < 1e-5
+    assert _err(got, ref.eval_expr(ok, a, b)) < 1e-5
+    # chained inner products hoist through mul/add (distributive) too
+    chain = E.arr("A", (3, 4)) @ E.arr("B", (4, 5)) @ E.arr("C", (5, 2))
+    aa, bb, cc = (_rand(jax.random.PRNGKey(22 + i), s)
+                  for i, s in enumerate([(3, 4), (4, 5), (5, 2)]))
+    got = ops.apply(chain, aa, bb, cc, interpret=True, out_dtype=jnp.float32)
+    assert _err(got, aa @ bb @ cc) < 1e-4
+
+
+def test_unregistered_pad_semiring_runs_at_aligned_shapes():
+    """(mul, max) has no inert pad element, but at block-aligned shapes no
+    padding is ever applied — the pair must run, not raise eagerly."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(24))
+    a, b = _rand(k1, (128, 128)), _rand(k2, (128, 128))
+    got = ops.apply(E.inner("max", "mul", E.arr("A", (128, 128)),
+                            E.arr("B", (128, 128))),
+                    a, b, interpret=True, out_dtype=jnp.float32)
+    want = jnp.max(a[:, :, None] * b[None, :, :], axis=1)
+    assert _err(got, want) < 1e-5
+    # at non-aligned shapes the missing pad element is still a clear error
+    with pytest.raises(ValueError, match="pad"):
+        ops.apply(E.inner("max", "mul", E.arr("A", (100, 70)),
+                          E.arr("B", (70, 30))),
+                  _rand(k1, (100, 70)), _rand(k2, (70, 30)), interpret=True)
+
+
+def test_root_inner_needs_no_distributive_law():
+    """inner('add', 'add', ...) keeps its reduce outermost in the ONF —
+    legal for any op pair, and the kernel matches the broadcast oracle."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(23))
+    a, b = _rand(k1, (5, 7)), _rand(k2, (7, 6))
+    got = ops.apply(E.inner("add", "add", E.arr("A", (5, 7)),
+                            E.arr("B", (7, 6))),
+                    a, b, interpret=True, out_dtype=jnp.float32)
+    want = jnp.sum(a[:, :, None] + b[None, :, :], axis=1)
+    assert _err(got, want) < 1e-4
+
+
+def test_normalize_rejects_mixed_ops_and_bad_shapes():
+    a, b = E.arr("A", (3, 4)), E.arr("B", (3, 4))
+    with pytest.raises(ValueError, match="mixes combine"):
+        E.normalize(E.combine("add", E.combine("mul", a, b), a))
+    with pytest.raises(ValueError, match="shape mismatch"):
+        E.combine("mul", a, E.arr("B", (4, 3)))
+    with pytest.raises(ValueError, match="contraction mismatch"):
+        E.inner("add", "mul", a, E.arr("B", (5, 2)))
+    with pytest.raises(ValueError, match="unknown combine"):
+        E.combine("xor", a, b)
+
+
+def test_psi_views_normalize_to_constant_offsets_and_execute():
+    x = np.arange(24, dtype=np.float32)
+    o = E.normalize(E.psi((1,), E.arr("A", (4, 6))))
+    assert o.ins[0].const == 6
+    np.testing.assert_array_equal(o.execute(o.init_out(6), x), x[6:12])
+    # but a psi view has no BlockSpec lowering — scheduling rejects it
+    lifted = onf_mod.lift_loop(o, "i", 1, "proc")
+    with pytest.raises(ValueError, match="psi view"):
+        sched.derive_schedule(lifted)
+
+
+def test_reduce_node_normalizes_single_operand_fold():
+    x = np.arange(12, dtype=np.float32)
+    o = E.normalize(E.reduce("max", E.arr("A", (3, 4)), axis=1))
+    got = o.execute(o.init_out(3), x)
+    np.testing.assert_array_equal(got, x.reshape(3, 4).max(axis=1))
+
+
+def test_apply_runs_single_operand_reduce_kernel():
+    """A lone reduce has no pairing op: padding must fall back to the
+    reduce identity, and the emitted kernel must match the jnp fold —
+    non-divisible shape included."""
+    x = _rand(jax.random.PRNGKey(13), (5, 37))
+    got = ops.apply(E.reduce("max", E.arr("A", (5, 37)), axis=1), x,
+                    interpret=True, out_dtype=jnp.float32)
+    assert _err(got, jnp.max(x, axis=1)) < 1e-6
+    got_min = ops.apply(E.reduce("min", E.arr("A", (5, 37)), axis=0), x,
+                        interpret=True, out_dtype=jnp.float32)
+    assert _err(got_min, jnp.min(x, axis=0)) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# keystone: emitted kernel == Onf.execute == jnp, over expression families
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 40), st.integers(1, 40),
+       st.sampled_from([False, True]), st.integers(0, 2 ** 31))
+def test_property_matmul_kernel_matches_oracles(m, k, n, transpose_b, seed):
+    """Every (possibly transposed, possibly non-divisible) matmul
+    expression: emitted kernel == Onf.execute == jnp.dot."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a = _rand(k1, (m, k))
+    b = _rand(k2, (n, k) if transpose_b else (k, n))
+    expr = E.matmul_expr(m, k, n, transpose_b=transpose_b)
+    got = ops.apply(expr, a, b, interpret=True, out_dtype=jnp.float32)
+    want_jnp = a @ (b.T if transpose_b else b)
+    assert got.shape == (m, n)
+    assert _err(got, want_jnp) < 5e-5 * max(k, 1)
+    o = E.normalize(expr)
+    want_onf = o.execute(o.init_out(m * n), np.asarray(a).ravel(),
+                         np.asarray(b).ravel()).reshape(m, n)
+    assert _err(got, want_onf) < 5e-5 * max(k, 1)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(1, 24), st.integers(1, 24), st.integers(1, 24),
+       st.sampled_from(["max", "min"]), st.integers(0, 2 ** 31))
+def test_property_tropical_kernel_matches_oracles(m, k, n, plus, seed):
+    """Max-plus / min-plus through the SAME pipeline: kernel == Onf.execute
+    == the jnp broadcast/fold oracle, non-divisible shapes included (padding
+    uses the semiring's inert element, not zero)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a, b = _rand(k1, (m, k)), _rand(k2, (k, n))
+    got = ops.semiring_matmul(a, b, plus=plus, times="add", interpret=True)
+    fold = jnp.max if plus == "max" else jnp.min
+    want = fold(a[:, :, None] + b[None, :, :], axis=1)
+    assert _err(got, want) < 1e-5
+    o = E.normalize(E.inner(plus, "add", E.arr("A", (m, k)),
+                            E.arr("B", (k, n))))
+    want_onf = o.execute(o.init_out(m * n), np.asarray(a).ravel(),
+                         np.asarray(b).ravel()).reshape(m, n)
+    assert _err(got, want_onf) < 1e-5
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(1, 30), st.integers(1, 30),
+       st.sampled_from(["mul", "add"]), st.integers(0, 2 ** 31))
+def test_property_pointwise_kernel_matches_oracles(m, n, op, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a, b = _rand(k1, (m, n)), _rand(k2, (m, n))
+    expr = E.combine(op, E.arr("A", (m, n)), E.arr("B", (m, n)))
+    got = ops.apply(expr, a, b, interpret=True, out_dtype=jnp.float32)
+    want = a * b if op == "mul" else a + b
+    assert _err(got, want) < 1e-6
+    o = E.normalize(expr)
+    want_onf = o.execute(o.init_out(m * n), np.asarray(a).ravel(),
+                         np.asarray(b).ravel()).reshape(m, n)
+    assert _err(got, want_onf) < 1e-6
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 12), st.integers(1, 12),
+       st.integers(1, 12), st.integers(0, 2 ** 31))
+def test_property_batched_inner_matches_einsum(e, cap, d, f, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x, w = _rand(k1, (e, cap, d)), _rand(k2, (e, d, f))
+    expr = E.inner("add", "mul", E.arr("X", (e, cap, d)),
+                   E.arr("W", (e, d, f)), batch=1)
+    got = ops.apply(expr, x, w, interpret=True, out_dtype=jnp.float32)
+    assert _err(got, jnp.einsum("ecd,edf->ecf", x, w)) < 5e-5 * d
+
+
+# ---------------------------------------------------------------------------
+# acceptance: transposed-operand schedule — no relayout copy
+# ---------------------------------------------------------------------------
+
+def test_transpose_b_schedule_blocks_stored_layout():
+    """The derived schedule reads B in its STORED (n, k) shape: the operand
+    spec's storage shape/axes come straight from the column-gamma
+    coefficients, and both axes are driven by grid dims (j, k)."""
+    entry = hw.get_entry("cpu")
+    bundle = sched.get_schedule(E.matmul_expr(256, 192, 128, transpose_b=True),
+                                dtype="float32", hardware=entry)
+    b_spec = bundle.schedule.ins[1]
+    bm, bk, bn = bundle.blocks.as_tuple()
+    assert b_spec.axes == ("j", "k")               # storage order of (n, k)
+    assert b_spec.shape == (bundle.padded[1], bundle.padded[2])
+    assert b_spec.block == (bn, bk)
+    grid_bases = [g.base for g in bundle.schedule.grid]
+    assert b_spec.grid_dims == (grid_bases.index("j"), grid_bases.index("k"))
+
+
+def test_transpose_b_jaxpr_has_no_relayout():
+    """No transpose primitive anywhere in the jitted kernel path: the
+    stored (n, k) operand flows into pallas_call via pad/slice only."""
+    m, k, n = 64, 32, 48
+    fn = ops._expr_callable(E.matmul_expr(m, k, n, transpose_b=True),
+                            "float32", "float32", "cpu", True)
+    x = jnp.zeros((m, k), jnp.float32)
+    w = jnp.zeros((n, k), jnp.float32)
+    jaxpr = jax.make_jaxpr(fn)(x, w)
+    prims = {eqn.primitive.name for eqn in jaxpr.jaxpr.eqns}
+    assert "transpose" not in prims, sorted(prims)
+
+
+def test_matmul_transpose_b_matches_xT_and_collapses_dims():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    x = _rand(k1, (2, 5, 16))
+    w = _rand(k2, (11, 16))
+    got = ops.matmul(x, w, transpose_b=True, interpret=True,
+                     out_dtype=jnp.float32)
+    want = jnp.einsum("bsd,vd->bsv", x, w)
+    assert got.shape == (2, 5, 11)
+    assert _err(got, want) < 1e-4
+    # XLA-oracle dispatch agrees (and also avoids a transpose: dot_general)
+    with hw.use_hardware("v100"):
+        assert _err(ops.matmul(x, w, transpose_b=True,
+                               out_dtype=jnp.float32), want) < 1e-4
+
+
+def _all_primitives(jaxpr) -> set:
+    prims = set()
+    todo = [jaxpr]
+    while todo:
+        j = todo.pop()
+        for eqn in j.eqns:
+            prims.add(eqn.primitive.name)
+            for v in eqn.params.values():
+                inner = getattr(v, "jaxpr", None)
+                if inner is not None:
+                    todo.append(inner)
+                elif isinstance(v, (list, tuple)):
+                    todo.extend(getattr(x, "jaxpr", None) for x in v
+                                if getattr(x, "jaxpr", None) is not None)
+    return prims
+
+
+def test_matmul_backward_has_no_relayout_either():
+    """Both VJP gradients are derived transposed-operand GEMMs: no
+    transpose primitive in the whole grad jaxpr, forward or backward,
+    for either transpose_b setting."""
+    for tb in (False, True):
+        def loss(x, w):
+            return ops.matmul(x, w, transpose_b=tb, interpret=True).sum()
+
+        x = jnp.zeros((8, 16), jnp.float32)
+        w = jnp.zeros((4, 16) if tb else (16, 4), jnp.float32)
+        jaxpr = jax.make_jaxpr(jax.grad(loss, argnums=(0, 1)))(x, w)
+        prims = _all_primitives(jaxpr.jaxpr)
+        assert "transpose" not in prims, (tb, sorted(prims))
+
+
+def test_onf_key_is_axis_name_independent():
+    """The cache key canonicalizes loop names positionally: how axes were
+    *named* at normalize time cannot split cache lines."""
+    o1 = E.normalize(E.matmul_expr(4, 6, 5))
+    o2 = E.normalize(E.matmul_expr(4, 6, 5), out_axes=("r", "c"),
+                     reduce_axes=("t",))
+    assert o1.key() == o2.key()
+    # ...but different structure still differs
+    assert o1.key() != E.normalize(E.matmul_expr(4, 6, 5,
+                                                 transpose_b=True)).key()
+
+
+def test_matmul_transpose_b_is_differentiable():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(8))
+    x = _rand(k1, (6, 8))
+    w = _rand(k2, (4, 8))
+
+    def loss(xx, ww):
+        return (ops.matmul(xx, ww, transpose_b=True, interpret=True) ** 2).sum()
+
+    gx, gw = jax.grad(loss, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(np.asarray(gx),
+                               np.asarray(2 * (x @ w.T) @ w),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gw),
+                               np.asarray(2 * (x @ w.T).T @ x),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_tied_embeddings_head_uses_unified_matmul():
+    """models.layers.logits_from_hidden contracts the stored (vocab, d)
+    table through ops.matmul(transpose_b=True) and matches the einsum it
+    replaced."""
+    from repro.models import layers
+    from repro.models.common import ArchConfig
+    cfg = ArchConfig(name="t", family="dense", n_layers=1, d_model=16,
+                     n_heads=2, n_kv_heads=2, d_ff=32, vocab_size=64,
+                     tie_embeddings=True)
+    key = jax.random.PRNGKey(9)
+    params = {"embed": {"table": _rand(key, (cfg.vocab_size, cfg.d_model))}}
+    x = _rand(jax.random.PRNGKey(10), (2, 3, cfg.d_model))
+    got = layers.logits_from_hidden(params, x, cfg)
+    want = jnp.einsum("bsd,vd->bsv", x, params["embed"]["table"],
+                      preferred_element_type=jnp.float32)
+    assert _err(got, want) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# apply(): the public expression entry
+# ---------------------------------------------------------------------------
+
+def test_apply_col_layout_binds_storage_buffer():
+    """A col-layout leaf and its transpose() twin share one normal form, so
+    apply binds the SAME physical (n, k) array to both — and both match
+    a @ b, on the kernel path and the XLA oracle alike."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(14))
+    a = _rand(k1, (4, 6))
+    b = _rand(k2, (6, 8))
+    via_col = E.inner("add", "mul", E.arr("A", (4, 6)),
+                      E.arr("B", (6, 8), layout="col"))
+    via_t = E.inner("add", "mul", E.arr("A", (4, 6)),
+                    E.transpose(E.arr("B", (8, 6))))
+    storage_b = b.T                                     # the (8, 6) buffer
+    got_col = ops.apply(via_col, a, storage_b, interpret=True,
+                        out_dtype=jnp.float32)
+    got_t = ops.apply(via_t, a, storage_b, interpret=True,
+                      out_dtype=jnp.float32)
+    assert _err(got_col, a @ b) < 1e-5
+    np.testing.assert_array_equal(np.asarray(got_col), np.asarray(got_t))
+    with hw.use_hardware("v100"):                       # eval_expr oracle
+        assert _err(ops.apply(via_col, a, storage_b,
+                              out_dtype=jnp.float32), a @ b) < 1e-5
+    # binding the logical (k, n) array is a shape error, not silent garbage
+    with pytest.raises(ValueError, match="storage shape"):
+        ops.apply(via_col, a, b, interpret=True)
+
+
+def test_apply_validates_leaf_arity_and_shapes():
+    expr = E.matmul_expr(4, 6, 5)
+    a = jnp.zeros((4, 6))
+    with pytest.raises(ValueError, match="leaves"):
+        ops.apply(expr, a)
+    with pytest.raises(ValueError, match="shape"):
+        ops.apply(expr, a, jnp.zeros((5, 6)))
+
+
+def test_apply_xla_fallback_matches_kernel_path():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(11))
+    a, b = _rand(k1, (9, 7)), _rand(k2, (7, 13))
+    expr = E.inner("max", "add", E.arr("A", (9, 7)), E.arr("B", (7, 13)))
+    kern = ops.apply(expr, a, b, interpret=True, out_dtype=jnp.float32)
+    with hw.use_hardware("v100"):                  # backend "xla"
+        oracle = ops.apply(expr, a, b, out_dtype=jnp.float32)
+    assert _err(kern, oracle) < 1e-5
+
+
+def test_eval_expr_handles_transpose_psi_and_reduce():
+    k1 = jax.random.PRNGKey(12)
+    x = _rand(k1, (3, 4))
+    np.testing.assert_allclose(
+        np.asarray(ref.eval_expr(E.transpose(E.arr("A", (3, 4))), x)),
+        np.asarray(x).T)
+    np.testing.assert_allclose(
+        np.asarray(ref.eval_expr(E.psi((2,), E.arr("A", (3, 4))), x)),
+        np.asarray(x)[2])
+    np.testing.assert_allclose(
+        np.asarray(ref.eval_expr(E.reduce("min", E.arr("A", (3, 4)), 1), x)),
+        np.asarray(x).min(axis=1), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# the schedule cache under expression keys
+# ---------------------------------------------------------------------------
+
+def test_semirings_are_distinct_cache_lines():
+    sched.reset_schedule_cache()
+    entry = hw.get_entry("cpu")
+    a, b = E.arr("A", (32, 16)), E.arr("B", (16, 24))
+    sched.get_schedule(E.inner("add", "mul", a, b), dtype="float32",
+                       hardware=entry)
+    sched.get_schedule(E.inner("max", "add", a, b), dtype="float32",
+                       hardware=entry)
+    sched.get_schedule(E.inner("min", "add", a, b), dtype="float32",
+                       hardware=entry)
+    stats = sched.schedule_cache_stats()
+    assert stats["misses"] == 3 and stats["hits"] == 0
+    # only the (mul, add) line ran the brute-force block solver
+    assert stats["solves"] == 1
+
+
+def test_tropical_schedule_semantics_and_scratch():
+    entry = hw.get_entry("cpu")
+    bundle = sched.get_schedule(
+        E.inner("min", "add", E.arr("D", (200, 200)), E.arr("D2", (200, 200))),
+        dtype="float32", hardware=entry)
+    s = bundle.schedule
+    assert (s.combine, s.reduce_op) == ("add", "min")
+    assert s.needs_scratch
+    fn = emit_pallas(s, out_dtype=jnp.float32, interpret=True)
+    assert fn is not None

@@ -45,6 +45,49 @@ def test_gamma_col_matches_fortran_order():
         assert flat_f[moa.gamma_col(tuple(idx), a.shape)] == a[tuple(idx)]
 
 
+@settings(max_examples=50, deadline=None)
+@given(small_shapes, st.data())
+def test_gamma_col_bijection(shape, data):
+    n = moa.pi(shape)
+    off = data.draw(st.integers(0, n - 1))
+    idx = moa.gamma_col_inverse(off, shape)
+    assert moa.gamma_col(idx, shape) == off
+    # and forward-then-back recovers the index
+    rt = moa.gamma_col_inverse(moa.gamma_col(idx, shape), shape)
+    assert rt == idx
+
+
+@settings(max_examples=50, deadline=None)
+@given(small_shapes, st.data())
+def test_gamma_col_is_gamma_row_reversed(shape, data):
+    """The two layouts are duals: gamma_col(i; s) == gamma_row(rev i; rev s),
+    and the inverses commute with reversal the same way — the property the
+    transposed-operand schedules lean on."""
+    n = moa.pi(shape)
+    off = data.draw(st.integers(0, n - 1))
+    idx = moa.gamma_col_inverse(off, shape)
+    assert idx == tuple(reversed(moa.gamma_row_inverse(off, tuple(reversed(shape)))))
+    assert moa.gamma_col(idx, shape) == \
+        moa.gamma_row(tuple(reversed(idx)), tuple(reversed(shape)))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 4))
+def test_gamma_col_inverse_is_transpose_of_row_inverse(m, n):
+    """Reading a row-major (n, k) array through its transpose IS the
+    column-major layout of the (k, n) view: for every flat offset the row
+    index recovered under one layout is the reversed pair under the other."""
+    shape = (m, n)
+    for off in range(m * n):
+        i, j = moa.gamma_row_inverse(off, shape)
+        assert moa.gamma_col_inverse(off, (n, m)) == (j, i)
+
+
+def test_gamma_col_inverse_rejects_out_of_range():
+    with pytest.raises(IndexError):
+        moa.gamma_col_inverse(6, (2, 3))
+
+
 @settings(max_examples=30, deadline=None)
 @given(st.integers(1, 4), st.integers(1, 4), st.integers(1, 3), st.integers(1, 3))
 def test_gamma_blocked_bijection(mo, no, bm, bn):

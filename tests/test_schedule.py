@@ -13,6 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import expr
 from repro.core import hardware as hw
 from repro.core import moa, onf
 from repro.core import schedule as sched
@@ -152,32 +153,43 @@ def test_derived_path_non_divisible_shapes(m, k, n):
 
 
 @pytest.mark.parametrize("op,shapes", [
-    ("gemm", (100, 70, 130)),
-    ("expert", (3, 50, 40, 30)),
+    ("gemm", (37, 23, 41)),
+    ("expert", (3, 18, 12, 10)),
     ("hadamard", (37, 141)),
 ])
-def test_derived_bit_identical_to_legacy(op, shapes):
-    """The derived schedules replace the hand-written kernels bit-for-bit
-    (interpret mode), including the padded remainder blocks."""
+def test_derived_bit_identical_to_onf_oracle(op, shapes):
+    """Interpret-mode kernels are bit-identical to the ONF oracle
+    (``Onf.execute``) on integer-valued f32 inputs, where every summation
+    order produces the same exact floats — including padded remainder
+    blocks.  This replaced the legacy hand-written-kernel cross-check when
+    those kernels were removed."""
     k1, k2 = jax.random.split(jax.random.PRNGKey(2))
+
+    def ints(key, shape):
+        return jax.random.randint(key, shape, -4, 5).astype(jnp.float32)
+
     if op == "gemm":
         m, k, n = shapes
-        a = jax.random.normal(k1, (m, k), jnp.float32)
-        b = jax.random.normal(k2, (k, n), jnp.float32)
+        a, b = ints(k1, (m, k)), ints(k2, (k, n))
         got = ops.moa_gemm(a, b, interpret=True)
-        ref = ops.moa_gemm(a, b, interpret=True, legacy=True)
+        o = onf.gemm_onf(m, k, n)
+        want = o.execute(o.init_out(m * n), np.asarray(a).ravel(),
+                         np.asarray(b).ravel()).reshape(m, n)
     elif op == "expert":
         e, cap, d, f = shapes
-        x = jax.random.normal(k1, (e, cap, d), jnp.float32)
-        w = jax.random.normal(k2, (e, d, f), jnp.float32)
+        x, w = ints(k1, (e, cap, d)), ints(k2, (e, d, f))
         got = ops.expert_gemm(x, w, interpret=True)
-        ref = ops.expert_gemm(x, w, interpret=True, legacy=True)
+        o = onf.expert_gemm_onf(e, cap, d, f)
+        want = o.execute(o.init_out(e * cap * f), np.asarray(x).ravel(),
+                         np.asarray(w).ravel()).reshape(e, cap, f)
     else:
         m, n = shapes
-        a = jax.random.normal(k1, (m, n), jnp.float32)
+        a = ints(k1, (m, n))
         got = ops.hadamard(a, a, interpret=True)
-        ref = ops.hadamard(a, a, interpret=True, legacy=True)
-    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+        o = onf.hadamard_onf(m, n)
+        want = o.execute(o.init_out(m * n), np.asarray(a).ravel(),
+                         np.asarray(a).ravel()).reshape(m, n)
+    np.testing.assert_array_equal(np.asarray(got), want)
 
 
 def test_unified_matmul_entry_collapses_batch_and_head_dims():
@@ -221,21 +233,58 @@ def test_expert_matmul_entry_matches_einsum():
 # the schedule cache: repeated calls never re-run solve_blocks
 # ---------------------------------------------------------------------------
 
-def test_schedule_cache_hits_and_solver_counter():
+def test_schedule_cache_keyed_on_normal_form():
     sched.reset_schedule_cache()
     entry = hw.get_entry("cpu")
-    b0 = sched.get_schedule("gemm", (300, 200, 100), "float32", entry)
+    gemm = expr.matmul_expr(300, 200, 100)
+    b0 = sched.get_schedule(gemm, dtype="float32", hardware=entry)
     after_first = sched.schedule_cache_stats()
     assert after_first["misses"] == 1 and after_first["solves"] == 1
-    b1 = sched.get_schedule("gemm", (300, 200, 100), "float32", entry)
+    b1 = sched.get_schedule(gemm, dtype="float32", hardware=entry)
     after_second = sched.schedule_cache_stats()
     assert b1 is b0
     assert after_second["hits"] == 1
     assert after_second["solves"] == 1          # no repeated brute-force work
+    # a structurally identical expression is the SAME cache line — the
+    # normal form, not object identity or a string name, is the key
+    again = expr.inner("add", "mul", expr.arr("A", (300, 200)),
+                       expr.arr("B", (200, 100)))
+    assert sched.get_schedule(again, dtype="float32", hardware=entry) is b0
     # a different hardware entry is a different cache line
-    sched.get_schedule("gemm", (300, 200, 100), "float32",
-                       hw.get_entry("v100"))
+    sched.get_schedule(gemm, dtype="float32", hardware=hw.get_entry("v100"))
     assert sched.schedule_cache_stats()["misses"] == 2
+
+
+def test_deprecated_string_op_lands_on_expression_cache_line():
+    """The one-release string signature still works (with a warning) and
+    shares cache lines with the equivalent expression."""
+    sched.reset_schedule_cache()
+    entry = hw.get_entry("cpu")
+    b0 = sched.get_schedule(expr.matmul_expr(64, 32, 48), dtype="float32",
+                            hardware=entry)
+    with pytest.deprecated_call():
+        b1 = sched.get_schedule("gemm", (64, 32, 48), "float32", entry)
+    assert b1 is b0
+    assert sched.schedule_cache_stats()["hits"] == 1
+    with pytest.raises(ValueError, match="unknown schedule op"):
+        with pytest.deprecated_call():
+            sched.get_schedule("conv", (1, 2, 3), "float32", entry)
+
+
+def test_transposed_and_col_layout_share_a_normal_form():
+    """transpose(row-major (n,k)) and col-major (k,n) psi-reduce to the same
+    flat coefficients, hence the same schedule-cache line."""
+    sched.reset_schedule_cache()
+    entry = hw.get_entry("cpu")
+    via_transpose = expr.inner("add", "mul", expr.arr("A", (32, 16)),
+                               expr.transpose(expr.arr("B", (24, 16))))
+    via_col = expr.inner("add", "mul", expr.arr("A", (32, 16)),
+                         expr.arr("B", (16, 24), layout="col"))
+    b0 = sched.get_schedule(via_transpose, dtype="float32", hardware=entry)
+    b1 = sched.get_schedule(via_col, dtype="float32", hardware=entry)
+    assert b1 is b0
+    assert sched.schedule_cache_stats() == {"hits": 1, "misses": 1,
+                                            "solves": 1}
 
 
 def test_ops_path_reuses_cached_schedule():
@@ -271,5 +320,6 @@ def test_vmem_validation_rejects_oversized_blocks():
     huge = BlockChoice(bm=4096, bk=4096, bn=4096, vmem_bytes=0,
                        arithmetic_intensity=0, utilization=1)
     with pytest.raises(ValueError, match="VMEM"):
-        sched.get_schedule("gemm", (8192, 8192, 8192), "float32",
-                           hw.get_entry("cpu"), blocks=huge)
+        sched.get_schedule(expr.matmul_expr(8192, 8192, 8192),
+                           dtype="float32", hardware=hw.get_entry("cpu"),
+                           blocks=huge)
