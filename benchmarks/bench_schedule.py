@@ -5,9 +5,12 @@ Seeds the perf trajectory for the Schedule subsystem: wall-clock on this host
 plus the modeled TPU time/energy from ``core.energy`` for the block choice the
 schedule cache derived.  Rows cover the redesigned expression API: the plain
 derived GEMM, the transposed-operand ``matmul(transpose_b=True)`` schedule
-(column-gamma coefficients, no relayout copy) and the max-plus semiring
-through the same emitter.  Also writes ``BENCH_schedule.json`` at the repo
-root so later PRs can diff the trajectory.
+(column-gamma coefficients, no relayout copy), the max-plus semiring through
+the same emitter, and ``matmul_sharded`` rows — the derived DistributedPlan
+per sharding kind on an 8-way mesh, with its collective choice and modeled
+per-device HBM residency + interconnect bytes.  Also writes
+``BENCH_schedule.json`` at the repo root so later PRs can diff the
+trajectory.
 """
 from __future__ import annotations
 
@@ -22,9 +25,18 @@ from repro.core import expr as E
 from repro.core import schedule as sched
 from repro.core.energy import gemm_energy
 from repro.core.hardware import get_entry
+from repro.core.mesh import MeshShape
+from repro.distributed import plan as dplan
 from repro.kernels import ops
 
 SHAPES = [(128, 128, 128), (256, 256, 256), (100, 70, 130)]
+#: the distributed-plan rows model an 8-way slice of the v5e "data" ring
+MESH8 = MeshShape((("x", 8),))
+#: sharding kinds for the matmul_sharded rows (collective derived, then
+#: modeled per-device HBM residency + interconnect bytes)
+SHARDINGS = [("row", {"m": "x"}, {}),
+             ("sigma", {"k": "x"}, {}),
+             ("gather", {"m": "x"}, {"replicate_out": True})]
 JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
                          "BENCH_schedule.json")
 
@@ -73,6 +85,19 @@ def run():
                      "tropical semiring, same emitter"))
         rows.append((f"{tag}/maxplus_jnp", us_maxplus_xla,
                      "XLA broadcast+fold oracle"))
+        sharded = {}
+        for kind, shard, kw in SHARDINGS:
+            plan = dplan.matmul_plan(m, k, n, MESH8, shard=shard,
+                                     hardware=entry, **kw)
+            hbm = plan.hbm_bytes_per_device("float32")
+            ici = plan.ici_bytes_per_device("float32")
+            sharded[kind] = {"collective": plan.collective,
+                             "dropped": [list(d) for d in plan.dropped],
+                             "hbm_bytes_per_device": hbm,
+                             "ici_bytes_per_device": ici}
+            rows.append((f"{tag}/matmul_sharded_{kind}", "-",
+                         f"collective={plan.collective} HBM/dev={hbm}B "
+                         f"ICI/dev={ici}B (derived plan, 8-way mesh)"))
         records.append({
             "shape": [m, k, n],
             "us_derived_interpret": us_derived,
@@ -89,10 +114,12 @@ def run():
             "modeled_energy_J": rep.energy_J,
             "modeled_power_W": rep.power_W,
             "bound": rep.bound,
+            "sharded": sharded,
         })
     stats = sched.schedule_cache_stats()
-    payload = {"hardware": entry.name, "entries": records,
-               "schedule_cache": stats}
+    payload = {"hardware": entry.name, "mesh": list(MESH8.axes),
+               "entries": records, "schedule_cache": stats,
+               "plan_cache": dplan.plan_cache_stats()}
     with open(JSON_PATH, "w") as f:
         json.dump(payload, f, indent=2)
     rows.append(("schedule/cache",

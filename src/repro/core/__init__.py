@@ -5,4 +5,4 @@ DNF->ONF loop-nest derivation (onf), dimension lifting to hardware shapes
 (lifting), the static block-size solver (blocking), and the roofline/energy
 cost models (cost, energy) that the solver and benchmarks share.
 """
-from repro.core import moa, onf, lifting, blocking, cost, energy  # noqa: F401
+from repro.core import moa, onf, lifting, mesh, blocking, cost, energy  # noqa: F401

@@ -87,7 +87,8 @@ def solve_blocks(m: int, k: int, n: int, dtype="bfloat16",
                  hardware: HardwareShape = TPU_V5E,
                  vmem_budget_frac: float = 0.5,
                  buffering: int = 2,
-                 acc_dtype="float32") -> BlockChoice:
+                 acc_dtype="float32",
+                 materialized_combine: bool = False) -> BlockChoice:
     """Choose (bm, bk, bn) for C[m,n] += A[m,k] B[k,n].
 
     Mirrors the paper's derivation: enumerate hardware-aligned candidates,
@@ -95,6 +96,11 @@ def solve_blocks(m: int, k: int, n: int, dtype="bfloat16",
     for C) fit the VMEM budget, maximize arithmetic intensity then block
     volume.  Shapes smaller than the alignment are padded up (grid handles
     the remainder via masking in the kernel).
+
+    ``materialized_combine``: the in-block body pairs operands by broadcast
+    before folding (any semiring other than (mul, add) — no MXU fusion), so
+    a full f32 ``(bm, bn, bk)`` intermediate joins the resident working set.
+    The same objective then lands on much flatter tiles than the MXU GEMM.
     """
     esize = _dtype_size(dtype)
     acc_size = _dtype_size(acc_dtype)
@@ -112,6 +118,8 @@ def solve_blocks(m: int, k: int, n: int, dtype="bfloat16",
         for bn in cand_n:
             for bk in cand_k:
                 ws = (bm * bk + bk * bn) * esize * buffering + bm * bn * acc_size
+                if materialized_combine:
+                    ws += bm * bn * bk * acc_size
                 if ws > budget:
                     continue
                 flops = 2.0 * bm * bn * bk

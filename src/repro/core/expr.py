@@ -245,6 +245,24 @@ def hadamard_expr(m: int, n: int) -> Combine:
     return combine("mul", arr("A", (m, n)), arr("B", (m, n)))
 
 
+def head_gemm_expr(h: int, m: int, k: int, n: int,
+                   transpose_b: bool = False) -> Inner:
+    """Per-head batched GEMM over a head-MIDDLE weight — the MLA decode
+    contractions (``bshr,rhn->bshn`` and its transposed dual).
+
+    Both leaves are read in *stored* layout through transposed views (pure
+    index rewrites): X binds its stored ``(m, h, k)`` activation block, W
+    the stored ``(k, h, n)`` table (``(n, h, k)`` when ``transpose_b``).
+    normalize turns the permutations into strided-but-dense coefficients,
+    so the derived schedule blocks both buffers in place.  Result shape
+    ``(h, m, n)``.
+    """
+    x = transpose(arr("X", (m, h, k)), (1, 0, 2))
+    w = transpose(arr("W", (n, h, k)), (1, 2, 0)) if transpose_b \
+        else transpose(arr("W", (k, h, n)), (1, 0, 2))
+    return inner("add", "mul", x, w, batch=1)
+
+
 # ---------------------------------------------------------------------------
 # psi reduction: expression -> NormalForm -> Onf
 # ---------------------------------------------------------------------------

@@ -1,0 +1,105 @@
+"""Mesh shapes: the device level of the paper's dimension lifting.
+
+The paper's Definition 3.1 partitions a shape component so that "each
+partitioned shape is used to identify an architectural resource".  The
+schedule subsystem already lifts onto *on-chip* resources (proc / vector /
+sigma block); a ``MeshShape`` stacks one more level — named device axes — on
+top of a ``HardwareShape``, so the same ``lift_loop`` rewrite can split any
+logical axis ``size -> (mesh, proc, vector, block)``.
+
+A mesh-lifted loop is tagged with the resource ``"mesh:<axis>"``.  Such a
+loop has no single-chip schedule (``derive_schedule`` rejects it); instead
+``distributed.plan.derive_plan`` reads the mesh-tagged Access coefficients
+back out as ``PartitionSpec`` entries and a collective schedule, and derives
+the per-shard schedule from the *local* (mesh-divided) extents.  This is the
+BSP-style bridging model of the paper applied end to end: one normal form,
+three hardware levels.
+
+Pure Python + dataclasses — importing this module never touches jax device
+state; ``from_jax_mesh`` accepts a ``jax.sharding.Mesh`` duck-typed (only
+``axis_names`` and ``devices.shape`` are read).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.lifting import HardwareShape
+from repro.core.moa import pi
+from repro.core.onf import Onf, lift_loop
+
+#: resource-tag prefix for mesh-lifted loops: "mesh:<axis-name>"
+MESH_RESOURCE_PREFIX = "mesh:"
+
+
+def mesh_resource(axis_name: str) -> str:
+    return MESH_RESOURCE_PREFIX + axis_name
+
+
+def is_mesh_resource(resource) -> bool:
+    return isinstance(resource, str) and resource.startswith(MESH_RESOURCE_PREFIX)
+
+
+def mesh_axis_of(resource: str) -> str:
+    """Inverse of ``mesh_resource``: the device axis a lifted loop indexes."""
+    if not is_mesh_resource(resource):
+        raise ValueError(f"{resource!r} is not a mesh resource tag")
+    return resource[len(MESH_RESOURCE_PREFIX):]
+
+
+@dataclass(frozen=True)
+class MeshShape:
+    """Named device axes, outermost hardware level of the lifting hierarchy.
+
+    ``axes`` are ordered (name, size) pairs — the same shape a
+    ``jax.sharding.Mesh`` has, without the device objects, so plans can be
+    derived (and tested) with no devices attached.
+    """
+    axes: tuple[tuple[str, int], ...]
+
+    def __post_init__(self):
+        names = [n for n, _ in self.axes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate mesh axis in {names}")
+        for n, s in self.axes:
+            if int(s) < 1:
+                raise ValueError(f"mesh axis {n!r} has non-positive size {s}")
+
+    @property
+    def axis_names(self) -> tuple[str, ...]:
+        return tuple(n for n, _ in self.axes)
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return tuple(s for _, s in self.axes)
+
+    @property
+    def n_devices(self) -> int:
+        return pi(self.shape)
+
+    def axis_size(self, name: str) -> int:
+        for n, s in self.axes:
+            if n == name:
+                return s
+        raise KeyError(f"unknown mesh axis {name!r}; have {self.axis_names}")
+
+    @staticmethod
+    def from_hardware(hardware: HardwareShape) -> "MeshShape":
+        """The registry's hardware shapes already declare their mesh axes
+        (paper Table 1's outermost rows); this instantiates them."""
+        return MeshShape(tuple(hardware.mesh_axes))
+
+
+def from_jax_mesh(mesh) -> MeshShape:
+    """MeshShape of a ``jax.sharding.Mesh`` (duck-typed; no jax import)."""
+    if isinstance(mesh, MeshShape):
+        return mesh
+    return MeshShape(tuple(zip(tuple(mesh.axis_names),
+                               tuple(mesh.devices.shape))))
+
+
+def mesh_lift(o: Onf, index: str, mesh: MeshShape, axis_name: str) -> Onf:
+    """One more dimension lift: split loop ``index`` over device axis
+    ``axis_name`` — ``i -> (i_o over mesh:<axis>, i_i)`` — with the same
+    affine Access rewrite every other lift uses."""
+    return lift_loop(o, index, mesh.axis_size(axis_name),
+                     mesh_resource(axis_name))

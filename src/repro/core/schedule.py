@@ -39,11 +39,16 @@ from repro.core import expr as expr_mod
 from repro.core import onf as onf_mod
 from repro.core.blocking import BlockChoice, solve_blocks, _dtype_size
 from repro.core.lifting import HardwareShape
+from repro.core.mesh import is_mesh_resource
 from repro.core.moa import pi
 
 #: resources whose grid loops are independent ("parallel" to Mosaic); the
 #: sigma block loop ("block") carries the accumulator and stays "arbitrary".
 PARALLEL_RESOURCES = frozenset({"proc", "vector", "grid", "expert"})
+
+#: synthetic operand axis for psi views: the flat leading slab a constant
+#: Access offset addresses (block extent 1, block index pinned at the slab)
+PSI_AXIS = "_psi"
 
 
 def _base(index: str) -> str:
@@ -63,12 +68,23 @@ class GridAxis:
 class OperandSpec:
     """One operand's BlockSpec, symbolically: which logical axis each array
     dimension walks, its full (padded) extent, the VMEM-resident block extent,
-    and which grid position drives the block index (None -> pinned at 0)."""
+    and which grid position drives the block index (None -> pinned at 0).
+
+    ``offsets`` are constant block-index offsets added per dimension — the
+    BlockSpec lowering of a psi view's constant Access term.  A non-psi
+    operand has all-zero offsets; a psi operand carries one leading
+    ``PSI_AXIS`` dimension (block extent 1) whose offset pins it at the
+    viewed slab."""
     array: str
     axes: tuple[str, ...]
     shape: tuple[int, ...]
     block: tuple[int, ...]
     grid_dims: tuple[Optional[int], ...]
+    offsets: tuple[int, ...] = ()
+
+    @property
+    def is_psi_view(self) -> bool:
+        return bool(self.axes) and self.axes[0] == PSI_AXIS
 
 
 @dataclass(frozen=True)
@@ -139,6 +155,12 @@ def derive_schedule(o: "onf_mod.Onf", hardware: Optional[HardwareShape] = None,
     dense row-major view of its loop axes, or if the derived blocks exceed
     the hardware's VMEM capacity (when ``hardware`` is given).
     """
+    if any(is_mesh_resource(l.resource) for l in o.loops):
+        raise ValueError(
+            f"Onf {o.name!r} has mesh-lifted loops — a single-chip schedule "
+            "cannot honor a device axis; derive a DistributedPlan "
+            "(repro.distributed.plan.derive_plan) and schedule its per-shard "
+            "normal form instead")
     grid_loops = [l for l in o.loops if l.resource is not None]
     inner_loops = [l for l in o.loops if l.resource is None]
     if not grid_loops:
@@ -187,10 +209,6 @@ def derive_schedule(o: "onf_mod.Onf", hardware: Optional[HardwareShape] = None,
         grid_pos[g.base] = i
 
     def _operand(a: "onf_mod.Access") -> OperandSpec:
-        if a.const:
-            raise ValueError(
-                f"{a.array}: constant offset {a.const} (a psi view) has no "
-                "BlockSpec lowering — materialize the view before scheduling")
         strides: dict[str, int] = {}
         for idx, c in a.coeffs.items():
             if c == 0:
@@ -213,13 +231,28 @@ def derive_schedule(o: "onf_mod.Onf", hardware: Optional[HardwareShape] = None,
                     f"{a.array} is not a dense row-major view: axis {b!r} "
                     f"stride {strides[b]}, expected {expected}")
             expected *= full_extent[b]
-        return OperandSpec(
-            array=a.array,
-            axes=tuple(axes),
-            shape=tuple(full_extent[b] for b in axes),
-            block=tuple(inner_extent.get(b, 1) for b in axes),
-            grid_dims=tuple(grid_pos.get(b) for b in axes),
-        )
+        axes_t = tuple(axes)
+        shape = tuple(full_extent[b] for b in axes)
+        block = tuple(inner_extent.get(b, 1) for b in axes)
+        gdims = tuple(grid_pos.get(b) for b in axes)
+        offs = (0,) * len(axes)
+        if a.const:
+            # a psi view: the constant offset must address whole leading
+            # slabs of the dense loop-axis view; it lowers to one extra
+            # leading dimension of block extent 1 whose block index is
+            # pinned at the viewed slab (the index-map offset)
+            if a.const % expected:
+                raise ValueError(
+                    f"{a.array}: constant offset {a.const} (a psi view) is "
+                    f"not a multiple of the slab size {expected} — no "
+                    "BlockSpec lowering; materialize the view first")
+            slab = a.const // expected
+            axes_t = (PSI_AXIS,) + axes_t
+            shape = (slab + 1,) + shape
+            block = (1,) + block
+            gdims = (None,) + gdims
+            offs = (slab,) + offs
+        return OperandSpec(a.array, axes_t, shape, block, gdims, offs)
 
     out_spec = _operand(o.out)
     in_specs = tuple(_operand(a) for a in o.ins)
@@ -328,13 +361,18 @@ def _build_bundle(nf: "expr_mod.NormalForm", dtype, hw_shape,
         n = ext[nsym] if nsym else 1
         k = ext[ksym]
         if blocks is None:
+            _stats["solves"] += 1
             if nf.combine == "mul" and nf.reduce_op == "add":
-                _stats["solves"] += 1
                 blocks = default_gemm_blocks(m, k, n, dtype, hw_shape)
             else:
-                blocks = BlockChoice(min(_pad(m, _SUBLANE), _LANE),
-                                     min(_pad(k, _SUBLANE), _LANE),
-                                     min(_pad(n, _LANE), _LANE), 0, 0.0, 0.0)
+                # general semirings materialize a (bm, bn, bk) f32 combine
+                # intermediate in-block (no MXU fusion): the same solver,
+                # with that array added to the working-set model, replaces
+                # the old fixed 128^3 tile
+                blocks = solve_blocks(min(m, 512), min(k, 2048), min(n, 512),
+                                      dtype, hardware=hw_shape,
+                                      vmem_budget_frac=0.25,
+                                      materialized_combine=True)
         bm, bk, bn = blocks.as_tuple()
         if msym:
             pads[msym] = _pad(m, bm)

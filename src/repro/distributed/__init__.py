@@ -1,3 +1,3 @@
-"""Distribution layer: lifting-derived sharding, overlap collectives,
-gradient compression, fault tolerance."""
-from repro.distributed import sharding  # noqa: F401
+"""Distribution layer: lifting-derived sharding, derived shard_map plans,
+overlap collectives, gradient compression, fault tolerance."""
+from repro.distributed import plan, sharding  # noqa: F401

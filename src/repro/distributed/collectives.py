@@ -15,6 +15,12 @@ gather axis is lifted over the ring position):
   over rows: each device's partial rotates around the ring accumulating, so
   reduction transfers hide behind the remaining chunks' matmuls.
 
+Both are thin consumers of derived ``DistributedPlan``s
+(``repro.distributed.plan``): the collective choice (all-gather vs psum) and
+the ring's shard extents come from ``derive_plan`` over the mesh-lifted
+matmul normal form — asserted, not assumed — and the rings are the
+latency-hiding *implementations* of the plan's collective steps.
+
 Numerics are validated against the naive forms in subprocess multi-device
 tests (tests/test_distributed.py).
 """
@@ -24,6 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.mesh import MeshShape
+from repro.distributed import plan as dplan
 from repro.kernels import ops
 
 
@@ -39,19 +47,25 @@ def _axis_size(axis_name: str) -> int:
 def ag_matmul(x: jax.Array, w: jax.Array, axis_name: str) -> jax.Array:
     """Inside shard_map: x (m_shard, k) sharded on rows over ``axis_name``;
     w (k, n) replicated.  Returns y = all_gather(x) @ w, (m_full, n),
-    computed as a ppermute ring (no full gather buffer)."""
+    computed as a ppermute ring (no full gather buffer) — the ring being
+    the latency-hiding form of the plan's derived all-gather."""
     p = _axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
-    m_shard = x.shape[0]
+    m_shard, kdim = x.shape
     n = w.shape[1]
-    y = jnp.zeros((m_shard * p, n), x.dtype)
+    plan = dplan.matmul_plan(m_shard * p, kdim, n,
+                             MeshShape(((axis_name, p),)),
+                             shard={"m": axis_name}, replicate_out=True)
+    assert plan.collective == "all_gather", plan.collective
+    rows = plan.local_extent("i")                 # == m_shard, derived
+    y = jnp.zeros((rows * p, n), x.dtype)
     perm = [(i, (i + 1) % p) for i in range(p)]
 
     def body(t, carry):
         y, chunk = carry
         src = (idx - t) % p                       # whose rows we now hold
         part = ops.matmul(chunk, w, out_dtype=x.dtype)
-        y = jax.lax.dynamic_update_slice(y, part, (src * m_shard, 0))
+        y = jax.lax.dynamic_update_slice(y, part, (src * rows, 0))
         chunk = jax.lax.ppermute(chunk, axis_name, perm)
         return (y, chunk)
 
@@ -62,12 +76,15 @@ def ag_matmul(x: jax.Array, w: jax.Array, axis_name: str) -> jax.Array:
 def psum_matmul(x: jax.Array, w: jax.Array, axis_name: str) -> jax.Array:
     """Inside shard_map: x (m, k_shard) column-sharded, w (k_shard, n)
     row-sharded over ``axis_name``.  Returns the *full* y = sum_p x_p @ w_p
-    on every device, with the reduction pipelined as a ring of partial
-    accumulations (reduce-then-broadcast fused into one rotation of 2p-2
-    steps is approximated here by chunked psum over row blocks so transfers
-    overlap matmuls)."""
+    on every device, with the derived psum pipelined as chunked per-row-block
+    reductions so transfers overlap the remaining chunks' matmuls."""
     p = _axis_size(axis_name)
-    m = x.shape[0]
+    m, k_shard = x.shape
+    plan = dplan.matmul_plan(m, k_shard * p, w.shape[1],
+                             MeshShape(((axis_name, p),)),
+                             shard={"k": axis_name})
+    assert plan.collective == "psum", plan.collective
+    assert plan.local_extent("k") == k_shard
     chunks = min(p, max(m // 8, 1))
     rows = m // chunks
 

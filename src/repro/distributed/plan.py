@@ -1,0 +1,411 @@
+"""Distributed planning: shard_map plans derived from the same lifted ONF
+that drives the Pallas kernels.
+
+The paper's dimension lifting stops being a single-chip story here: a
+``MeshShape`` (core/mesh.py) stacks named device axes on top of the
+``HardwareShape``, and ``derive_plan`` lifts the requested logical axes of a
+normalized expression one more level — ``size -> (mesh, proc, vector,
+block)`` — then reads everything a multi-device execution needs back out of
+the lifted normal form:
+
+* **partition specs** — recovered from the lifted Access coefficients: each
+  operand's storage-dim order is the descending-stride order of its affine
+  coefficients (exactly how ``derive_schedule`` recovers BlockSpecs), and a
+  storage dim is sharded iff its base axis was mesh-lifted.  A transposed
+  operand therefore gets its spec on the right *stored* dim with no special
+  casing.
+* **the collective schedule** — derived, not chosen by hand: a mesh-lifted
+  sigma (reduce) axis makes per-device partial results, so the plan emits a
+  ``psum`` (or ``reduce_scatter`` when the caller asks for a scattered
+  output); a mesh-lifted output axis with ``replicate_out`` emits an
+  ``all_gather``; anything else needs no collective at all.
+* **the per-shard schedule** — the existing ``derive_schedule`` pipeline run
+  on the *local* (mesh-divided) extents, landing in the same process-wide
+  schedule cache.
+
+Plans are cached next to schedules, keyed on ``(Onf.key(), mesh shape,
+sharding request, dtype, hardware)``.  Deriving a plan never touches jax
+device state (PartitionSpec objects are emitted lazily); executing one is
+``kernels.emit.emit_shard_map``.
+
+Non-divisible axes fall back to replication (recorded in ``plan.dropped``)
+instead of failing — the same policy as ``distributed/sharding.py``'s rule
+table, now derived per expression instead of hand-written per tensor name.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Optional, Union
+
+from repro.core import expr as expr_mod
+from repro.core import onf as onf_mod
+from repro.core import schedule as sched
+from repro.core.blocking import _dtype_size
+from repro.core.mesh import MeshShape, from_jax_mesh, mesh_resource
+from repro.core.moa import pi
+from repro.core.schedule import ScheduleBundle, _base
+
+
+@dataclass(frozen=True)
+class CollectiveStep:
+    """One derived collective: ``kind`` over device axis ``mesh_axis``;
+    ``out_dim`` is the output storage dim gathered/scattered (None for a
+    full psum)."""
+    kind: str                       # "psum" | "reduce_scatter" | "all_gather"
+    mesh_axis: str
+    out_dim: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class DistributedPlan:
+    """Everything a shard_map execution needs, derived from one normal form.
+
+    ``in_entries`` / ``out_entries`` are PartitionSpec entries per *storage*
+    dim (None = replicated), matching the binding convention of
+    ``ops.apply``; ``out_entries`` describes the output AFTER the collective
+    schedule ran.  ``bundle`` is the per-shard ``ScheduleBundle`` (derived on
+    local extents, resident in the schedule cache); ``local_nf`` the local
+    normal form the XLA-oracle path evaluates.
+    """
+    name: str
+    mesh: MeshShape
+    applied: tuple[tuple[str, str], ...]       # (axis sym, mesh axis) sharded
+    dropped: tuple[tuple[str, str], ...]       # non-divisible -> replicated
+    in_entries: tuple[tuple[Optional[str], ...], ...]
+    out_entries: tuple[Optional[str], ...]
+    collectives: tuple[CollectiveStep, ...]
+    local_nf: "expr_mod.NormalForm"
+    bundle: ScheduleBundle
+    out_shape: tuple[int, ...]                 # global logical result shape
+
+    @property
+    def collective(self) -> str:
+        """The derived collective choice, as an assertable summary."""
+        kinds = tuple(s.kind for s in self.collectives)
+        return "+".join(kinds) if kinds else "none"
+
+    def local_extent(self, sym: str) -> int:
+        return self.local_nf.extent_map[sym]
+
+    # ---- jax emitters (lazy: plan derivation itself never imports jax) ---
+    def jax_in_specs(self):
+        from jax.sharding import PartitionSpec as P
+        return tuple(P(*e) for e in self.in_entries)
+
+    def jax_out_spec(self):
+        from jax.sharding import PartitionSpec as P
+        return P(*self.out_entries)
+
+    def check_mesh(self, mesh) -> None:
+        got = from_jax_mesh(mesh)
+        if got.axes != self.mesh.axes:
+            raise ValueError(
+                f"plan {self.name!r} was derived for mesh {self.mesh.axes}, "
+                f"got {got.axes}")
+
+    # ---- modeled per-device traffic (benchmarks / capacity planning) -----
+    def local_out_shape(self) -> tuple[int, ...]:
+        """Per-device result shape AFTER the collective schedule ran (an
+        all-gather leaves the full output resident on every device)."""
+        out = list(self.out_shape)
+        for d, entry in enumerate(self.out_entries):
+            if entry is not None:
+                out[d] //= self.mesh.axis_size(entry)
+        return tuple(out)
+
+    def hbm_bytes_per_device(self, dtype="float32") -> int:
+        """Resident bytes per device: local operand shards + the result as
+        the collective schedule leaves it."""
+        esize = _dtype_size(dtype)
+        ws = sum(pi(s) for s in self.local_nf.leaf_storage_shapes())
+        ws += max(pi(self.local_nf.out_shape()), pi(self.local_out_shape()))
+        return ws * esize
+
+    def ici_bytes_per_device(self, dtype="float32", acc_bytes: int = 4) -> int:
+        """Interconnect bytes per device for the derived collective schedule
+        (ring algorithms; partial sums travel at accumulator width)."""
+        esize = _dtype_size(dtype)
+        out_elems = pi(self.out_shape)
+        total = 0.0
+        for step in self.collectives:
+            p = self.mesh.axis_size(step.mesh_axis)
+            if p <= 1:
+                continue
+            if step.kind == "psum":                   # ring all-reduce
+                total += 2.0 * (p - 1) / p * out_elems * acc_bytes
+            elif step.kind == "reduce_scatter":
+                total += (p - 1) / p * out_elems * acc_bytes
+            elif step.kind == "all_gather":
+                total += (p - 1) / p * out_elems * esize
+        return int(total)
+
+
+# ---------------------------------------------------------------------------
+# the plan cache — keyed next to the schedule cache, on normal forms
+# ---------------------------------------------------------------------------
+
+PLAN_CACHE_SIZE = 128
+_cache: "OrderedDict[tuple, DistributedPlan]" = OrderedDict()
+_lock = threading.Lock()
+_stats = {"hits": 0, "misses": 0}
+
+
+def plan_cache_stats() -> dict[str, int]:
+    with _lock:
+        return dict(_stats)
+
+
+def reset_plan_cache() -> None:
+    with _lock:
+        _cache.clear()
+        for k in _stats:
+            _stats[k] = 0
+
+
+def _spec_entries(a: "onf_mod.Access", shard_axes: dict[str, str]
+                  ) -> tuple[Optional[str], ...]:
+    """PartitionSpec entries recovered from lifted Access coefficients: the
+    operand's storage dims are its base axes in descending-stride order (the
+    BlockSpec recovery rule), and a dim is sharded iff its axis was
+    mesh-lifted."""
+    strides: dict[str, int] = {}
+    for idx, c in a.coeffs.items():
+        if c == 0:
+            continue
+        b = _base(idx)
+        strides[b] = min(strides.get(b, c), c)
+    order = sorted(strides, key=lambda b: -strides[b])
+    return tuple(shard_axes.get(b) for b in order)
+
+
+def _local_normal_form(nf: "expr_mod.NormalForm",
+                       local_ext: dict[str, int]) -> "expr_mod.NormalForm":
+    """The per-shard normal form: every mesh-lifted axis at its local
+    extent, leaves included — ready for the existing schedule derivation."""
+    leaves = tuple(
+        expr_mod.LeafSpec(
+            l.array,
+            tuple((t, local_ext.get(t, e) if isinstance(t, str) else e)
+                  for t, e in l.dims),
+            l.layout)
+        for l in nf.leaves)
+    return expr_mod.NormalForm(
+        name=nf.name + "@shard",
+        out_axes=nf.out_axes,
+        reduce_axes=nf.reduce_axes,
+        extents=tuple((s, local_ext.get(s, e)) for s, e in nf.extents),
+        leaves=leaves,
+        combine=nf.combine,
+        reduce_op=nf.reduce_op)
+
+
+def derive_plan(expr: Union["expr_mod.Expr", "expr_mod.NormalForm"],
+                mesh, *, shard: dict[str, str],
+                hardware=None, dtype="float32",
+                replicate_out: bool = False,
+                scatter_axis: Optional[str] = None,
+                name: Optional[str] = None) -> DistributedPlan:
+    """Derive the full multi-device plan for a normalizable expression.
+
+    ``shard`` maps normal-form axis symbols to mesh axis names (use
+    ``matmul_plan``/``expert_plan`` for role-named fronts).  A requested
+    axis whose extent the mesh axis does not divide falls back to
+    replication (recorded in ``plan.dropped``).  ``replicate_out`` asks for
+    a replicated result (mesh-lifted output axes then emit all-gathers);
+    ``scatter_axis`` names an output axis to scatter a sigma reduction over
+    (reduce-scatter instead of psum).
+    """
+    nf = expr if isinstance(expr, expr_mod.NormalForm) else \
+        expr_mod.normal_form(expr, name=name or getattr(expr, "name", None)
+                             or "expr")
+    mesh = from_jax_mesh(mesh)
+    from repro.core.hardware import current_hardware
+    hw = hardware or current_hardware()
+    hw_name = getattr(hw, "name", None) or hw.shape.name
+    key = (nf.key(), mesh.axes, tuple(sorted(shard.items())),
+           bool(replicate_out), scatter_axis, str(dtype), hw_name)
+    with _lock:
+        hit = _cache.get(key)
+        if hit is not None:
+            _stats["hits"] += 1
+            _cache.move_to_end(key)
+            return hit
+        _stats["misses"] += 1
+
+    if any(l.const for l in (lf.access(nf.extent_map) for lf in nf.leaves)):
+        raise ValueError("psi-view leaves are not supported in distributed "
+                         "plans yet — materialize the view first")
+    ext = nf.extent_map
+    applied, dropped, used_axes = [], [], set()
+    for sym in sorted(shard):
+        axis = shard[sym]
+        if sym not in ext:
+            raise KeyError(f"unknown axis {sym!r}; normal form has "
+                           f"{tuple(ext)}")
+        p = mesh.axis_size(axis)                 # raises on unknown mesh axis
+        if axis in used_axes:
+            raise ValueError(f"mesh axis {axis!r} assigned to two axes")
+        if ext[sym] % p:
+            dropped.append((sym, axis))          # replication fallback
+            continue
+        used_axes.add(axis)
+        applied.append((sym, axis))
+    applied, dropped = tuple(applied), tuple(dropped)
+    shard_axes = dict(applied)
+
+    # one more dimension lift: the mesh level, ahead of proc/vector/block
+    o = nf.onf()
+    for sym, axis in applied:
+        o = onf_mod.lift_loop(o, sym, mesh.axis_size(axis),
+                              mesh_resource(axis))
+
+    in_entries = tuple(_spec_entries(a, shard_axes) for a in o.ins)
+    out_entries = list(_spec_entries(o.out, shard_axes))
+
+    # the collective schedule, from which axes were lifted where
+    if scatter_axis is not None:
+        if scatter_axis not in nf.out_axes:
+            raise ValueError(f"scatter_axis {scatter_axis!r} is not an "
+                             f"output axis of {nf.out_axes}")
+        if not any(sym in nf.reduce_axes for sym, _ in applied):
+            raise ValueError(
+                "scatter_axis requires a mesh-lifted reduction axis — no "
+                "sigma axis is sharded (or it fell back to replication), so "
+                "there is nothing to reduce-scatter")
+    steps: list[CollectiveStep] = []
+    for sym, axis in applied:
+        if sym not in nf.reduce_axes:
+            continue
+        if scatter_axis is not None:
+            d = nf.out_axes.index(scatter_axis)
+            if out_entries[d] is not None:
+                raise ValueError(f"scatter_axis {scatter_axis!r} is already "
+                                 "mesh-sharded")
+            steps.append(CollectiveStep("reduce_scatter", axis, d))
+            out_entries[d] = axis
+        else:
+            steps.append(CollectiveStep("psum", axis))
+    if replicate_out:
+        for d, entry in enumerate(out_entries):
+            if entry is not None and (nf.out_axes[d], entry) in applied:
+                steps.append(CollectiveStep("all_gather", entry, d))
+                out_entries[d] = None
+
+    local_ext = {sym: ext[sym] // mesh.axis_size(axis)
+                 for sym, axis in applied}
+    local_nf = _local_normal_form(nf, local_ext)
+    bundle = sched.get_schedule(local_nf, dtype=dtype, hardware=hw)
+
+    plan = DistributedPlan(
+        name=nf.name, mesh=mesh, applied=applied, dropped=dropped,
+        in_entries=in_entries, out_entries=tuple(out_entries),
+        collectives=tuple(steps), local_nf=local_nf, bundle=bundle,
+        out_shape=nf.out_shape())
+    with _lock:
+        plan = _cache.setdefault(key, plan)
+        _cache.move_to_end(key)
+        while len(_cache) > PLAN_CACHE_SIZE:
+            _cache.popitem(last=False)
+        return plan
+
+
+# ---------------------------------------------------------------------------
+# role-named fronts for the canonical expressions
+# ---------------------------------------------------------------------------
+
+#: matmul_expr's normal form names its axes (i, j) out + (k) reduce
+MATMUL_ROLES = {"m": "i", "n": "j", "k": "k"}
+#: expert_gemm_expr's normal form names its axes (i, j, l) out + (k) reduce
+EXPERT_ROLES = {"e": "i", "m": "j", "n": "l", "k": "k"}
+
+
+def _translate(shard: dict[str, str], roles: dict[str, str]) -> dict[str, str]:
+    out = {}
+    for role, axis in shard.items():
+        if axis is None:
+            continue
+        if role not in roles:
+            raise KeyError(f"unknown role {role!r}; valid: {sorted(roles)}")
+        out[roles[role]] = axis
+    return out
+
+
+def matmul_plan(m: int, k: int, n: int, mesh, *, shard: dict[str, str],
+                transpose_b: bool = False, **kw) -> DistributedPlan:
+    """Plan a (possibly transposed-operand) matmul; ``shard`` uses roles
+    {"m", "n", "k"} — k is the sigma axis, so sharding it derives the
+    psum/reduce-scatter schedule."""
+    kw.setdefault("name", "matmul")
+    if "scatter_axis" in kw and kw["scatter_axis"] is not None:
+        kw["scatter_axis"] = MATMUL_ROLES[kw["scatter_axis"]]
+    return derive_plan(expr_mod.matmul_expr(m, k, n, transpose_b=transpose_b),
+                       mesh, shard=_translate(shard, MATMUL_ROLES), **kw)
+
+
+def expert_plan(e: int, cap: int, d: int, f: int, mesh, *,
+                shard: dict[str, str], **kw) -> DistributedPlan:
+    """Plan the capacity-padded expert GEMM; roles {"e", "m", "n", "k"} —
+    sharding "e" is expert parallelism (each device a slice of experts)."""
+    kw.setdefault("name", "expert_gemm")
+    return derive_plan(expr_mod.expert_gemm_expr(e, cap, d, f), mesh,
+                       shard=_translate(shard, EXPERT_ROLES), **kw)
+
+
+# ---------------------------------------------------------------------------
+# the planned-mesh context: models route their matmuls through derived
+# plans when one is active (train/serve opt in; bare CPU runs unaffected)
+# ---------------------------------------------------------------------------
+
+class _PlannedMeshStack(threading.local):
+    """Per-thread stack: concurrent traces (parallel test workers, an async
+    eval next to training) must not see each other's planned mesh."""
+    def __init__(self):
+        self.stack: list = []
+
+
+_PLANNED_MESH = _PlannedMeshStack()
+
+
+@contextlib.contextmanager
+def planned_mesh(mesh):
+    """Scoped opt-in: inside this context, ``models/layers.py`` (and anything
+    else consulting ``current_planned_mesh``) routes its matmuls through
+    derived DistributedPlans on ``mesh`` instead of leaving sharding to the
+    SPMD partitioner."""
+    _PLANNED_MESH.stack.append(mesh)
+    try:
+        yield mesh
+    finally:
+        _PLANNED_MESH.stack.pop()
+
+
+def current_planned_mesh():
+    return _PLANNED_MESH.stack[-1] if _PLANNED_MESH.stack else None
+
+
+def tp_matmul_shard(mesh, kind: str) -> dict[str, str]:
+    """Megatron-style role assignment by mesh axis name, divisibility
+    handled by the plan's replication fallback: rows ("m") over "data",
+    and — per ``kind`` — the output columns ("col") or the contraction
+    ("sigma", deriving the TP psum) over "model"."""
+    if kind not in ("row", "col", "sigma"):
+        raise ValueError(f"unknown kind {kind!r} (row|col|sigma)")
+    names = from_jax_mesh(mesh).axis_names
+    shard: dict[str, str] = {}
+    if "data" in names:
+        shard["m"] = "data"
+    if "model" in names:
+        if kind == "col":
+            shard["n"] = "model"
+        elif kind == "sigma":
+            shard["k"] = "model"
+    if not shard:
+        # silence here would mean every device redundantly computes the
+        # full GEMM while the caller believes TP is active — fail loudly
+        raise ValueError(
+            f"planned-mesh routing expects mesh axes named 'data'/'model'; "
+            f"got {names} — pass explicit shard= roles instead")
+    return shard

@@ -15,6 +15,17 @@ schedule's semiring:
   with the same reduce op from its identity element.
 
 The accumulator flushes to the output dtype on the last sigma step.
+
+Psi views ride as index-map offsets: an operand whose Access carried a
+constant term gets a leading block-1 dimension whose block index is pinned
+at the viewed slab (``OperandSpec.offsets``) — sliced operands run derived
+kernels with no materialized copy.
+
+``emit_bundle`` wraps a cached ``ScheduleBundle`` into the full executable
+contract the ops layer uses (pad with the semiring's inert element, run,
+slice the logical result), and ``emit_shard_map`` stacks the mesh level on
+top: the same derived kernel (or the jnp oracle) runs per shard inside
+``shard_map`` with a ``DistributedPlan``'s partition specs and collectives.
 """
 from __future__ import annotations
 
@@ -27,7 +38,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import semiring
-from repro.core.schedule import Schedule
+from repro.core.schedule import Schedule, ScheduleBundle
 
 # jax renamed TPUCompilerParams -> CompilerParams; support both so the
 # kernels run on every jax this repo targets.
@@ -39,9 +50,13 @@ def compiler_params(*, dimension_semantics) -> object:
     return _PARAMS_CLS(dimension_semantics=tuple(dimension_semantics))
 
 
-def _index_map(grid_dims: tuple[Optional[int], ...]) -> Callable:
+def _index_map(grid_dims: tuple[Optional[int], ...],
+               offsets: tuple[int, ...] = ()) -> Callable:
+    offs = offsets or (0,) * len(grid_dims)
+
     def imap(*gids):
-        return tuple(gids[d] if d is not None else 0 for d in grid_dims)
+        return tuple((gids[d] if d is not None else 0) + off
+                     for d, off in zip(grid_dims, offs))
     return imap
 
 
@@ -56,7 +71,10 @@ def _general_combine(schedule: Schedule, combine_fn, reducer, vals):
     joint = tuple(schedule.out.axes) + tuple(schedule.contracted)
     aligned = []
     for opn, v in zip(schedule.ins, vals):
-        src = {ax: i for i, ax in enumerate(opn.axes)}
+        # squeeze block-1 dims outside the joint axes (the psi slab dim)
+        keep = [i for i, ax in enumerate(opn.axes) if ax in joint]
+        v = v.reshape(tuple(v.shape[i] for i in keep))
+        src = {opn.axes[i]: pos for pos, i in enumerate(keep)}
         v = jnp.transpose(v, [src[ax] for ax in joint if ax in src])
         for pos, ax in enumerate(joint):
             if ax not in src:
@@ -132,9 +150,11 @@ def emit_pallas(schedule: Schedule, combine=None, *, out_dtype=None,
     call = pl.pallas_call(
         body,
         grid=schedule.grid_extents,
-        in_specs=[pl.BlockSpec(opn.block, _index_map(opn.grid_dims))
+        in_specs=[pl.BlockSpec(opn.block, _index_map(opn.grid_dims,
+                                                     opn.offsets))
                   for opn in schedule.ins],
-        out_specs=pl.BlockSpec(out_block, _index_map(schedule.out.grid_dims)),
+        out_specs=pl.BlockSpec(out_block, _index_map(schedule.out.grid_dims,
+                                                     schedule.out.offsets)),
         out_shape=jax.ShapeDtypeStruct(schedule.out.shape, out_dtype),
         scratch_shapes=([pltpu.VMEM(out_block, jnp.float32)]
                         if red is not None else []),
@@ -147,10 +167,130 @@ def emit_pallas(schedule: Schedule, combine=None, *, out_dtype=None,
         if len(arrays) != ni:
             raise ValueError(f"{schedule.name}: expected {ni} operands")
         for arr, opn in zip(arrays, schedule.ins):
-            if tuple(arr.shape) != opn.shape:
+            if not _shape_ok(tuple(arr.shape), opn):
                 raise ValueError(
                     f"{schedule.name}: operand {opn.array} has shape "
                     f"{arr.shape}, schedule derived {opn.shape} — pad first")
         return call(*arrays)
 
     return fn
+
+
+def _shape_ok(shp: tuple[int, ...], opn) -> bool:
+    """A psi-view operand may be bound with MORE leading slabs than the
+    pinned index needs; every other dim must match the schedule exactly."""
+    if len(shp) != len(opn.shape):
+        return False
+    if shp == opn.shape:
+        return True
+    return (opn.is_psi_view and shp[0] >= opn.shape[0]
+            and shp[1:] == opn.shape[1:])
+
+
+# ---------------------------------------------------------------------------
+# bundle executor: the ops-layer contract (collapse psi slabs, pad, run,
+# slice) in one place, reused by the single-chip and shard_map paths
+# ---------------------------------------------------------------------------
+
+def _pad_to_shape(x: jax.Array, shape: tuple[int, ...],
+                  value: float = 0.0) -> jax.Array:
+    pads = [(0, t - d) for d, t in zip(x.shape, shape)]
+    if any(p for _, p in pads):
+        return jnp.pad(x, pads, constant_values=value)
+    return x
+
+
+def emit_bundle(bundle: ScheduleBundle, *, out_dtype=None,
+                interpret: bool = False) -> Callable:
+    """Executable for a cached derivation over *logical storage* operands.
+
+    Collapses a psi view's fixed leading dims to the flat slab dim the
+    schedule pinned, pads every operand to the schedule's (padded) storage
+    shape with the semiring's inert element, runs the emitted kernel, and
+    slices the logical result back out.  The missing-inert-element error
+    is only raised when padding is actually required.
+    """
+    sch = bundle.schedule
+    kern = emit_pallas(sch, out_dtype=out_dtype, interpret=interpret)
+
+    prep, needs_pad = [], False
+    for spec, logical in zip(sch.ins, bundle.in_shapes):
+        sym_rank = len(spec.shape) - (1 if spec.is_psi_view else 0)
+        lead = len(logical) - sym_rank
+        tail = tuple(logical[lead:])
+        needs_pad |= tail != (spec.shape[1:] if spec.is_psi_view
+                              else spec.shape)
+        prep.append((lead, spec))
+    if not needs_pad:
+        pad_val = 0.0                        # nothing is ever padded
+    elif len(sch.ins) == 1:
+        # single operand: no pairing happens, so the inert pad is just the
+        # reduce identity (e.g. -inf for a lone max-reduce)
+        pad_val = semiring.reduce_def(sch.reduce_op).identity
+    else:
+        pad_val = semiring.pad_value(sch.combine, sch.reduce_op)
+    out_slices = tuple(slice(0, d) for d in bundle.out_shape)
+
+    def call(*arrays):
+        padded = []
+        for x, (lead, spec) in zip(arrays, prep):
+            if spec.is_psi_view:
+                if lead > 1:                 # several fixed dims -> one slab
+                    x = x.reshape((-1,) + x.shape[lead:])
+                target = (x.shape[0],) + spec.shape[1:]
+            else:
+                if lead:                     # all-zero psi index: slab 0
+                    x = x.reshape((-1,) + x.shape[lead:])[0]
+                target = spec.shape
+            padded.append(_pad_to_shape(x, target, pad_val))
+        return kern(*padded)[out_slices]
+
+    return call
+
+
+# ---------------------------------------------------------------------------
+# the mesh level: the same derived kernel per shard, inside shard_map
+# ---------------------------------------------------------------------------
+
+def emit_shard_map(plan, mesh, local_fn: Optional[Callable] = None, *,
+                   out_dtype=None, interpret: bool = False,
+                   use_kernel: bool = True) -> Callable:
+    """Run a ``DistributedPlan``: the plan's per-shard derived kernel (or a
+    caller-supplied differentiable local function, or the jnp oracle when
+    ``use_kernel`` is False) inside ``shard_map`` with the plan's partition
+    specs, followed by the plan's collective schedule.
+
+    ``mesh`` is a live ``jax.sharding.Mesh`` whose axis names and sizes must
+    match the plan's ``MeshShape``.  Returns ``fn(*global_operands) ->
+    global_out``; operands bind exactly as in the single-chip path (storage
+    shapes), only globally sized.
+    """
+    from repro.distributed.sharding import shard_map
+
+    plan.check_mesh(mesh)
+    if local_fn is None:
+        if use_kernel:
+            local_fn = emit_bundle(plan.bundle, out_dtype=jnp.float32,
+                                   interpret=interpret)
+        else:
+            from repro.kernels import ref
+            local_fn = functools.partial(ref.eval_nf, plan.local_nf)
+
+    def body(*shards):
+        y = local_fn(*shards)
+        for step in plan.collectives:
+            if step.kind == "psum":
+                y = jax.lax.psum(y, step.mesh_axis)
+            elif step.kind == "reduce_scatter":
+                y = jax.lax.psum_scatter(y, step.mesh_axis,
+                                         scatter_dimension=step.out_dim,
+                                         tiled=True)
+            elif step.kind == "all_gather":
+                y = jax.lax.all_gather(y, step.mesh_axis, axis=step.out_dim,
+                                       tiled=True)
+            else:
+                raise ValueError(f"unknown collective kind {step.kind!r}")
+        return y if out_dtype is None else y.astype(out_dtype)
+
+    return shard_map(body, mesh, in_specs=plan.jax_in_specs(),
+                     out_specs=plan.jax_out_spec())

@@ -23,6 +23,14 @@ identical f32-accumulation semantics.
 schedule: normalize turns the transposed leaf into column-gamma
 coefficients, so the stored ``(n, k)`` array is blocked in place — no
 relayout copy of (say) a vocab embedding table every step.
+
+``matmul``/``expert_matmul``/``apply`` also accept a ``mesh=`` (a live
+``jax.sharding.Mesh``): the call then derives a ``DistributedPlan``
+(``repro.distributed.plan``) — partition specs, collective schedule and the
+per-shard derived kernel all from the same lifted normal form — and runs it
+through ``shard_map``.  ``shard`` names which axes lift onto which mesh
+axes (roles ``{"m", "n", "k"}`` for matmul, plus ``"e"`` for experts; plan
+axis symbols for ``apply``); non-divisible axes fall back to replication.
 """
 from __future__ import annotations
 
@@ -36,24 +44,15 @@ import jax.numpy as jnp
 
 from repro.core import expr as E
 from repro.core import schedule as _sched
-from repro.core import semiring
 from repro.core.blocking import BlockChoice
 from repro.core.hardware import HardwareEntry, current_hardware, get_entry
 from repro.kernels import ref
-from repro.kernels.emit import emit_pallas
+from repro.kernels.emit import emit_bundle, emit_shard_map
 
 
 def _resolve(hardware, interpret) -> tuple[HardwareEntry, bool]:
     hw = hardware or current_hardware()
     return hw, (hw.interpret if interpret is None else interpret)
-
-
-def _pad_to_shape(x: jax.Array, shape: tuple[int, ...],
-                  value: float = 0.0) -> jax.Array:
-    pads = [(0, t - d) for d, t in zip(x.shape, shape)]
-    if any(p for _, p in pads):
-        return jnp.pad(x, pads, constant_values=value)
-    return x
 
 
 # ---------------------------------------------------------------------------
@@ -69,53 +68,74 @@ def _block_key(blocks):
     return tuple(blocks) if isinstance(blocks, (list, tuple)) else blocks
 
 
-def _expr_callable(expr: "E.Expr", dtype_s: str, out_dtype_s: str,
-                   hw_name: str, interpret: bool, blocks=None):
-    """The memoized executable for one normal form: pad operands to the
-    schedule's storage shapes (with the semiring's inert element), run the
-    emitted kernel, slice the logical result back out."""
-    nf = expr if isinstance(expr, E.NormalForm) else E.normal_form(expr)
-    key = (nf.key(), dtype_s, out_dtype_s, hw_name, interpret,
-           _block_key(blocks))
+def _cache_put(key, fn):
+    with _CALLABLES_LOCK:
+        fn = _CALLABLES.setdefault(key, fn)
+        _CALLABLES.move_to_end(key)
+        while len(_CALLABLES) > _CALLABLES_SIZE:
+            _CALLABLES.popitem(last=False)
+        return fn
+
+
+def _cache_get(key):
     with _CALLABLES_LOCK:
         fn = _CALLABLES.get(key)
         if fn is not None:
             _CALLABLES.move_to_end(key)
-            return fn
+        return fn
+
+
+def _expr_callable(expr: "E.Expr", dtype_s: str, out_dtype_s: str,
+                   hw_name: str, interpret: bool, blocks=None):
+    """The memoized executable for one normal form: pad operands to the
+    schedule's storage shapes (with the semiring's inert element), run the
+    emitted kernel, slice the logical result back out (``emit_bundle``)."""
+    nf = expr if isinstance(expr, E.NormalForm) else E.normal_form(expr)
+    key = (nf.key(), dtype_s, out_dtype_s, hw_name, interpret,
+           _block_key(blocks))
+    fn = _cache_get(key)
+    if fn is not None:
+        return fn
     bundle = _sched.get_schedule(nf, dtype=dtype_s,
                                  hardware=get_entry(hw_name), blocks=blocks)
-    kern = emit_pallas(bundle.schedule, out_dtype=out_dtype_s,
-                       interpret=interpret)
-    in_shapes = tuple(s.shape for s in bundle.schedule.ins)
-    if in_shapes == tuple(bundle.in_shapes):
-        pad_val = 0.0                       # nothing is ever padded
-    elif len(bundle.schedule.ins) == 1:
-        # single operand: no pairing happens, so the inert pad is just the
-        # reduce identity (e.g. -inf for a lone max-reduce)
-        pad_val = semiring.reduce_def(bundle.schedule.reduce_op).identity
-    else:
-        pad_val = semiring.pad_value(bundle.schedule.combine,
-                                     bundle.schedule.reduce_op)
-    out_slices = tuple(slice(0, d) for d in bundle.out_shape)
+    call = jax.jit(emit_bundle(bundle, out_dtype=out_dtype_s,
+                               interpret=interpret))
+    return _cache_put(key, call)
 
-    @jax.jit
-    def call(*arrays):
-        padded = [_pad_to_shape(x, shp, pad_val)
-                  for x, shp in zip(arrays, in_shapes)]
-        return kern(*padded)[out_slices]
 
-    with _CALLABLES_LOCK:
-        call = _CALLABLES.setdefault(key, call)
-        _CALLABLES.move_to_end(key)
-        while len(_CALLABLES) > _CALLABLES_SIZE:
-            _CALLABLES.popitem(last=False)
-        return call
+def _sharded_callable(nf: "E.NormalForm", dtype_s: str, out_dtype_s: str,
+                      hw_name: str, interpret: bool, use_kernel: bool,
+                      mesh, shard: dict, replicate_out: bool,
+                      local_fn=None, local_tag: Optional[str] = None,
+                      scatter_axis=None):
+    """Memoized shard_map executable for one (normal form, mesh, sharding)
+    triple: derives (or re-reads from the plan cache) the DistributedPlan,
+    then wraps its collectives around the per-shard kernel/oracle."""
+    from repro.distributed import plan as dplan
+
+    shard_key = tuple(sorted(shard.items()))
+    key = ("shard", nf.key(), dtype_s, out_dtype_s, hw_name, interpret,
+           use_kernel, mesh, shard_key, replicate_out, local_tag,
+           scatter_axis)
+    fn = _cache_get(key)
+    if fn is not None:
+        return fn
+    plan = dplan.derive_plan(nf, mesh, shard=shard,
+                             hardware=get_entry(hw_name), dtype=dtype_s,
+                             replicate_out=replicate_out,
+                             scatter_axis=scatter_axis)
+    call = jax.jit(emit_shard_map(plan, mesh, local_fn,
+                                  out_dtype=out_dtype_s,
+                                  interpret=interpret,
+                                  use_kernel=use_kernel))
+    return _cache_put(key, call)
 
 
 def apply(expr: "E.Expr", *arrays: jax.Array, out_dtype=None,
           interpret: Optional[bool] = None,
           hardware: Optional[HardwareEntry] = None,
-          blocks=None) -> jax.Array:
+          blocks=None, mesh=None, shard: Optional[dict] = None,
+          replicate_out: bool = False) -> jax.Array:
     """Evaluate a composed MoA expression — the public derived-kernel entry.
 
     ``arrays`` bind the expression's leaves in composition order by their
@@ -126,6 +146,11 @@ def apply(expr: "E.Expr", *arrays: jax.Array, out_dtype=None,
     backend the normal form is lifted, scheduled and emitted (cached per
     normal form); elsewhere the jnp oracle (``kernels.ref.eval_expr``)
     evaluates the same semantics.
+
+    With ``mesh=`` (a live ``jax.sharding.Mesh``) the normal form is lifted
+    one level further: ``shard`` maps its axis symbols to mesh axes, and the
+    derived ``DistributedPlan`` runs the per-shard kernel (or oracle) inside
+    ``shard_map`` with the plan's collectives.
     """
     nf = E.normal_form(expr)
     shapes = nf.leaf_storage_shapes()
@@ -141,7 +166,13 @@ def apply(expr: "E.Expr", *arrays: jax.Array, out_dtype=None,
     # kernel path on Pallas backends or by explicit request; the registry's
     # "interpret"/"xla" entries otherwise use the jnp oracle (interpret-mode
     # Pallas is the validation path, not the default execution path)
-    if hw.backend == "pallas" or interpret:
+    use_kernel = hw.backend == "pallas" or bool(interpret)
+    if mesh is not None:
+        fn = _sharded_callable(nf, str(jnp.dtype(arrays[0].dtype)),
+                               str(out_dtype), hw.name, interp, use_kernel,
+                               mesh, shard or {}, replicate_out)
+        return fn(*arrays)
+    if use_kernel:
         fn = _expr_callable(nf, str(jnp.dtype(arrays[0].dtype)),
                             str(out_dtype), hw.name, interp, blocks)
         return fn(*arrays)
@@ -279,9 +310,49 @@ def _pallas_matmul_bwd(hw_name, interpret, transpose_b, resid, g):
 _pallas_matmul_f32.defvjp(_pallas_matmul_fwd, _pallas_matmul_bwd)
 
 
+def _xla_matmul_f32(x2: jax.Array, w2: jax.Array,
+                    transpose_b: bool) -> jax.Array:
+    """The XLA oracle body with the kernels' f32-accumulation contract."""
+    if transpose_b:
+        return jax.lax.dot_general(x2, w2, (((1,), (1,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+    return jnp.dot(x2, w2, preferred_element_type=jnp.float32)
+
+
+def _matmul_sharded(x2, w2, transpose_b, hw, interp, use_kernel, mesh,
+                    shard, replicate_out):
+    """The mesh path of ``matmul``: derive the DistributedPlan for the 2-D
+    GEMM and run the (differentiable) single-device body per shard."""
+    from repro.distributed.plan import MATMUL_ROLES, _translate
+
+    m, kdim = x2.shape
+    n = w2.shape[0] if transpose_b else w2.shape[1]
+    if shard is None:                      # rows over the first mesh axis,
+        names = tuple(mesh.axis_names)     # columns over the second
+        shard = {"m": names[0]}
+        if len(names) > 1:
+            shard["n"] = names[1]
+    nf = E.normal_form(E.matmul_expr(m, kdim, n, transpose_b=transpose_b),
+                       name="matmul")
+    if use_kernel:
+        local = lambda a, b: _pallas_matmul_f32(a, b, hw.name, bool(interp),
+                                                transpose_b)
+        tag = "matmul_vjp"
+    else:
+        local = lambda a, b: _xla_matmul_f32(a, b, transpose_b)
+        tag = "matmul_xla"
+    fn = _sharded_callable(nf, str(jnp.dtype(x2.dtype)), "float32", hw.name,
+                           bool(interp), use_kernel, mesh,
+                           _translate(shard, MATMUL_ROLES), replicate_out,
+                           local_fn=local, local_tag=tag)
+    return fn(x2, w2)
+
+
 def matmul(x: jax.Array, w: jax.Array, *, transpose_b: bool = False,
            out_dtype=None, interpret: Optional[bool] = None,
-           hardware: Optional[HardwareEntry] = None) -> jax.Array:
+           hardware: Optional[HardwareEntry] = None,
+           mesh=None, shard: Optional[dict] = None,
+           replicate_out: bool = False) -> jax.Array:
     """Unified MoA matmul: ``y[..., :] = x[..., k] @ w[k, ...]``.
 
     Leading dims of ``x`` and trailing dims of ``w`` collapse to the 2-D MoA
@@ -294,6 +365,11 @@ def matmul(x: jax.Array, w: jax.Array, *, transpose_b: bool = False,
     weight: ``y[..., :] = x[..., k] @ w[..., k].T``.  The derived schedule
     reads the table through column-gamma coefficients — no transpose copy —
     which is what lets the tied-embeddings logits head share this entry.
+
+    ``mesh``/``shard``/``replicate_out`` lift the GEMM one level further to
+    named device axes (roles ``{"m", "n", "k"}``; sharding "k" derives the
+    tensor-parallel psum) and run the same body per shard through the
+    derived ``DistributedPlan`` — see ``repro.distributed.plan``.
     """
     kdim = x.shape[-1]
     if transpose_b:
@@ -311,13 +387,14 @@ def matmul(x: jax.Array, w: jax.Array, *, transpose_b: bool = False,
     hw, interp = _resolve(hardware, interpret)
     out_dtype = jnp.dtype(out_dtype or x.dtype)
     x2 = x.reshape(-1, kdim)
-    if hw.backend == "pallas" or interpret:
+    use_kernel = hw.backend == "pallas" or bool(interpret)
+    if mesh is not None:
+        y = _matmul_sharded(x2, w2, transpose_b, hw, interp, use_kernel,
+                            mesh, shard, replicate_out)
+    elif use_kernel:
         y = _pallas_matmul_f32(x2, w2, hw.name, bool(interp), transpose_b)
-    elif transpose_b:
-        y = jax.lax.dot_general(x2, w2, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32)
     else:
-        y = jnp.dot(x2, w2, preferred_element_type=jnp.float32)
+        y = _xla_matmul_f32(x2, w2, transpose_b)
     return y.astype(out_dtype).reshape(x.shape[:-1] + out_tail)
 
 
@@ -346,17 +423,70 @@ _pallas_expert_f32.defvjp(_pallas_expert_fwd, _pallas_expert_bwd)
 
 def expert_matmul(x: jax.Array, w: jax.Array, *, out_dtype=None,
                   interpret: Optional[bool] = None,
-                  hardware: Optional[HardwareEntry] = None) -> jax.Array:
+                  hardware: Optional[HardwareEntry] = None,
+                  mesh=None, shard: Optional[dict] = None,
+                  replicate_out: bool = False) -> jax.Array:
     """Unified batched expert contraction ``ecd,edf->ecf`` — the MoE dispatch
-    hot path, through the derived expert schedule on Pallas backends."""
+    hot path, through the derived expert schedule on Pallas backends.
+
+    ``mesh``/``shard`` lift it across device axes (roles ``{"e", "m", "n",
+    "k"}``; sharding "e" is expert parallelism) via a DistributedPlan."""
     hw, interp = _resolve(hardware, interpret)
     out_dtype = jnp.dtype(out_dtype or x.dtype)
-    if hw.backend == "pallas" or interpret:
+    use_kernel = hw.backend == "pallas" or bool(interpret)
+    if mesh is not None:
+        from repro.distributed.plan import EXPERT_ROLES, _translate
+        e, cap, d = x.shape
+        f = w.shape[2]
+        if shard is None:
+            shard = {"e": tuple(mesh.axis_names)[0]}
+        nf = E.normal_form(E.expert_gemm_expr(e, cap, d, f),
+                           name="expert_gemm")
+        if use_kernel:
+            local = lambda a, b: _pallas_expert_f32(a, b, hw.name,
+                                                    bool(interp))
+            tag = "expert_vjp"
+        else:
+            local = lambda a, b: jnp.einsum(
+                "ecd,edf->ecf", a, b, preferred_element_type=jnp.float32)
+            tag = "expert_xla"
+        fn = _sharded_callable(nf, str(jnp.dtype(x.dtype)), "float32",
+                               hw.name, bool(interp), use_kernel, mesh,
+                               _translate(shard, EXPERT_ROLES),
+                               replicate_out, local_fn=local, local_tag=tag)
+        y = fn(x, w)
+    elif use_kernel:
         y = _pallas_expert_f32(x, w, hw.name, bool(interp))
     else:
         y = jnp.einsum("ecd,edf->ecf", x, w,
                        preferred_element_type=jnp.float32)
     return y.astype(out_dtype)
+
+
+def head_matmul(x: jax.Array, w: jax.Array, *, transpose_b: bool = False,
+                out_dtype=None, interpret: Optional[bool] = None,
+                hardware: Optional[HardwareEntry] = None) -> jax.Array:
+    """Per-head contraction ``bshk,khn->bshn`` (``bshk,nhk->bshn`` with
+    ``transpose_b``) — the MLA-decode absorbed projections.
+
+    The head axis batches the GEMM (one more dimension lift, like the
+    expert axis), and the head-middle weight is read in its stored layout
+    through derived strided coefficients — the per-step transpose copy of
+    the ``(kv_rank, heads, dim)`` projection tables (and the einsum
+    fallback for the output projection) are gone."""
+    b, s, h, kdim = x.shape
+    if transpose_b:
+        n, h2, k2 = w.shape
+    else:
+        k2, h2, n = w.shape
+    if h2 != h or k2 != kdim:
+        raise ValueError(f"head_matmul mismatch {x.shape} . {w.shape}"
+                         f"{'.T' if transpose_b else ''}")
+    out_dtype = jnp.dtype(out_dtype or x.dtype)
+    expr = E.head_gemm_expr(h, b * s, kdim, n, transpose_b=transpose_b)
+    y = apply(expr, x.reshape(b * s, h, kdim), w, out_dtype=jnp.float32,
+              interpret=interpret, hardware=hardware)        # (h, b*s, n)
+    return y.transpose(1, 0, 2).reshape(b, s, h, n).astype(out_dtype)
 
 
 # ---------------------------------------------------------------------------

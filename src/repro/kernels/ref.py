@@ -8,6 +8,8 @@ expression (the DNF semantics, before any normal-form derivation).
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -98,6 +100,62 @@ def eval_expr(expr: "E.Expr", *arrays: jax.Array) -> jax.Array:
     out = ev(expr)
     if next(it, None) is not None:
         raise ValueError("more arrays than expression leaves")
+    return out
+
+
+def eval_nf(nf: "E.NormalForm", *arrays: jax.Array) -> jax.Array:
+    """jnp oracle for a *normal form* (not an Expr): the XLA execution path
+    of a per-shard computation, where only the local ``NormalForm`` exists.
+
+    Binds leaves by storage shape (col-major leaves take the reversed
+    buffer, constant dims are indexed out), then evaluates the semiring:
+    an einsum for (mul, add), broadcast-pair-and-fold otherwise — f32
+    accumulation either way, matching the emitted kernels.
+    """
+    if len(arrays) != len(nf.leaves):
+        raise ValueError(f"normal form has {len(nf.leaves)} leaves, got "
+                         f"{len(arrays)}")
+    bound: list[tuple[tuple[str, ...], jax.Array]] = []
+    for leaf, x in zip(nf.leaves, arrays):
+        storage = leaf.storage_shape()
+        if tuple(x.shape) != storage:
+            raise ValueError(f"leaf {leaf.array!r} expects storage shape "
+                             f"{storage}, got {tuple(x.shape)}")
+        if leaf.layout == "col":
+            x = jnp.transpose(x, tuple(reversed(range(x.ndim))))
+        idx = tuple(t if isinstance(t, int) else slice(None)
+                    for t, _ in leaf.dims)
+        x = x[idx]
+        syms = tuple(t for t, _ in leaf.dims if isinstance(t, str))
+        if len(set(syms)) != len(syms):
+            raise NotImplementedError(
+                f"leaf {leaf.array!r} repeats an index (diagonal access)")
+        bound.append((syms, x.astype(jnp.float32)))
+
+    joint = tuple(nf.out_axes) + tuple(nf.reduce_axes)
+    if (nf.combine, nf.reduce_op) == ("mul", "add"):
+        letters = {s: chr(ord("a") + i) for i, s in enumerate(joint)}
+        spec = ",".join("".join(letters[s] for s in syms)
+                        for syms, _ in bound)
+        spec += "->" + "".join(letters[s] for s in nf.out_axes)
+        return jnp.einsum(spec, *(x for _, x in bound),
+                          preferred_element_type=jnp.float32)
+    # general semiring: align every operand to (out + reduce) axes, pair
+    # with the combine op, fold the reduce axes — same shape discipline as
+    # the emitted block body
+    aligned = []
+    for syms, x in bound:
+        perm = sorted(range(len(syms)), key=lambda d: joint.index(syms[d]))
+        x = jnp.transpose(x, perm)
+        have = [syms[p] for p in perm]
+        for pos, ax in enumerate(joint):
+            if ax not in have:
+                x = jnp.expand_dims(x, pos)
+        aligned.append(x)
+    out = functools.reduce(_combine_fn(nf.combine), aligned)
+    if nf.reduce_axes:
+        red = tuple(range(len(nf.out_axes), len(joint)))
+        out = _reducer_fn(nf.reduce_op)(out, axis=red)
     return out
 
 

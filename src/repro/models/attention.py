@@ -379,20 +379,14 @@ def mla_decode(p: dict, x: jax.Array, cache: MLACache, pos: jax.Array,
     c_kv = _cache_write(cache.c_kv, c_new, pos)
     k_pe = _cache_write(cache.k_pe, kpe_new, pos)
     # absorb W_UK:  q_tilde[h] = q_nope[h] @ W_UK[:, h, :].T  -> latent
-    # space.  The head axis batches independent GEMMs — exactly the expert
-    # schedule (one more dimension lift) — so this routes through the
-    # unified ops.expert_matmul entry instead of a bespoke einsum.  The
-    # per-step w_uk relayout is kvr*h*nope elements (small, unlike the vocab
-    # table); a batch-axis transpose_b expert schedule would remove it (see
-    # ROADMAP).
+    # space.  The head axis batches independent GEMMs — one more dimension
+    # lift, like the expert axis — and ops.head_matmul reads the
+    # head-middle (kvr, h, nope) table in its STORED layout through the
+    # derived batched-transpose_b schedule: no per-step weight relayout.
     w_uk = p["wkv_b"][..., :nope]                       # (kvr, h, nope)
     w_uv = p["wkv_b"][..., nope:]                       # (kvr, h, vd)
-    b_, s_ = q_nope.shape[:2]
-    q_lat = ops.expert_matmul(
-        q_nope.transpose(2, 0, 1, 3).reshape(h, b_ * s_, nope),
-        w_uk.transpose(1, 2, 0),                        # (h, nope, kvr)
-        out_dtype=x.dtype,
-    ).reshape(h, b_, s_, kvr).transpose(1, 2, 0, 3)     # (b, s, h, kvr)
+    q_lat = ops.head_matmul(q_nope, w_uk, transpose_b=True,
+                            out_dtype=x.dtype)          # (b, s, h, kvr)
     sc = jnp.einsum("bshr,bkr->bhsk", q_lat, c_kv,
                     preferred_element_type=jnp.float32)
     sp = jnp.einsum("bshr,bkr->bhsk", q_pe, k_pe,
@@ -403,7 +397,8 @@ def mla_decode(p: dict, x: jax.Array, cache: MLACache, pos: jax.Array,
     w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     ctx = jnp.einsum("bhsk,bkr->bshr", w, c_kv,
                      preferred_element_type=jnp.float32).astype(x.dtype)
-    out = jnp.einsum("bshr,rhn->bshn", ctx, w_uv,
-                     preferred_element_type=jnp.float32).astype(x.dtype)
+    # un-absorb W_UV: the bshr,rhn->bshn contraction is the same per-head
+    # batched schedule (no einsum fallback, no relayout of w_uv)
+    out = ops.head_matmul(ctx, w_uv, out_dtype=x.dtype)
     o = _out_proj(out, p["wo"], x.dtype)
     return o, MLACache(c_kv, k_pe)

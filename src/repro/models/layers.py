@@ -8,6 +8,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.distributed import plan as dplan
 from repro.distributed.sharding import constrain
 from repro.kernels import ops
 from repro.models.common import ArchConfig, Collector
@@ -76,7 +77,15 @@ def _gate_act(cfg: ArchConfig, u: jax.Array) -> jax.Array:
 
 
 def apply_mlp(p: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
-    h = ops.matmul(x, p["wi"], out_dtype=jnp.float32)
+    # with a planned mesh active, both GEMMs run through derived
+    # DistributedPlans: wi column-sharded over "model" (no collective), wo
+    # sigma-sharded over "model" (the TP psum, derived not hand-placed)
+    mesh = dplan.current_planned_mesh()
+    if mesh is not None:
+        h = ops.matmul(x, p["wi"], out_dtype=jnp.float32, mesh=mesh,
+                       shard=dplan.tp_matmul_shard(mesh, "col"))
+    else:
+        h = ops.matmul(x, p["wi"], out_dtype=jnp.float32)
     # NOTE: do NOT with_sharding_constraint the f32 pre-activation — measured
     # to make SPMD replicate the FFN over "model" (7x flops at decode, ~6x at
     # train).  The bf16 post-activation constraint below is sufficient.
@@ -89,7 +98,11 @@ def apply_mlp(p: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
         h = _gate_act(cfg, h)
     h = h.astype(x.dtype)
     h = constrain(h, "batch", None, "d_ff")
-    out = ops.matmul(h, p["wo"], out_dtype=x.dtype)
+    if mesh is not None:
+        out = ops.matmul(h, p["wo"], out_dtype=x.dtype, mesh=mesh,
+                         shard=dplan.tp_matmul_shard(mesh, "sigma"))
+    else:
+        out = ops.matmul(h, p["wo"], out_dtype=x.dtype)
     if x.shape[1] > 1:
         # seq-sharded output (train/prefill): the TP partial-sum becomes a
         # reduce-scatter.  NEVER at decode (s=1): forcing a replicated-spec
@@ -160,15 +173,22 @@ def embed_tokens(params: dict, tokens: jax.Array, cfg: ArchConfig) -> jax.Array:
 
 
 def logits_from_hidden(params: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    # with a planned mesh, the vocab head is column-sharded over "model":
+    # the derived plan lands the spec on the right STORED dim of the tied
+    # (vocab, d) table automatically (the coefficients know the layout)
+    mesh = dplan.current_planned_mesh()
+    mesh_kw = (dict(mesh=mesh, shard=dplan.tp_matmul_shard(mesh, "col"))
+               if mesh is not None else {})
     if cfg.tie_embeddings:
         # tied head contracts the (vocab, d) table in its STORED layout:
         # matmul(transpose_b=True) lowers to a transposed-operand derived
         # schedule (column-gamma coefficients on the table), so the largest
         # tensor in the model is never transpose-copied.
         logits = ops.matmul(x, params["embed"]["table"], transpose_b=True,
-                            out_dtype=jnp.float32)
+                            out_dtype=jnp.float32, **mesh_kw)
     else:
-        logits = ops.matmul(x, params["unembed"]["w"], out_dtype=jnp.float32)
+        logits = ops.matmul(x, params["unembed"]["w"], out_dtype=jnp.float32,
+                            **mesh_kw)
     if cfg.logit_softcap:
         c = cfg.logit_softcap
         logits = jnp.tanh(logits / c) * c

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed import compression
+from repro.distributed import plan as dplan
 from repro.models import registry
 from repro.models.common import ArchConfig
 from repro.optim import adamw
@@ -53,11 +54,19 @@ def state_logical_axes(state: TrainState, param_axes: dict):
 def make_train_step(cfg: ArchConfig,
                     opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig(),
                     comp: compression.CompressionConfig = compression.CompressionConfig(),
-                    microbatches: int = 1):
-    """Returns train_step(state, batch) -> (state, metrics)."""
+                    microbatches: int = 1, planned_mesh=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``planned_mesh``: a live ``jax.sharding.Mesh`` — the model's matmuls
+    then execute through derived ``DistributedPlan``s (shard_map with
+    planned collectives) instead of leaving partitioning to the SPMD
+    pass; see ``repro.distributed.plan``."""
 
     def loss_fn(params, mb):
-        return registry.loss(params, cfg, mb)
+        if planned_mesh is None:
+            return registry.loss(params, cfg, mb)
+        with dplan.planned_mesh(planned_mesh):
+            return registry.loss(params, cfg, mb)
 
     def train_step(state: TrainState, batch: dict):
         if microbatches == 1:

@@ -54,3 +54,21 @@ def test_grid_covers_problem():
     bc = blocking.solve_blocks(1000, 700, 900, "float32")
     gm, gn, gk = blocking.grid_for(1000, 700, 900, bc)
     assert gm * bc.bm >= 1000 and gn * bc.bn >= 900 and gk * bc.bk >= 700
+
+
+def test_materialized_combine_shrinks_tiles():
+    """General semirings materialize a (bm, bn, bk) f32 pairing intermediate
+    in-block; with that term in the working-set model the solver must pick a
+    strictly smaller tile volume than the MXU GEMM objective, and the
+    intermediate alone must fit the budget."""
+    budget = int(TPU_V5E.vmem.capacity_bytes * 0.25)
+    gemm = blocking.solve_blocks(2048, 2048, 2048, "float32", TPU_V5E,
+                                 vmem_budget_frac=0.25)
+    trop = blocking.solve_blocks(2048, 2048, 2048, "float32", TPU_V5E,
+                                 vmem_budget_frac=0.25,
+                                 materialized_combine=True)
+    assert trop.bm * trop.bn * trop.bk * 4 <= budget
+    assert trop.bm * trop.bn * trop.bk < gemm.bm * gemm.bn * gemm.bk
+    assert trop.vmem_bytes <= budget
+    # the reported working set includes the intermediate
+    assert trop.vmem_bytes >= trop.bm * trop.bn * trop.bk * 4
