@@ -23,13 +23,16 @@ import jax.numpy as jnp
 from benchmarks.common import time_fn
 from repro.core import expr as E
 from repro.core import schedule as sched
-from repro.core.energy import gemm_energy
+from repro.core.energy import attention_energy, gemm_energy
 from repro.core.hardware import get_entry
 from repro.core.mesh import MeshShape
 from repro.distributed import plan as dplan
 from repro.kernels import ops
+from repro.models.chunked_attention import chunked_attention
 
 SHAPES = [(128, 128, 128), (256, 256, 256), (100, 70, 130)]
+#: flash-attention rows: (batch, q_heads, kv_heads, seq, head_dim)
+ATTN_SHAPES = [(1, 4, 2, 512, 64), (1, 4, 2, 300, 64)]
 #: the distributed-plan rows model an 8-way slice of the v5e "data" ring
 MESH8 = MeshShape((("x", 8),))
 #: sharding kinds for the matmul_sharded rows (collective derived, then
@@ -116,9 +119,44 @@ def run():
             "bound": rep.bound,
             "sharded": sharded,
         })
+    attn_records = []
+    for b, hq, hkv, s, hd in ATTN_SHAPES:
+        g = hq // hkv
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(k1, (b, s, hkv, g, hd), jnp.float32)
+        k = jax.random.normal(k2, (b, s, hkv, hd), jnp.float32)
+        v = jax.random.normal(k3, (b, s, hkv, hd), jnp.float32)
+        scale = hd ** -0.5
+        tag = f"schedule/flash_attention_{b}x{hq}x{s}x{hd}"
+        us_flash = time_fn(lambda: ops.attention(q, k, v, scale=scale,
+                                                 causal=True, interpret=True),
+                           warmup=1, iters=3)
+        us_chunk = time_fn(jax.jit(lambda q, k, v: chunked_attention(
+            q, k, v, scale=scale, causal=True)), q, k, v)
+        bundle = sched.get_schedule(E.attention_form(b, hkv, g, s, s, hd),
+                                    dtype="float32", hardware=entry)
+        rep = attention_energy(b, hq, s, s, hd, bundle.blocks,
+                               "float32", causal=True, hardware=entry.shape)
+        rows.append((f"{tag}/derived", us_flash,
+                     f"streaming blocks={bundle.blocks.as_tuple()} "
+                     f"modeled HBM={rep.hbm_bytes:.3e}B "
+                     f"t={rep.time_s:.3e}s E={rep.energy_J:.3e}J"))
+        rows.append((f"{tag}/chunked_jnp", us_chunk, "XLA online-softmax"))
+        attn_records.append({
+            "shape": [b, hq, hkv, s, hd],
+            "us_flash_interpret": us_flash,
+            "us_chunked_jnp": us_chunk,
+            "stream_blocks": list(bundle.blocks.as_tuple()),
+            "grid": list(bundle.schedule.grid_extents),
+            "modeled_hbm_bytes": rep.hbm_bytes,
+            "modeled_time_s": rep.time_s,
+            "modeled_energy_J": rep.energy_J,
+            "bound": rep.bound,
+        })
     stats = sched.schedule_cache_stats()
     payload = {"hardware": entry.name, "mesh": list(MESH8.axes),
-               "entries": records, "schedule_cache": stats,
+               "entries": records, "flash_attention": attn_records,
+               "schedule_cache": stats,
                "plan_cache": dplan.plan_cache_stats()}
     with open(JSON_PATH, "w") as f:
         json.dump(payload, f, indent=2)

@@ -24,7 +24,7 @@ tests/test_blocking.py).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterable
+from typing import Iterable, Optional
 
 import numpy as np
 
@@ -131,6 +131,79 @@ def solve_blocks(m: int, k: int, n: int, dtype="bfloat16",
                     best = cand
     assert best is not None, "no feasible block for the given budget"
     return best
+
+
+@dataclass(frozen=True)
+class StreamBlockChoice:
+    """Block choice for a streaming (online-softmax) reduction: the query
+    block ``bq`` and the streamed key block ``bk``."""
+    bq: int
+    bk: int
+    vmem_bytes: int                 # working set incl. buffering + state
+    arithmetic_intensity: float     # flops / byte moved HBM->VMEM
+    utilization: float              # fraction of the (bq, bk) tile filled
+
+    def as_tuple(self) -> tuple[int, int]:
+        return (self.bq, self.bk)
+
+
+def solve_stream_blocks(sq: int, sk: int, hd: int, vd: Optional[int] = None,
+                        dtype="bfloat16", hardware: HardwareShape = TPU_V5E,
+                        vmem_budget_frac: float = 0.5,
+                        buffering: int = 2,
+                        acc_dtype="float32") -> StreamBlockChoice:
+    """Choose ``(bq, bk)`` for a streamed two-contraction reduction
+    (flash attention): per grid step the VMEM residents are the input
+    blocks q ``(bq, hd)``, k ``(bk, hd)``, v ``(bk, vd)`` (double-buffered),
+    the output block ``(bq, vd)``, the carried state — f32 accumulator
+    ``(bq, vd)``, running max and denominator ``(bq,)`` each — and the two
+    in-block f32 intermediates (scores and probabilities, ``(bq, bk)``).
+
+    Same shape as ``solve_blocks``: enumerate hardware-aligned candidates,
+    keep those whose working set (inputs + output + carried state +
+    intermediates) fits the VMEM budget, maximize arithmetic intensity.
+    This is the constraint set that replaces the hand-written fixed-512
+    flash-attention default: at large sequence lengths on the v5e table it
+    *lands on* (512, 512), and degrades gracefully when head_dim, dtype or
+    the budget push the state over.
+    """
+    vd = vd or hd
+    esize = _dtype_size(dtype)
+    acc_size = _dtype_size(acc_dtype)
+    budget = int(hardware.vmem.capacity_bytes * vmem_budget_frac)
+    lane = hardware.mxu_tile[1]
+    sub = _sublane_multiple(dtype) if hardware.mxu_tile == (128, 128) else 1
+    align_q = sub if sub > 1 else max(hardware.vreg_tile[0], 1)
+    align_k = lane if lane > 1 else hardware.vreg_tile[1]
+
+    best: StreamBlockChoice | None = None
+    cand_q = _candidates(max(min(sq, 4096), align_q), align_q)
+    cand_k = _candidates(max(min(sk, 4096), align_k), align_k)
+    for bq in cand_q:
+        for bk in cand_k:
+            ws = (bq * hd + bk * hd + bk * vd) * esize * buffering
+            ws += bq * vd * esize                       # output block
+            ws += (bq * vd + 2 * bq) * acc_size         # acc + m + l state
+            ws += 2 * bq * bk * acc_size                # scores + probs
+            if ws > budget:
+                continue
+            flops = 2.0 * bq * bk * (hd + vd)
+            moved = (bq * hd + bk * (hd + vd) + bq * vd) * esize
+            ai = flops / moved
+            util = (min(bq, sq) * min(bk, sk)) / float(bq * bk)
+            cand = StreamBlockChoice(bq, bk, ws, ai, util)
+            if best is None or _stream_better(cand, best):
+                best = cand
+    assert best is not None, "no feasible streaming block for the budget"
+    return best
+
+
+def _stream_better(a: StreamBlockChoice, b: StreamBlockChoice) -> bool:
+    if abs(a.arithmetic_intensity - b.arithmetic_intensity) > 1e-9:
+        return a.arithmetic_intensity > b.arithmetic_intensity
+    if a.vmem_bytes != b.vmem_bytes:
+        return a.vmem_bytes < b.vmem_bytes
+    return (a.bq, a.bk) < (b.bq, b.bk)
 
 
 def _better(a: BlockChoice, b: BlockChoice) -> bool:

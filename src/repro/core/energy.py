@@ -25,7 +25,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 from repro.core.lifting import HardwareShape, TPU_V5E
-from repro.core.blocking import BlockChoice, _dtype_size
+from repro.core.blocking import BlockChoice, StreamBlockChoice, _dtype_size
 
 
 @dataclass(frozen=True)
@@ -89,6 +89,54 @@ def gemm_energy(m: int, k: int, n: int, blocks: BlockChoice,
     energy = e_dyn + hardware.sa_power_W * time_s
     return EnergyReport(time_s, energy, energy / max(time_s, 1e-30),
                         flops, hbm_b, vmem_b, ici_bytes, bound)
+
+
+def attention_traffic(b: int, hq: int, sq: int, sk: int, hd: int,
+                      vd: int, blocks: StreamBlockChoice, dtype="bfloat16",
+                      causal: bool = True) -> tuple[float, float]:
+    """HBM and VMEM traffic (bytes) for the derived streaming attention
+    schedule.  Q and the output move once; K and V stream once per
+    (q-head, q-block) grid cell (``hq * ceil(sq / bq)`` passes in total —
+    the kv-head count cancels against the group factor, so the model needs
+    only ``hq``), halved by the causal block skip.  The online-softmax
+    state (m, l, acc) never leaves VMEM — that is the schedule's whole
+    point, and why its HBM bytes are O(S) per query block instead of the
+    O(S^2) score matrix."""
+    esize = _dtype_size(dtype)
+    cdiv = lambda a, b_: -(-a // b_)
+    nq = cdiv(sq, blocks.bq)
+    frac = 0.5 if causal else 1.0           # causal skips blocks above diag
+    hbm = (b * hq * sq * (hd + vd)) * esize                 # q in, out out
+    # each kv head's sk*(hd+vd) data re-streams once per (group, q-block)
+    # grid cell: hkv * g * nq = hq * nq passes total
+    hbm += frac * nq * (b * hq * sk * (hd + vd)) * esize
+    steps = frac * (b * hq) * nq * cdiv(sk, blocks.bk)
+    vmem = steps * (blocks.bq * hd + blocks.bk * (hd + vd)
+                    + blocks.bq * vd) * esize
+    return float(hbm), float(vmem)
+
+
+def attention_energy(b: int, hq: int, sq: int, sk: int, hd: int,
+                     blocks: StreamBlockChoice, dtype="bfloat16",
+                     vd: int = 0, causal: bool = True,
+                     hardware: HardwareShape = TPU_V5E) -> EnergyReport:
+    """Modeled time/energy for flash attention under the derived (bq, bk):
+    the streaming analogue of ``gemm_energy`` (same E = E_dyn + P*T model)."""
+    vd = vd or hd
+    frac = 0.5 if causal else 1.0
+    flops = frac * 2.0 * b * hq * sq * sk * (hd + vd)
+    hbm_b, vmem_b = attention_traffic(b, hq, sq, sk, hd, vd, blocks,
+                                      dtype, causal)
+    compute_s = flops / hardware.peak_flops
+    memory_s = hbm_b / hardware.hbm.bandwidth_Bps
+    time_s = max(compute_s, memory_s)
+    bound = "compute" if time_s == compute_s else "memory"
+    e_dyn = (flops * hardware.flop_energy_pJ
+             + hbm_b * hardware.hbm.energy_pJ_per_byte
+             + vmem_b * hardware.vmem.energy_pJ_per_byte) * 1e-12
+    energy = e_dyn + hardware.sa_power_W * time_s
+    return EnergyReport(time_s, energy, energy / max(time_s, 1e-30),
+                        flops, hbm_b, vmem_b, 0.0, bound)
 
 
 def energy_vs_blocksize(n: int, block_sizes, dtype="bfloat16",

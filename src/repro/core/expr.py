@@ -263,6 +263,106 @@ def head_gemm_expr(h: int, m: int, k: int, n: int,
     return inner("add", "mul", x, w, batch=1)
 
 
+def attention_expr(b: int, hkv: int, g: int, sq: int, sk: int, hd: int,
+                   vd: Optional[int] = None) -> tuple[Inner, Inner]:
+    """The two chained contractions of (grouped-query) attention.
+
+    ``scores = Q · Kᵀ`` and ``context = P · V``, over the loop axes
+    ``(b, h, g, i, j)`` — batch, kv-head, group, query position, key
+    position.  Every leaf binds its *stored* model layout — Q
+    ``(b, sq, hkv, g, hd)`` (the grouped view of the ``(b, sq, hq, hd)``
+    projection, a pure reshape with ``hq = hkv * g``), K/V their
+    un-repeated ``(b, sk, hkv, hd)`` — and the logical ``(b, h, g, i, ...)``
+    views are transposes, i.e. pure index rewrites: the derived BlockSpecs
+    walk the stored buffers in place, no relayout copy before the kernel
+    (the same property as ``matmul(transpose_b=True)``).  The GQA head
+    grouping is nothing but an Access coefficient pattern: K/V carry a
+    *zero* coefficient on the group axis ``g``, which is exactly what lets
+    ``derive_schedule`` recover the q-head -> kv-head index map instead of
+    hand-coding the ``(h % hq) // g`` arithmetic.
+
+    The middle operand ``P`` (the softmax probabilities) is never
+    materialized — it is the in-VMEM intermediate a streaming schedule
+    carries between the two contractions (see ``attention_form``).
+    """
+    vd = vd or hd
+    q = transpose(arr("Q", (b, sq, hkv, g, hd)), (0, 2, 3, 1, 4))
+    kt = transpose(arr("K", (b, sk, hkv, hd)), (0, 2, 3, 1))
+    v = transpose(arr("V", (b, sk, hkv, vd)), (0, 2, 1, 3))
+    p = arr("P", (b, hkv, g, sq, sk))
+    scores = inner("add", "mul", q, kt, batch=2)
+    context = inner("add", "mul", p, v, batch=2)
+    return scores, context
+
+
+@dataclass(frozen=True)
+class StreamingForm:
+    """The composite normal form of a *streaming* (online-softmax-style)
+    reduction: two single-ONF contractions chained through one shared axis.
+
+    ``scores`` produces the intermediate over its trailing output axis
+    (``stream_axis``); ``context`` folds that same axis as its sole
+    reduction.  The intermediate (the first leaf of ``context``) never
+    leaves VMEM: a streaming schedule lifts ``stream_axis`` onto the sigma
+    "block" resource, so each grid step computes one ``(bq, bk)`` block of
+    the intermediate and folds it into carried state (running max m,
+    denominator l, rescaled accumulator) — the nonlinear generalization of
+    the plain sigma accumulator.
+
+    This is the artifact ``core.schedule.get_schedule`` accepts alongside a
+    plain ``NormalForm``; its ``key()`` keys the same LRU cache.
+    """
+    name: str
+    scores: NormalForm
+    context: NormalForm
+    stream_axis: str
+
+    def __post_init__(self):
+        if self.stream_axis not in self.scores.out_axes:
+            raise ValueError(
+                f"stream axis {self.stream_axis!r} is not an output axis of "
+                f"the scores form {self.scores.out_axes}")
+        if self.context.reduce_axes != (self.stream_axis,):
+            raise ValueError(
+                f"the context form must reduce exactly the stream axis "
+                f"{self.stream_axis!r}, got {self.context.reduce_axes}")
+        s_ext, c_ext = self.scores.extent_map, self.context.extent_map
+        for sym in set(s_ext) & set(c_ext):
+            if s_ext[sym] != c_ext[sym]:
+                raise ValueError(
+                    f"axis {sym!r} disagrees between scores ({s_ext[sym]}) "
+                    f"and context ({c_ext[sym]})")
+        inter = self.context.leaves[0]
+        if inter.shape() != self.scores.out_shape():
+            raise ValueError(
+                f"context's first leaf {inter.shape()} is not the scores "
+                f"output {self.scores.out_shape()} — not a streaming chain")
+
+    def key(self) -> tuple:
+        """Cache key: both normal forms' canonical keys plus the stream
+        axis's structural position (its index among scores' output axes)."""
+        return ("streaming", self.scores.key(), self.context.key(),
+                self.scores.out_axes.index(self.stream_axis))
+
+
+def attention_form(b: int, hkv: int, g: int, sq: int, sk: int, hd: int,
+                   vd: Optional[int] = None) -> StreamingForm:
+    """Normalize the attention expression pair into a ``StreamingForm``.
+
+    Axis names: ``(b, h, g, i, j)`` + the score contraction ``c`` (head_dim)
+    and the context value axis ``d`` — ``j`` (key position) is the streamed
+    axis, an *output* of scores and the *reduction* of context.
+    """
+    scores, context = attention_expr(b, hkv, g, sq, sk, hd, vd)
+    scores_nf = normal_form(scores, name="attn_scores",
+                            out_axes=("b", "h", "g", "i", "j"),
+                            reduce_axes=("c",))
+    context_nf = normal_form(context, name="attn_context",
+                             out_axes=("b", "h", "g", "i", "d"),
+                             reduce_axes=("j",))
+    return StreamingForm("flash_attention", scores_nf, context_nf, "j")
+
+
 # ---------------------------------------------------------------------------
 # psi reduction: expression -> NormalForm -> Onf
 # ---------------------------------------------------------------------------

@@ -37,7 +37,8 @@ from typing import Optional, Union
 
 from repro.core import expr as expr_mod
 from repro.core import onf as onf_mod
-from repro.core.blocking import BlockChoice, solve_blocks, _dtype_size
+from repro.core.blocking import (BlockChoice, StreamBlockChoice, solve_blocks,
+                                 solve_stream_blocks, _dtype_size)
 from repro.core.lifting import HardwareShape
 from repro.core.mesh import is_mesh_resource
 from repro.core.moa import pi
@@ -223,7 +224,12 @@ def derive_schedule(o: "onf_mod.Onf", hardware: Optional[HardwareShape] = None,
                 raise ValueError(
                     f"{a.array}: {idx} coefficient {c} inconsistent with a "
                     f"row-major lift of {b!r}")
-        axes = sorted(strides, key=lambda b: -strides[b])
+        # descending stride; stride ties (only possible when one of the tied
+        # axes has extent 1 — two extent>1 axes can't share a stride in a
+        # dense view) break by descending extent, so the extent-1 axis sits
+        # inner where the density walk multiplies expected by 1
+        axes = sorted(strides,
+                      key=lambda b: (-strides[b], -full_extent[b]))
         expected = 1
         for b in reversed(axes):
             if strides[b] != expected:
@@ -278,6 +284,143 @@ def derive_schedule(o: "onf_mod.Onf", hardware: Optional[HardwareShape] = None,
 
 
 # ---------------------------------------------------------------------------
+# streaming schedules: carried-state (online-softmax) reductions
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class StreamingSchedule:
+    """A derived schedule for a *streaming* reduction: two chained
+    contractions whose shared axis is lifted onto the sigma "block" resource
+    with nonlinear carried state instead of a plain accumulator.
+
+    Derived — like ``Schedule`` — entirely from lifted ONFs: the grid, the
+    operand BlockSpecs (including the GQA q-head -> kv-head index map, which
+    falls out of the kv operands' zero coefficient on the group axis) and
+    the streamed dimension all come from the affine Access coefficients.
+    The carried state the emitter materializes per grid cell is the running
+    max ``m`` and denominator ``l`` (one per output row) plus the rescaled
+    f32 accumulator (one output block) — these join the block solver's
+    working-set model (``solve_stream_blocks``), which is where ``(bq, bk)``
+    come from.
+    """
+    name: str
+    grid: tuple[GridAxis, ...]
+    ins: tuple[OperandSpec, ...]         # first-contraction inputs + carrier
+    out: OperandSpec
+    inter: OperandSpec                   # the VMEM-only intermediate block
+    contracted: tuple[str, ...]          # first contraction's in-block axes
+    stream_grid_dim: int                 # grid axis carrying (m, l, acc)
+    row_axis: str                        # out axis the state is per-row over
+    stream_axis: str                     # the streamed logical axis
+
+    @property
+    def grid_extents(self) -> tuple[int, ...]:
+        return tuple(g.extent for g in self.grid)
+
+    @property
+    def dimension_semantics(self) -> tuple[str, ...]:
+        return tuple(g.semantics for g in self.grid)
+
+    @property
+    def row_block(self) -> int:
+        """bq — the block extent of the per-row state axis."""
+        return self.out.block[self.out.axes.index(self.row_axis)]
+
+    @property
+    def stream_block(self) -> int:
+        """bk — the block extent of the streamed axis."""
+        return self.inter.block[self.inter.axes.index(self.stream_axis)]
+
+    @property
+    def value_axes(self) -> tuple[str, ...]:
+        """Output axes NOT shared with the intermediate — the second
+        contraction's value dims (head_dim for attention)."""
+        return tuple(ax for ax in self.out.axes if ax not in self.inter.axes)
+
+    @property
+    def acc_block(self) -> tuple[int, ...]:
+        """The accumulator scratch shape: (row block, value block) — chosen
+        by axis, not by dropping unit dims, so a size-1 value axis still
+        yields a rank-2 accumulator the emitter can rescale per row."""
+        return (self.row_block,) + tuple(
+            self.out.block[self.out.axes.index(ax)]
+            for ax in self.value_axes)
+
+    def vmem_bytes(self, dtype, buffering: int = 2, acc_bytes: int = 4) -> int:
+        """Modeled resident working set: double-buffered input blocks, the
+        output block, the carried state (acc, m, l) and the two in-block f32
+        intermediates (scores before and after exponentiation)."""
+        esize = _dtype_size(dtype)
+        ws = sum(pi(opn.block) for opn in self.ins) * esize * buffering
+        ws += pi(self.out.block) * esize
+        ws += (pi(self.out.block) + 2 * self.row_block) * acc_bytes
+        ws += 2 * pi(self.inter.block) * acc_bytes
+        return ws
+
+
+def derive_streaming_schedule(scores: "onf_mod.Onf", context: "onf_mod.Onf",
+                              stream_axis: str,
+                              hardware: Optional[HardwareShape] = None,
+                              dtype="float32") -> StreamingSchedule:
+    """Derive a ``StreamingSchedule`` from the two lifted ONFs of a
+    streaming chain (``expr.StreamingForm`` lifted per axis).
+
+    Both nests must lift onto the *same* grid, with the streamed axis on
+    the sigma "block" resource; the scores output block must coincide with
+    the context's intermediate operand block (it never leaves VMEM).  Each
+    half is derived by the ordinary ``derive_schedule`` — this function
+    only welds them and verifies the weld.
+    """
+    s_sched = derive_schedule(scores, None, dtype)
+    c_sched = derive_schedule(context, None, dtype)
+    if s_sched.grid != c_sched.grid:
+        raise ValueError(
+            f"streaming halves derived different grids: "
+            f"{s_sched.grid} vs {c_sched.grid}")
+    if c_sched.reduce_grid_dim is None:
+        raise ValueError("context nest has no lifted reduction axis — the "
+                         "stream axis must be lifted onto 'block'")
+    stream_dim = c_sched.reduce_grid_dim
+    if c_sched.grid[stream_dim].base != stream_axis:
+        raise ValueError(
+            f"context's lifted reduction axis {c_sched.grid[stream_dim].base!r}"
+            f" is not the stream axis {stream_axis!r}")
+    if stream_dim != len(c_sched.grid) - 1:
+        # the emitter's carried state (m, l, acc) is initialized at step 0
+        # and flushed at step nk-1 of the streamed axis — it must be the
+        # innermost (fastest-iterating) grid dimension or the state would be
+        # shared across other cells mid-reduction
+        raise ValueError(
+            f"streamed axis {stream_axis!r} lifted onto grid dim "
+            f"{stream_dim}, but the carried state requires it innermost "
+            f"(dim {len(c_sched.grid) - 1})")
+    inter, carrier = s_sched.out, c_sched.ins[0]
+    if (inter.axes, inter.shape, inter.block, inter.grid_dims) != \
+            (carrier.axes, carrier.shape, carrier.block, carrier.grid_dims):
+        raise ValueError(
+            f"scores output block {inter} does not match the context "
+            f"carrier {carrier} — the intermediate cannot stay in VMEM")
+    row_candidates = [ax for ax, blk in zip(c_sched.out.axes,
+                                            c_sched.out.block)
+                      if blk > 1 and ax in inter.axes]
+    if len(row_candidates) != 1:
+        raise ValueError(
+            f"expected exactly one blocked per-row state axis shared by the "
+            f"output and the intermediate, got {row_candidates}")
+    sched = StreamingSchedule(
+        scores.name, s_sched.grid, s_sched.ins + c_sched.ins[1:],
+        c_sched.out, inter, s_sched.contracted, stream_dim,
+        row_candidates[0], stream_axis)
+    if hardware is not None:
+        ws = sched.vmem_bytes(dtype)
+        if ws > hardware.vmem.capacity_bytes:
+            raise ValueError(
+                f"derived streaming blocks need {ws} B VMEM, over "
+                f"{hardware.name}'s {hardware.vmem.capacity_bytes} B capacity")
+    return sched
+
+
+# ---------------------------------------------------------------------------
 # block policies (the static a-priori choices of paper §3.3/3.4)
 # ---------------------------------------------------------------------------
 
@@ -287,6 +430,17 @@ def default_gemm_blocks(m: int, k: int, n: int, dtype,
     double-buffering headroom; caps keep the grid >= a few cells."""
     return solve_blocks(min(m, 512), min(k, 2048), min(n, 512), dtype,
                         hardware=hardware, vmem_budget_frac=0.25)
+
+
+def default_stream_blocks(sq: int, sk: int, hd: int, vd: int, dtype,
+                          hardware: HardwareShape) -> StreamBlockChoice:
+    """Streaming (bq, bk) policy: same quarter-VMEM budget and the same
+    512 grid-coverage cap as the GEMM policy — on the v5e table this lands
+    on the (512, 512) tiles the hand-written flash kernel used to fix, but
+    *derived* from the carried-state working-set model, so fatter head dims
+    or narrower budgets shrink the blocks instead of overflowing VMEM."""
+    return solve_stream_blocks(min(sq, 512), min(sk, 512), hd, vd, dtype,
+                               hardware=hardware, vmem_budget_frac=0.25)
 
 
 def _pad(x: int, mult: int) -> int:
@@ -408,6 +562,63 @@ def _build_bundle(nf: "expr_mod.NormalForm", dtype, hw_shape,
                           nf.out_shape(), nf.leaf_storage_shapes())
 
 
+def _build_streaming_bundle(sf: "expr_mod.StreamingForm", dtype, hw_shape,
+                            blocks) -> ScheduleBundle:
+    """Pad, lift and derive a ``StreamingSchedule`` for a streaming form.
+
+    Lifting policy (the streaming extension of ``_build_bundle``): every
+    scores output axis before the last two lifts fully onto "proc" (batch,
+    kv-head and group cells are independent), the per-row axis (second-to-
+    last scores output) lifts blockwise onto "proc" with ``bq``, and the
+    streamed axis (last scores output == the context reduction) lifts
+    blockwise onto the sigma "block" resource with ``bk``.  Both halves are
+    lifted with the *same* pads and factors so they derive one grid.
+    ``(bq, bk)`` come from ``solve_stream_blocks`` — the carried state is in
+    its working-set model — unless explicitly pinned via ``blocks``.
+    """
+    s_nf, c_nf = sf.scores, sf.context
+    ext = dict(s_nf.extent_map)
+    ext.update(c_nf.extent_map)
+    row_sym = s_nf.out_axes[-2]
+    stream_sym = sf.stream_axis
+    if s_nf.out_axes[-1] != stream_sym:
+        raise ValueError(
+            f"streaming lift expects the stream axis {stream_sym!r} as the "
+            f"trailing scores output axis, got {s_nf.out_axes}")
+    sq, sk = ext[row_sym], ext[stream_sym]
+    hd = ext[s_nf.reduce_axes[0]] if s_nf.reduce_axes else 1
+    vd = ext[c_nf.out_axes[-1]]
+    if blocks is None:
+        _stats["solves"] += 1
+        blocks = default_stream_blocks(sq, sk, hd, vd, dtype, hw_shape)
+    elif not isinstance(blocks, StreamBlockChoice):
+        bq, bk = blocks
+        blocks = StreamBlockChoice(min(bq, sq), min(bk, sk), 0, 0.0, 1.0)
+    bq, bk = blocks.as_tuple()
+    pads = {row_sym: _pad(sq, bq), stream_sym: _pad(sk, bk)}
+
+    def lift_half(nf: "expr_mod.NormalForm") -> "onf_mod.Onf":
+        lifted = nf.onf({s: p for s, p in pads.items()
+                         if s in nf.extent_map})
+        for s in s_nf.out_axes[:-2]:
+            lifted = onf_mod.lift_loop(lifted, s, ext[s], "proc")
+        lifted = onf_mod.lift_loop(lifted, row_sym, pads[row_sym] // bq,
+                                   "proc")
+        lifted = onf_mod.lift_loop(lifted, stream_sym,
+                                   pads[stream_sym] // bk, "block")
+        return lifted
+
+    sched = derive_streaming_schedule(lift_half(s_nf), lift_half(c_nf),
+                                      stream_sym, hw_shape, dtype)
+    order = s_nf.out_axes[:-2] + (row_sym, stream_sym)
+    logical = tuple(ext[s] for s in order)
+    padded = tuple(pads.get(s, ext[s]) for s in order)
+    return ScheduleBundle(sf.name, sched, blocks, logical, padded,
+                          c_nf.out_shape(),
+                          s_nf.leaf_storage_shapes()
+                          + c_nf.leaf_storage_shapes()[1:])
+
+
 #: the deprecated string ops, as the expressions they always were
 def _expr_for_op(op: str, shapes: tuple[int, ...]) -> "expr_mod.Expr":
     if op == "gemm":
@@ -435,6 +646,12 @@ def get_schedule(op, shapes=None, dtype="float32", hardware=None,
     to the same loop nest (e.g. ``transpose(arr(..., "row"))`` and
     ``arr(..., "col")``) share one derivation.
 
+    A ``core.expr.StreamingForm`` (e.g. ``expr.attention_form``) is accepted
+    in place of an expression: the bundle then carries a
+    ``StreamingSchedule`` (grid + BlockSpecs for both chained contractions,
+    carried-state scratch, ``(bq, bk)`` from ``solve_stream_blocks``) on the
+    same cache, keyed on the composite streaming key.
+
     .. deprecated:: the string signature ``get_schedule("gemm", (m, k, n),
        dtype, hardware)`` is kept for one release; it builds the equivalent
        expression and lands on the same cache lines.
@@ -453,12 +670,16 @@ def get_schedule(op, shapes=None, dtype="float32", hardware=None,
         raise TypeError("shapes is only valid with the deprecated string op")
     if hardware is None:
         raise TypeError("get_schedule requires a hardware entry/shape")
-    nf = op if isinstance(op, expr_mod.NormalForm) else expr_mod.normal_form(
-        op, name=getattr(op, "name", None) or "expr")
+    if isinstance(op, (expr_mod.NormalForm, expr_mod.StreamingForm)):
+        nf = op
+    else:
+        nf = expr_mod.normal_form(op, name=getattr(op, "name", None) or "expr")
     hw_shape = getattr(hardware, "shape", hardware)
     hw_name = getattr(hardware, "name", None) or hw_shape.name
     dtype_key = str(dtype)
     block_key = tuple(blocks) if isinstance(blocks, (list, tuple)) else blocks
+    if isinstance(block_key, (BlockChoice, StreamBlockChoice)):
+        block_key = block_key.as_tuple()
     key = (nf.key(), dtype_key, hw_name, block_key)
     with _lock:
         hit = _cache.get(key)
@@ -467,7 +688,10 @@ def get_schedule(op, shapes=None, dtype="float32", hardware=None,
             _cache.move_to_end(key)
             return hit
         _stats["misses"] += 1
-        bundle = _build_bundle(nf, dtype_key, hw_shape, blocks)
+        if isinstance(nf, expr_mod.StreamingForm):
+            bundle = _build_streaming_bundle(nf, dtype_key, hw_shape, blocks)
+        else:
+            bundle = _build_bundle(nf, dtype_key, hw_shape, blocks)
         _cache[key] = bundle
         while len(_cache) > SCHEDULE_CACHE_SIZE:
             _cache.popitem(last=False)

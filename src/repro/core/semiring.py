@@ -95,6 +95,14 @@ _PAD_VALUES = {
 }
 
 
+#: finite stand-in for -inf used by masked online-softmax reductions: large
+#: enough that exp(x - m) underflows to exactly 0.0 for masked entries, but
+#: finite so max/subtraction arithmetic never produces NaNs.  One definition,
+#: shared by the Pallas emitter and the jnp oracles — the kernel's mask
+#: sentinel and its recompute-based backward must never diverge.
+MASK_NEG_INF = -0.7 * float(np.finfo(np.float32).max)
+
+
 def pad_value(combine: str, reduce_op: str) -> float:
     """The element to pad contraction axes with so padded blocks are inert."""
     try:

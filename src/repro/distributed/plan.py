@@ -279,6 +279,16 @@ def derive_plan(expr: Union["expr_mod.Expr", "expr_mod.NormalForm"],
     for sym, axis in applied:
         if sym not in nf.reduce_axes:
             continue
+        if nf.reduce_op != "add":
+            # psum/reduce-scatter ADD partials across devices; summing
+            # per-device partial maxes/mins would silently corrupt any
+            # other semiring — refuse instead of mis-reducing
+            raise ValueError(
+                f"mesh-lifting the sigma axis {sym!r} of a "
+                f"(combine={nf.combine!r}, reduce={nf.reduce_op!r}) normal "
+                "form needs a matching cross-device reduction; only 'add' "
+                "(psum / reduce-scatter) is derivable today — shard an "
+                "output axis instead")
         if scatter_axis is not None:
             d = nf.out_axes.index(scatter_axis)
             if out_entries[d] is not None:

@@ -8,7 +8,7 @@ schedule cache + hardware-registry dispatch, and the unified
 pure-jnp oracles (including the generic expression evaluator)."""
 from repro.kernels.ops import (  # noqa: F401
     apply, moa_gemm, expert_gemm, hadamard, outer, kron, ipophp,
-    matmul, expert_matmul, head_matmul, semiring_matmul,
+    matmul, expert_matmul, head_matmul, semiring_matmul, attention,
 )
 from repro.kernels.emit import emit_bundle, emit_pallas, emit_shard_map  # noqa: F401
 from repro.kernels import ref  # noqa: F401

@@ -38,7 +38,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import semiring
-from repro.core.schedule import Schedule, ScheduleBundle
+from repro.core.schedule import Schedule, ScheduleBundle, StreamingSchedule
+from repro.core.semiring import MASK_NEG_INF as NEG_INF
 
 # jax renamed TPUCompilerParams -> CompilerParams; support both so the
 # kernels run on every jax this repo targets.
@@ -185,6 +186,162 @@ def _shape_ok(shp: tuple[int, ...], opn) -> bool:
         return True
     return (opn.is_psi_view and shp[0] >= opn.shape[0]
             and shp[1:] == opn.shape[1:])
+
+
+# ---------------------------------------------------------------------------
+# streaming emitter: the sigma accumulator generalized to rescale-carrying
+# state (online softmax) — flash attention's init/step/flush, derived
+# ---------------------------------------------------------------------------
+
+def emit_streaming(ss: StreamingSchedule, *, scale: float = 1.0,
+                   causal: bool = False, logical_stream: Optional[int] = None,
+                   out_dtype=None, interpret: bool = False) -> Callable:
+    """Build the ``pl.pallas_call`` a ``StreamingSchedule`` describes.
+
+    The in-block body generalizes ``emit_pallas``'s sigma init/step/flush
+    contract: instead of ``acc += block``, each step of the streamed grid
+    axis computes one block of the first contraction (q·kᵀ), folds it into
+    the carried softmax state — running max ``m``, denominator ``l``, and
+    the accumulator *rescaled* by ``exp(m_prev - m_new)`` — and adds the
+    second contraction (p·v); the flush divides by ``l``.  Masking is
+    positional: ``causal`` keeps keys at or before the query's absolute
+    position (and skips fully-masked streamed blocks), and
+    ``logical_stream`` masks keys the pad added (the ``kpos < sk`` guard).
+
+    Grid, BlockSpecs, dimension semantics, scratch shapes and both in-block
+    einsums all come from the schedule — nothing here is hand-written.
+    """
+    out_dtype = jnp.dtype(out_dtype or jnp.float32)
+    ni = len(ss.ins)
+    bq, bk = ss.row_block, ss.stream_block
+    stream_dim = ss.stream_grid_dim
+    nk = ss.grid[stream_dim].extent
+    row_dim = ss.out.grid_dims[ss.out.axes.index(ss.row_axis)]
+    sk_pad = nk * bk
+    masked_pad = logical_stream is not None and logical_stream < sk_pad
+
+    # both in-block contractions as derived einsum plans (the axis structure
+    # of the blocks, not a hand-chosen spec)
+    scores_plan, scores_keep = Schedule(
+        ss.name, ss.grid, ss.ins[:2], ss.inter, ss.contracted, None,
+    ).einsum_plan()
+    ctx_plan, ctx_keep = Schedule(
+        ss.name, ss.grid, (ss.inter,) + ss.ins[2:], ss.out,
+        (ss.stream_axis,), None,
+    ).einsum_plan()
+    acc_block = ss.acc_block
+
+    def body(*refs):
+        o_ref = refs[ni]
+        m_ref, l_ref, acc_ref = refs[ni + 1:ni + 4]
+        qi = pl.program_id(row_dim)
+        ki = pl.program_id(stream_dim)
+
+        @pl.when(ki == 0)
+        def _init():
+            m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        # skip streamed blocks that are entirely masked: strictly above the
+        # causal diagonal, or entirely inside the key padding
+        run = True
+        if causal:
+            run = ki * bk <= qi * bq + bq - 1
+        if masked_pad:
+            run = jnp.logical_and(run, ki * bk < logical_stream)
+
+        @pl.when(run)
+        def _step():
+            q, k = (refs[i][...].reshape(
+                tuple(opn.block[d] for d in keep))
+                for i, (opn, keep) in enumerate(zip(ss.ins[:2], scores_keep)))
+            s = jnp.einsum(scores_plan, q, k,
+                           preferred_element_type=jnp.float32) * scale
+            need_mask = causal or masked_pad
+            if need_mask:
+                qpos = qi * bq + jax.lax.broadcasted_iota(
+                    jnp.int32, (bq, bk), 0)
+                kpos = ki * bk + jax.lax.broadcasted_iota(
+                    jnp.int32, (bq, bk), 1)
+                mask = jnp.ones((bq, bk), bool)
+                if causal:
+                    mask = kpos <= qpos
+                if masked_pad:
+                    mask = jnp.logical_and(mask, kpos < logical_stream)
+                s = jnp.where(mask, s, NEG_INF)
+            m_prev = m_ref[:, 0]
+            m_new = jnp.maximum(m_prev, s.max(axis=-1))
+            p = jnp.exp(s - m_new[:, None])
+            corr = jnp.exp(m_prev - m_new)
+            l_ref[:, 0] = l_ref[:, 0] * corr + p.sum(axis=-1)
+            m_ref[:, 0] = m_new
+            v = refs[2][...].reshape(
+                tuple(ss.ins[2].block[d] for d in ctx_keep[1]))
+            acc_ref[...] = (
+                acc_ref[...] * corr[:, None]
+                + jnp.einsum(ctx_plan, p.astype(v.dtype), v,
+                             preferred_element_type=jnp.float32
+                             ).reshape(acc_block))
+
+        @pl.when(ki == nk - 1)
+        def _flush():
+            o_ref[...] = (acc_ref[...] /
+                          jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
+                          ).astype(out_dtype).reshape(ss.out.block)
+
+    call = pl.pallas_call(
+        body,
+        grid=ss.grid_extents,
+        in_specs=[pl.BlockSpec(opn.block, _index_map(opn.grid_dims,
+                                                     opn.offsets))
+                  for opn in ss.ins],
+        out_specs=pl.BlockSpec(ss.out.block, _index_map(ss.out.grid_dims,
+                                                        ss.out.offsets)),
+        out_shape=jax.ShapeDtypeStruct(ss.out.shape, out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),            # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),            # denominator l
+            pltpu.VMEM(acc_block, jnp.float32),          # rescaled acc
+        ],
+        compiler_params=compiler_params(
+            dimension_semantics=ss.dimension_semantics),
+        interpret=interpret,
+    )
+
+    def fn(*arrays):
+        if len(arrays) != ni:
+            raise ValueError(f"{ss.name}: expected {ni} operands")
+        for arr, opn in zip(arrays, ss.ins):
+            if tuple(arr.shape) != opn.shape:
+                raise ValueError(
+                    f"{ss.name}: operand {opn.array} has shape {arr.shape}, "
+                    f"schedule derived {opn.shape} — pad first")
+        return call(*arrays)
+
+    return fn
+
+
+def emit_streaming_bundle(bundle: ScheduleBundle, *, scale: float,
+                          causal: bool, out_dtype=None,
+                          interpret: bool = False) -> Callable:
+    """Executable for a cached streaming derivation over *logical* operands:
+    pad the sequence axes to the derived block multiples (padded keys are
+    inert — the emitter's ``kpos < sk`` guard masks them), run the emitted
+    kernel, slice the logical result back out."""
+    ss = bundle.schedule
+    logical_stream = bundle.shapes[-1]
+    kern = emit_streaming(ss, scale=scale, causal=causal,
+                          logical_stream=logical_stream,
+                          out_dtype=out_dtype, interpret=interpret)
+    out_slices = tuple(slice(0, d) for d in bundle.out_shape)
+
+    def call(*arrays):
+        padded = [_pad_to_shape(x, spec.shape)
+                  for x, spec in zip(arrays, ss.ins)]
+        return kern(*padded)[out_slices]
+
+    return call
 
 
 # ---------------------------------------------------------------------------

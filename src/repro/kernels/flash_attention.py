@@ -1,116 +1,92 @@
-"""Flash attention as a Pallas TPU kernel — the VMEM-blocked twin of
-``repro.models.chunked_attention`` (which is its jnp oracle and the XLA
-fallback path used by the dry-run).
+"""Flash attention as a *derived* streaming schedule — no hand-written grid.
 
-Schedule = dimension lifting of both sequence axes:
+The schedule comes from the same pipeline as every GEMM in the repo:
+``expr.attention_form`` composes the two chained contractions (q·kᵀ and the
+online-softmax-weighted p·v) into a ``StreamingForm``; ``get_schedule``
+lifts it (batch/kv-head/group fully onto "proc", the query axis blockwise
+onto "proc", the key axis blockwise onto the sigma "block" resource) and
+derives grid, BlockSpecs, index maps and ``(bq, bk)`` — the latter from
+``solve_stream_blocks``, whose working-set model includes the carried
+(acc, m, l) state; ``emit_streaming`` generalizes the sigma-accumulator
+init/step/flush contract to the rescale-carrying online softmax.
 
-    grid = (batch*q_heads, Sq/bq, Sk/bk)      k innermost ("arbitrary")
-    resident per step: q (bq,hd), k (bk,hd), v (bk,hd), acc (bq,hd) f32,
-    running max m and denominator l — the block solver's '3 blocks + state
-    <= VMEM' constraint picks (bq, bk).
+The GQA q-head -> kv-head index map is *recovered*, not hand-coded: K/V
+carry a zero Access coefficient on the group axis, so their derived
+BlockSpecs simply omit the group grid dimension.  Derivations live in the
+process-wide LRU schedule cache keyed on the streaming form.
 
-GQA handled in the BlockSpec index map (q head -> kv head, no K/V repeat).
-Causal masking from absolute positions; fully-masked k-blocks are skipped
-via ``pl.when`` (halves the work for causal attention).
+``repro.models.chunked_attention`` remains the jnp oracle and XLA fallback;
+``kernels.ops.attention`` is the model-facing wrapper (grouped layout,
+differentiable).  This entry keeps the historical ``(B, H, S, hd)`` layout
+and pads any sequence length to the derived block multiples (padded keys
+are masked inert by the emitter's ``kpos < sk`` guard).
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.emit import compiler_params
+from repro.core import expr as E
+from repro.core import schedule as _sched
+from repro.core.hardware import current_hardware, get_entry
+from repro.kernels.emit import NEG_INF, emit_streaming_bundle  # noqa: F401
 
-NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+def attention_bundle(b: int, hkv: int, g: int, sq: int, sk: int, hd: int,
+                     vd: Optional[int] = None, *, dtype="float32",
+                     hardware=None, blocks=None) -> "_sched.ScheduleBundle":
+    """The cached streaming-schedule derivation for one attention shape."""
+    hw = hardware or current_hardware()
+    return _sched.get_schedule(E.attention_form(b, hkv, g, sq, sk, hd, vd),
+                               dtype=dtype, hardware=hw, blocks=blocks)
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-                  nk: int, scale: float, causal: bool, bq: int, bk: int,
-                  out_dtype):
-    qi = pl.program_id(1)
-    ki = pl.program_id(2)
-
-    @pl.when(ki == 0)
-    def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    # causal: skip k-blocks strictly above the diagonal
-    run = (not causal) or (ki * bk <= qi * bq + bq - 1)
-
-    @pl.when(run)
-    def _step():
-        q = q_ref[0]                                  # (bq, hd)
-        k = k_ref[0]                                  # (bk, hd)
-        v = v_ref[0]
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32) * scale
-        if causal:
-            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
-            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-            s = jnp.where(kpos <= qpos, s, NEG_INF)
-        m_prev = m_ref[:, 0]
-        m_new = jnp.maximum(m_prev, s.max(axis=-1))
-        p = jnp.exp(s - m_new[:, None])
-        corr = jnp.exp(m_prev - m_new)
-        l_ref[:, 0] = l_ref[:, 0] * corr + p.sum(axis=-1)
-        m_ref[:, 0] = m_new
-        acc_ref[...] = (acc_ref[...] * corr[:, None]
-                        + jax.lax.dot_general(p.astype(v.dtype), v,
-                                              (((1,), (0,)), ((), ())),
-                                              preferred_element_type=jnp.float32))
-
-    @pl.when(ki == nk - 1)
-    def _flush():
-        o_ref[0] = (acc_ref[...] /
-                    jnp.maximum(l_ref[:, 0], 1e-30)[:, None]).astype(out_dtype)
+@functools.lru_cache(maxsize=256)
+def _executor(b: int, hkv: int, g: int, sq: int, sk: int, hd: int, vd: int,
+              dtype_s: str, out_dtype_s: str, hw_name: str, interpret: bool,
+              causal: bool, scale: float, blocks):
+    """Jitted pad/kernel/slice callable over the *stored* model layouts
+    ``q (b, sq, hkv, g, hd); k (b, sk, hkv, hd); v (b, sk, hkv, vd)`` —
+    the derived BlockSpecs walk these buffers in place (no relayout) —
+    memoized per (shape, dtype, hardware, masking, blocks).  Returns the
+    derived output layout ``(b, hkv, g, sq, vd)``."""
+    bundle = attention_bundle(b, hkv, g, sq, sk, hd, vd, dtype=dtype_s,
+                              hardware=get_entry(hw_name), blocks=blocks)
+    return jax.jit(emit_streaming_bundle(bundle, scale=scale, causal=causal,
+                                         out_dtype=out_dtype_s,
+                                         interpret=interpret))
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     scale: float, causal: bool = True,
-                    block_q: int = 512, block_k: int = 512,
-                    interpret: bool = False) -> jax.Array:
+                    block_q: Optional[int] = None,
+                    block_k: Optional[int] = None,
+                    interpret: bool = False,
+                    hardware=None) -> jax.Array:
     """q: (B, Hq, Sq, hd); k/v: (B, Hkv, Sk, hd), Hq % Hkv == 0.
-    Returns (B, Hq, Sq, hd).  Sq/Sk must be multiples of the blocks
-    (ops-level wrapper pads)."""
+    Returns (B, Hq, Sq, hd).  Any Sq/Sk: operands are padded to the derived
+    block multiples and the result sliced back (padded keys are masked).
+    ``block_q``/``block_k`` pin the blocks (tests); by default they come
+    from the solver inside the derived schedule."""
     b, hq, sq, hd = q.shape
     _, hkv, sk, _ = k.shape
     assert hq % hkv == 0
     g = hq // hkv
-    bq = min(block_q, sq)
-    bk = min(block_k, sk)
-    assert sq % bq == 0 and sk % bk == 0, (sq, sk, bq, bk)
-    nq, nk = sq // bq, sk // bk
-
-    qf = q.reshape(b * hq, sq, hd)
-    kf = k.reshape(b * hkv, sk, hd)
-    vf = v.reshape(b * hkv, sk, hd)
-
-    def kv_map(h, qi, ki):
-        return ((h // hq) * hkv + (h % hq) // g, ki, 0)
-
-    out = pl.pallas_call(
-        functools.partial(_flash_kernel, nk=nk, scale=scale, causal=causal,
-                          bq=bq, bk=bk, out_dtype=q.dtype),
-        grid=(b * hq, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, bq, hd), lambda h, qi, ki: (h, qi, 0)),
-            pl.BlockSpec((1, bk, hd), kv_map),
-            pl.BlockSpec((1, bk, hd), kv_map),
-        ],
-        out_specs=pl.BlockSpec((1, bq, hd), lambda h, qi, ki: (h, qi, 0)),
-        out_shape=jax.ShapeDtypeStruct((b * hq, sq, hd), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((bq, 1), jnp.float32),         # running max
-            pltpu.VMEM((bq, 1), jnp.float32),         # denominator
-            pltpu.VMEM((bq, hd), jnp.float32),        # accumulator
-        ],
-        compiler_params=compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
-    )(qf, kf, vf)
-    return out.reshape(b, hq, sq, hd)
+    hw = hardware or current_hardware()
+    blocks = None
+    if block_q is not None or block_k is not None:
+        blocks = (block_q or 512, block_k or 512)
+    fn = _executor(b, hkv, g, sq, sk, hd, v.shape[-1],
+                   str(jnp.dtype(q.dtype)), str(jnp.dtype(q.dtype)),
+                   hw.name, bool(interpret), bool(causal), float(scale),
+                   blocks)
+    # this compat facade takes (B, H, S, hd); the executor binds the models'
+    # stored (B, S, KV, G, hd) layouts, so relayout here (the model-facing
+    # ops.attention entry has no such copies)
+    out = fn(q.reshape(b, hkv, g, sq, hd).transpose(0, 3, 1, 2, 4),
+             k.transpose(0, 2, 1, 3),
+             v.transpose(0, 2, 1, 3))               # (b, hkv, g, sq, vd)
+    return out.reshape(b, hq, sq, -1)

@@ -168,6 +168,10 @@ def apply(expr: "E.Expr", *arrays: jax.Array, out_dtype=None,
     # Pallas is the validation path, not the default execution path)
     use_kernel = hw.backend == "pallas" or bool(interpret)
     if mesh is not None:
+        if blocks is not None:
+            raise ValueError(
+                "apply(mesh=...) derives per-shard blocks from the plan; "
+                "pinning blocks= is not supported on the sharded path")
         fn = _sharded_callable(nf, str(jnp.dtype(arrays[0].dtype)),
                                str(out_dtype), hw.name, interp, use_kernel,
                                mesh, shard or {}, replicate_out)
@@ -487,6 +491,85 @@ def head_matmul(x: jax.Array, w: jax.Array, *, transpose_b: bool = False,
     y = apply(expr, x.reshape(b * s, h, kdim), w, out_dtype=jnp.float32,
               interpret=interpret, hardware=hardware)        # (h, b*s, n)
     return y.transpose(1, 0, 2).reshape(b, s, h, n).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention: the derived streaming schedule behind an ops-level wrapper
+# ---------------------------------------------------------------------------
+
+def _oracle_attention(q, k, v, scale, causal):
+    """The jnp online-softmax oracle on the grouped model layout (also the
+    recompute body of the kernel path's backward pass)."""
+    from repro.models.chunked_attention import chunked_attention
+    return chunked_attention(q, k, v, scale=scale, causal=causal)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_grouped(q, k, v, scale, causal, hw_name, interpret, blocks):
+    """Forward: the derived streaming Pallas kernel over the grouped layout
+    ``q (B, Sq, KV, G, hd); k/v (B, Sk, KV, hd)`` -> ``(B, Sq, KV*G, hd)``.
+    The schedule was derived on exactly these *stored* layouts (the logical
+    grouped views are transposed leaves, pure index rewrites), so operands
+    feed the kernel with no relayout copy; padding to the derived blocks and
+    the slice back happen inside the cached executor
+    (``kernels.flash_attention``)."""
+    from repro.kernels import flash_attention as fa
+    b, sq, kv, g, hd = q.shape
+    sk, vd = k.shape[1], v.shape[-1]
+    fn = fa._executor(b, kv, g, sq, sk, hd, vd, str(jnp.dtype(q.dtype)),
+                      str(jnp.dtype(q.dtype)), hw_name, interpret, causal,
+                      scale, blocks)
+    out = fn(q, k, v)                               # (b, kv, g, sq, vd)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, kv * g, vd)
+
+
+def _flash_grouped_fwd(q, k, v, scale, causal, hw_name, interpret, blocks):
+    return _flash_grouped(q, k, v, scale, causal, hw_name, interpret,
+                          blocks), (q, k, v)
+
+
+def _flash_grouped_bwd(scale, causal, hw_name, interpret, blocks, resid, g_out):
+    """Flash-style backward: recompute through the online-softmax oracle
+    (identical semantics, O(chunk) memory) instead of saving probabilities."""
+    q, k, v = resid
+    _, vjp = jax.vjp(
+        lambda qq, kk, vv: _oracle_attention(qq, kk, vv, scale, causal),
+        q, k, v)
+    return vjp(g_out)
+
+
+_flash_grouped.defvjp(_flash_grouped_fwd, _flash_grouped_bwd)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, scale: float,
+              causal: bool = True, interpret: Optional[bool] = None,
+              hardware: Optional[HardwareEntry] = None,
+              blocks: Optional[tuple[int, int]] = None) -> jax.Array:
+    """Unified grouped-query attention — the model-facing entry.
+
+    ``q: (B, Sq, KV, G, hd)`` (GQA grouping, K/V heads never repeated);
+    ``k/v: (B, Sk, KV, hd)``.  Returns ``(B, Sq, KV*G, hd)``.
+
+    On a Pallas backend (or under ``interpret=True``) this runs the flash
+    kernel from the *derived* streaming schedule, with the ops-level
+    pad/slice contract: any sequence length works — operands are padded to
+    the solver's ``(bq, bk)`` multiples, padded keys are masked inert by
+    the kernel's ``kpos < sk`` guard, and the logical result is sliced
+    back.  Differentiable: the backward pass recomputes through the
+    chunked online-softmax oracle.  On "xla" entries the same oracle is
+    the forward path, so semantics are identical everywhere.
+    """
+    hw, interp = _resolve(hardware, interpret)
+    # kernel on compiled-Pallas entries, on "interpret" entries (the CPU
+    # validation path — this is what attn_impl="pallas" means off-TPU), or
+    # by explicit request; "xla" entries use the jnp oracle.
+    use_kernel = (hw.backend == "pallas"
+                  or (hw.backend == "interpret" and interp)
+                  or bool(interpret))
+    if use_kernel:
+        return _flash_grouped(q, k, v, float(scale), bool(causal), hw.name,
+                              bool(interp), blocks)
+    return _oracle_attention(q, k, v, scale, causal).astype(q.dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -20,8 +20,7 @@ from repro.kernels import ops
 from repro.models.chunked_attention import chunked_attention
 from repro.models.common import ArchConfig, Collector
 from repro.models.layers import apply_rope, rope_tables
-
-NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+from repro.core.semiring import MASK_NEG_INF as NEG_INF
 
 
 def _proj(x: jax.Array, w: jax.Array) -> jax.Array:
@@ -139,6 +138,12 @@ def attention_fwd(p: dict, x: jax.Array, cfg: ArchConfig, *,
     bidirectionally (PaLI-style prefix-LM over image patches).  ``causal``
     False -> fully bidirectional (whisper encoder).  ``kv_override``: use
     given K/V (whisper cross-attention)."""
+    if not causal and (window > 0 or prefix_len > 0):
+        # mirror _chunk_mask's honor-or-raise contract on EVERY branch —
+        # the dense (materialized) path used to silently attend to all keys
+        raise ValueError(
+            f"window={window} / prefix_len={prefix_len} require causal "
+            "attention")
     b, s, d = x.shape
     hd = p["wq"].shape[-1]
     scale = hd ** -0.5
@@ -155,7 +160,9 @@ def attention_fwd(p: dict, x: jax.Array, cfg: ArchConfig, *,
         if cfg.use_bias:
             k = k + p["bk"].astype(x.dtype)
             v = v + p["bv"].astype(x.dtype)
-        if cfg.rope_pct > 0 and causal:
+        # RoPE is a property of the positions, not of the masking mode:
+        # bidirectional/encoder passes with rope_pct > 0 get rotated too
+        if cfg.rope_pct > 0:
             sin, cos = rope_tables(positions, int(hd * cfg.rope_pct), cfg.rope_theta)
             q = apply_rope(q, sin, cos, 1.0 if cfg.rope_pct == 1.0 else
                            (hd * cfg.rope_pct) / hd)
@@ -178,17 +185,12 @@ def attention_fwd(p: dict, x: jax.Array, cfg: ArchConfig, *,
     qg = _split_groups(q, kvh)
     sk = k.shape[1]
     if (cfg.attn_impl == "pallas" and causal and window == 0
-            and prefix_len == 0 and s % 512 == 0 and sk % 512 == 0):
-        # TPU execution path: the Pallas flash kernel (same schedule as the
-        # chunked jnp path; interpret-mode on CPU)
-        from repro.kernels.flash_attention import flash_attention
-        import jax as _jax
-        qh = qg.reshape(b, s, -1, hd).transpose(0, 2, 1, 3)
-        kh = k.transpose(0, 2, 1, 3)
-        vh = v.transpose(0, 2, 1, 3)
-        out = flash_attention(qh, kh, vh, scale=scale, causal=True,
-                              interpret=_jax.default_backend() != "tpu")
-        out = out.transpose(0, 2, 1, 3)
+            and prefix_len == 0):
+        # execution path: the flash kernel from the derived streaming
+        # schedule, via the ops-level wrapper whose pad/slice contract
+        # accepts ANY sequence length (no silent jnp fallback off
+        # block multiples; interpret-mode Pallas on CPU, oracle on "xla")
+        out = ops.attention(qg, k, v, scale=scale, causal=True)
     elif s >= cfg.attn_chunk_min_seq and causal:
         out = chunked_attention(qg, k, v, scale=scale, causal=True,
                                 window=window, prefix_len=prefix_len,

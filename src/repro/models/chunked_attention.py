@@ -19,12 +19,23 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+from repro.core.semiring import MASK_NEG_INF as NEG_INF
 
 
 def _chunk_mask(qpos: jax.Array, kpos: jax.Array, *, causal: bool,
                 window: int, prefix_len: int) -> jax.Array:
-    """(Qc, Kc) mask from absolute positions."""
+    """(Qc, Kc) mask from absolute positions.
+
+    ``window`` and ``prefix_len`` are defined relative to the causal
+    diagonal; with ``causal=False`` they have no meaning here, and silently
+    returning the full bidirectional mask would turn windowed attention
+    into full attention — raise instead of mis-masking.
+    """
+    if not causal and (window > 0 or prefix_len > 0):
+        raise ValueError(
+            f"window={window} / prefix_len={prefix_len} require causal "
+            "attention: non-causal windowed/prefix masking is not defined "
+            "here, and ignoring them would silently attend to everything")
     m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
     if causal:
         m = kpos[None, :] <= qpos[:, None]

@@ -69,3 +69,33 @@ def test_gradients_match_oracle():
     g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
     for a, b in zip(g1, g2):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# non-causal window/prefix regression: honor-or-raise, never silently ignore
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fn", [chunked_attention, chunked_attention_ref])
+def test_noncausal_window_raises(fn):
+    """window > 0 with causal=False used to silently become FULL attention;
+    it must raise instead of mis-masking."""
+    q, k, v = _mk(1, 16, 16, 1, 2, 8)
+    with pytest.raises(ValueError, match="causal"):
+        fn(q, k, v, scale=0.3, causal=False, window=4)
+
+
+@pytest.mark.parametrize("fn", [chunked_attention, chunked_attention_ref])
+def test_noncausal_prefix_raises(fn):
+    q, k, v = _mk(1, 16, 16, 1, 2, 8)
+    with pytest.raises(ValueError, match="causal"):
+        fn(q, k, v, scale=0.3, causal=False, prefix_len=5)
+
+
+def test_noncausal_without_window_still_bidirectional():
+    """Plain causal=False (no window/prefix) keeps working and attends to
+    every key."""
+    q, k, v = _mk(1, 12, 12, 1, 2, 8)
+    got = chunked_attention(q, k, v, scale=0.3, causal=False,
+                            q_chunk=4, k_chunk=4)
+    want = chunked_attention_ref(q, k, v, scale=0.3, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)

@@ -135,6 +135,32 @@ def test_plan_non_divisible_falls_back_to_replication():
     assert plan.local_extent("i") == 30             # nothing was split
 
 
+def test_apply_rejects_blocks_on_sharded_path():
+    """apply(mesh=...) derives per-shard blocks from the plan; a pinned
+    blocks= used to be silently dropped — now it raises."""
+    from repro.kernels import ops
+    mesh1 = jax.make_mesh((1,), ("x",), devices=jax.devices()[:1])
+    a = jnp.ones((8, 8), jnp.float32)
+    with pytest.raises(ValueError, match="blocks"):
+        ops.apply(E.matmul_expr(8, 8, 8), a, a, mesh=mesh1,
+                  shard={"i": "x"}, blocks=(64, 64, 64))
+
+
+def test_plan_rejects_noncommutative_sigma_shard():
+    """psum ADDS per-device partials; mesh-lifting the sigma axis of a
+    tropical (max/min) semiring must raise, not silently sum partial maxes."""
+    maxplus = E.inner("max", "add", E.arr("A", (32, 32)),
+                      E.arr("B", (32, 32)))
+    with pytest.raises(ValueError, match="reduce"):
+        dplan.derive_plan(maxplus, MeshShape((("x", 2),)), shard={"k": "x"},
+                          hardware=CPU)
+    # output-axis sharding of the same semiring needs no cross-device
+    # reduction and stays derivable
+    plan = dplan.derive_plan(maxplus, MeshShape((("x", 2),)),
+                             shard={"i": "x"}, hardware=CPU)
+    assert plan.collective == "none"
+
+
 def test_plan_rejects_bad_requests():
     with pytest.raises(KeyError, match="unknown axis"):
         dplan.derive_plan(E.matmul_expr(8, 8, 8), MS8, shard={"z": "x"},

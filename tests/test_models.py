@@ -163,3 +163,99 @@ def test_param_counts_match_analytic():
         got = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
         want, _ = r.param_count()
         assert abs(got - want) / got < 0.15, (arch, got, want)
+
+
+# ---------------------------------------------------------------------------
+# attention-layer regressions (PR 4 bugfixes)
+# ---------------------------------------------------------------------------
+
+def _attn_setup(cfg, b=1, s=24, seed=3):
+    from repro.models import attention as attn
+    from repro.models.common import Collector
+    col = Collector(jax.random.PRNGKey(seed), dtype=jnp.float32)
+    attn.init_attention(col, "a", cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                          (b, s, cfg.d_model), jnp.float32)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    return col.params["a"], x, positions
+
+
+def test_rope_applied_on_noncausal_attention(monkeypatch):
+    """Regression: bidirectional (encoder) passes with rope_pct > 0 must
+    rotate q and k — the old gate silently skipped RoPE when causal=False."""
+    import repro.models.attention as attn_mod
+    cfg = get_config("stablelm-1.6b", reduced=True).with_(remat=False)
+    assert cfg.rope_pct > 0
+    p, x, positions = _attn_setup(cfg)
+
+    calls = []
+    orig = attn_mod.apply_rope
+    monkeypatch.setattr(attn_mod, "apply_rope",
+                        lambda *a, **kw: (calls.append(1), orig(*a, **kw))[1])
+    out_rope, _ = attn_mod.attention_fwd(p, x, cfg, positions=positions,
+                                         causal=False)
+    assert len(calls) == 2                       # q and k both rotated
+    out_norope, _ = attn_mod.attention_fwd(p, x, cfg.with_(rope_pct=0.0),
+                                           positions=positions, causal=False)
+    # with the old bug both paths were identical (RoPE dropped)
+    assert float(jnp.max(jnp.abs(out_rope - out_norope))) > 1e-4
+
+
+def test_kv_cache_is_mask_independent():
+    """K/V leaving attention_fwd feed the decode cache, whose masking DOES
+    apply RoPE — so the cache must not depend on the masking mode.  Under
+    the old gate, causal=False returned un-rotated keys while causal=True
+    returned rotated ones."""
+    import repro.models.attention as attn_mod
+    cfg = get_config("stablelm-1.6b", reduced=True).with_(remat=False)
+    assert cfg.rope_pct > 0
+    p, x, positions = _attn_setup(cfg)
+    _, kv_causal = attn_mod.attention_fwd(p, x, cfg, positions=positions,
+                                          causal=True)
+    _, kv_bidir = attn_mod.attention_fwd(p, x, cfg, positions=positions,
+                                         causal=False)
+    np.testing.assert_array_equal(np.asarray(kv_causal.k, np.float32),
+                                  np.asarray(kv_bidir.k, np.float32))
+    np.testing.assert_array_equal(np.asarray(kv_causal.v, np.float32),
+                                  np.asarray(kv_bidir.v, np.float32))
+
+
+def test_pallas_impl_runs_kernel_on_any_causal_shape(monkeypatch):
+    """Regression: attn_impl="pallas" used to silently fall back to the jnp
+    path off 512-multiples.  Now every causal full-sequence shape routes
+    through ops.attention (the pad/slice wrapper) and matches the XLA path."""
+    import repro.models.attention as attn_mod
+    from repro.models import transformer
+
+    calls = []
+    orig = attn_mod.ops.attention
+    monkeypatch.setattr(
+        attn_mod.ops, "attention",
+        lambda *a, **kw: (calls.append(1), orig(*a, **kw))[1])
+
+    cfg = get_config("stablelm-1.6b", reduced=True).with_(remat=False,
+                                                          head_dim=32)
+    params, _ = registry.init(cfg, KEY)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 300), 0,
+                              cfg.vocab_size)   # NOT a 512 multiple
+    h_x, _, _ = transformer.forward(params, cfg.with_(attn_impl="xla"), toks)
+    assert not calls
+    h_p, _, _ = transformer.forward(params, cfg.with_(attn_impl="pallas"),
+                                    toks)
+    assert calls                                 # kernel path engaged
+    assert float(jnp.max(jnp.abs(h_x - h_p))) < 5e-3
+
+
+def test_noncausal_window_raises_on_dense_branch():
+    """The honor-or-raise contract covers the materialized (_attend) branch
+    too: short non-causal sequences with window/prefix_len must raise, not
+    silently attend to everything."""
+    import repro.models.attention as attn_mod
+    cfg = get_config("stablelm-1.6b", reduced=True).with_(remat=False)
+    p, x, positions = _attn_setup(cfg, s=8)   # far below attn_chunk_min_seq
+    with pytest.raises(ValueError, match="causal"):
+        attn_mod.attention_fwd(p, x, cfg, positions=positions,
+                               causal=False, window=4)
+    with pytest.raises(ValueError, match="causal"):
+        attn_mod.attention_fwd(p, x, cfg, positions=positions,
+                               causal=False, prefix_len=3)
