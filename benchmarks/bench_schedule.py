@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from benchmarks.common import time_fn
 from repro.core import expr as E
 from repro.core import schedule as sched
-from repro.core.energy import attention_energy, gemm_energy
+from repro.core.energy import attention_energy, gemm_energy, scan_energy
 from repro.core.hardware import get_entry
 from repro.core.mesh import MeshShape
 from repro.distributed import plan as dplan
@@ -33,6 +33,8 @@ from repro.models.chunked_attention import chunked_attention
 SHAPES = [(128, 128, 128), (256, 256, 256), (100, 70, 130)]
 #: flash-attention rows: (batch, q_heads, kv_heads, seq, head_dim)
 ATTN_SHAPES = [(1, 4, 2, 512, 64), (1, 4, 2, 300, 64)]
+#: ssd-scan rows: (batch, seq, heads, head_dim, state_dim)
+SSD_SHAPES = [(1, 512, 4, 32, 32), (1, 300, 4, 32, 32)]
 #: the distributed-plan rows model an 8-way slice of the v5e "data" ring
 MESH8 = MeshShape((("x", 8),))
 #: sharding kinds for the matmul_sharded rows (collective derived, then
@@ -153,9 +155,52 @@ def run():
             "modeled_energy_J": rep.energy_J,
             "bound": rep.bound,
         })
+    ssd_records = []
+    for b, s, h, p, n in SSD_SHAPES:
+        k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(2), 4)
+        xdt = jax.random.normal(k1, (b, s, h, p), jnp.float32)
+        dA = -jnp.abs(jax.random.normal(k2, (b, s, h), jnp.float32)) * 0.3
+        B = jax.random.normal(k3, (b, s, n), jnp.float32)
+        C = jax.random.normal(k4, (b, s, n), jnp.float32)
+        chunk = ops.default_ssd_chunk(s, h, p, n, "float32", entry)
+        chunk = min(chunk, s)
+        tag = f"schedule/ssd_scan_{b}x{s}x{h}x{p}x{n}"
+        us_derived = time_fn(lambda: ops.scan_ssd(
+            xdt, dA, B, C, chunk=chunk, interpret=True)[0],
+            warmup=1, iters=3)
+        us_oracle = time_fn(jax.jit(lambda *a: ops._ssd_oracle(
+            *a, jnp.zeros((b, h, p, n), jnp.float32), chunk)[0]),
+            xdt, dA, B, C)
+        bundle = sched.get_schedule(
+            E.ssd_form(b, -(-s // chunk), chunk, h, p, n), dtype="float32",
+            hardware=entry, blocks=(chunk,))
+        rep = scan_energy(b, s, h, p, n, bundle.blocks, "float32",
+                          hardware=entry.shape)
+        rep_mat = scan_energy(b, s, h, p, n, bundle.blocks, "float32",
+                              materialized=True, hardware=entry.shape)
+        rows.append((f"{tag}/derived", us_derived,
+                     f"chunk={chunk} (solved) modeled HBM={rep.hbm_bytes:.3e}B "
+                     f"t={rep.time_s:.3e}s E={rep.energy_J:.3e}J"))
+        rows.append((f"{tag}/hand_rolled_jnp", us_oracle,
+                     f"modeled HBM={rep_mat.hbm_bytes:.3e}B (L + scores "
+                     "round-trip HBM) E=" + f"{rep_mat.energy_J:.3e}J"))
+        ssd_records.append({
+            "shape": [b, s, h, p, n],
+            "chunk": chunk,
+            "us_derived_interpret": us_derived,
+            "us_hand_rolled_jnp": us_oracle,
+            "grid": list(bundle.schedule.grid_extents),
+            "modeled_hbm_bytes": rep.hbm_bytes,
+            "modeled_hbm_bytes_materialized": rep_mat.hbm_bytes,
+            "modeled_time_s": rep.time_s,
+            "modeled_energy_J": rep.energy_J,
+            "modeled_energy_J_materialized": rep_mat.energy_J,
+            "bound": rep.bound,
+        })
     stats = sched.schedule_cache_stats()
     payload = {"hardware": entry.name, "mesh": list(MESH8.axes),
                "entries": records, "flash_attention": attn_records,
+               "ssd_scan": ssd_records,
                "schedule_cache": stats,
                "plan_cache": dplan.plan_cache_stats()}
     with open(JSON_PATH, "w") as f:

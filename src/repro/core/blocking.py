@@ -198,6 +198,92 @@ def solve_stream_blocks(sq: int, sk: int, hd: int, vd: Optional[int] = None,
     return best
 
 
+@dataclass(frozen=True)
+class RecurrenceBlockChoice:
+    """Block choice for a chunked carried-state scan (SSD, RG-LRU): the
+    streamed-axis block ``bs`` — the chunk length the sequence axis is
+    dimension-lifted by (``S -> (S/bs, bs)``)."""
+    bs: int
+    vmem_bytes: int                 # working set incl. buffering + state
+    arithmetic_intensity: float     # flops / byte moved HBM->VMEM
+    utilization: float              # fraction of the last chunk filled
+
+    def as_tuple(self) -> tuple[int]:
+        return (self.bs,)
+
+
+def solve_recurrence_blocks(s: int, *, token_elems: int, state_elems: int,
+                            quad_elems: int = 0, lin_elems: int = 0,
+                            flops_per_step: Optional[float] = None,
+                            dtype="float32",
+                            hardware: HardwareShape = TPU_V5E,
+                            vmem_budget_frac: float = 0.25,
+                            buffering: int = 2,
+                            acc_dtype="float32",
+                            max_block: int = 1024) -> RecurrenceBlockChoice:
+    """Choose the chunk length ``bs`` for a carried-state chunked scan.
+
+    Per streamed step the VMEM residents are: the per-token operand and
+    output blocks (``token_elems`` elements per sequence position,
+    double-buffered), the carried state (``state_elems`` — SSD's (h, p, n)
+    tensor, RG-LRU's channel vector; chunk-length-independent), and the
+    monoid's in-chunk intermediates — ``quad_elems * bs^2`` (the segsum
+    decay mask L and the score block scale quadratically with the chunk)
+    plus ``lin_elems * bs`` (cumsums, per-position decays) at accumulator
+    width.
+
+    Same shape as ``solve_blocks``: enumerate hardware-aligned candidates,
+    keep those whose working set fits the budget, maximize arithmetic
+    intensity (monotone in ``bs`` here — quadratic intra-chunk flops over
+    linear traffic — so the largest feasible chunk wins, exactly the
+    paper's a-priori rule).  This replaces the hand-written
+    ``default_ssd_chunk`` heuristic: the carried ``(h, ...)`` state and the
+    chunk intermediates are *in the model*, so fat heads or narrow budgets
+    shrink the chunk instead of overflowing VMEM.
+    """
+    esize = _dtype_size(dtype)
+    acc_size = _dtype_size(acc_dtype)
+    budget = int(hardware.vmem.capacity_bytes * vmem_budget_frac)
+    lane = hardware.mxu_tile[1]
+    align = lane if lane > 1 else max(hardware.vreg_tile[1], 1)
+
+    best: RecurrenceBlockChoice | None = None
+    smallest: RecurrenceBlockChoice | None = None
+    for bs in _candidates(max(min(s, max_block), align), align):
+        ws = token_elems * bs * esize * buffering
+        ws += state_elems * acc_size
+        ws += (quad_elems * bs * bs + lin_elems * bs) * acc_size
+        flops = (flops_per_step(bs) if callable(flops_per_step)
+                 else 2.0 * bs * bs * max(quad_elems, 1))
+        moved = token_elems * bs * esize
+        ai = flops / max(moved, 1)
+        util = min(bs, s) / float(bs)
+        cand = RecurrenceBlockChoice(bs, ws, ai, util)
+        if smallest is None or bs < smallest.bs:
+            smallest = cand
+        if ws > budget:
+            continue
+        if best is None or _recurrence_better(cand, best):
+            best = cand
+    if best is None:
+        # the carried state is chunk-independent, so on small memories (a
+        # GPU SM's shared memory) even the minimum chunk may exceed the
+        # budget fraction — degrade to the smallest aligned chunk (spilling
+        # is the backend's problem) instead of failing the derivation
+        best = smallest
+    assert best is not None, "no candidate chunk at all"
+    return best
+
+
+def _recurrence_better(a: RecurrenceBlockChoice,
+                       b: RecurrenceBlockChoice) -> bool:
+    if abs(a.arithmetic_intensity - b.arithmetic_intensity) > 1e-9:
+        return a.arithmetic_intensity > b.arithmetic_intensity
+    if a.vmem_bytes != b.vmem_bytes:
+        return a.vmem_bytes < b.vmem_bytes
+    return a.bs < b.bs
+
+
 def _stream_better(a: StreamBlockChoice, b: StreamBlockChoice) -> bool:
     if abs(a.arithmetic_intensity - b.arithmetic_intensity) > 1e-9:
         return a.arithmetic_intensity > b.arithmetic_intensity

@@ -25,7 +25,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 from repro.core.lifting import HardwareShape, TPU_V5E
-from repro.core.blocking import BlockChoice, StreamBlockChoice, _dtype_size
+from repro.core.blocking import (BlockChoice, RecurrenceBlockChoice,
+                                 StreamBlockChoice, _dtype_size)
 
 
 @dataclass(frozen=True)
@@ -72,23 +73,32 @@ def gemm_unblocked_traffic(m: int, k: int, n: int, dtype="bfloat16",
     return a + b + c
 
 
+def _report(flops: float, hbm_b: float, vmem_b: float, ici_b: float,
+            hardware: HardwareShape) -> EnergyReport:
+    """The shared E = E_dyn + P_static * T model: one implementation for
+    every op family so the modeled numbers in BENCH_schedule.json cannot
+    silently desynchronize."""
+    compute_s = flops / hardware.peak_flops
+    memory_s = hbm_b / hardware.hbm.bandwidth_Bps
+    coll_s = ici_b / hardware.ici_Bps if ici_b else 0.0
+    time_s = max(compute_s, memory_s, coll_s)
+    bound = {compute_s: "compute", memory_s: "memory",
+             coll_s: "collective"}[time_s]
+    e_dyn = (flops * hardware.flop_energy_pJ
+             + hbm_b * hardware.hbm.energy_pJ_per_byte
+             + vmem_b * hardware.vmem.energy_pJ_per_byte
+             + ici_b * hardware.ici_energy_pJ_per_byte) * 1e-12
+    energy = e_dyn + hardware.sa_power_W * time_s
+    return EnergyReport(time_s, energy, energy / max(time_s, 1e-30),
+                        flops, hbm_b, vmem_b, ici_b, bound)
+
+
 def gemm_energy(m: int, k: int, n: int, blocks: BlockChoice,
                 dtype="bfloat16", hardware: HardwareShape = TPU_V5E,
                 ici_bytes: float = 0.0) -> EnergyReport:
     flops = 2.0 * m * k * n
     hbm_b, vmem_b = gemm_traffic(m, k, n, blocks, dtype)
-    compute_s = flops / hardware.peak_flops
-    memory_s = hbm_b / hardware.hbm.bandwidth_Bps
-    coll_s = ici_bytes / hardware.ici_Bps if ici_bytes else 0.0
-    time_s = max(compute_s, memory_s, coll_s)
-    bound = {compute_s: "compute", memory_s: "memory", coll_s: "collective"}[time_s]
-    e_dyn = (flops * hardware.flop_energy_pJ
-             + hbm_b * hardware.hbm.energy_pJ_per_byte
-             + vmem_b * hardware.vmem.energy_pJ_per_byte
-             + ici_bytes * hardware.ici_energy_pJ_per_byte) * 1e-12
-    energy = e_dyn + hardware.sa_power_W * time_s
-    return EnergyReport(time_s, energy, energy / max(time_s, 1e-30),
-                        flops, hbm_b, vmem_b, ici_bytes, bound)
+    return _report(flops, hbm_b, vmem_b, ici_bytes, hardware)
 
 
 def attention_traffic(b: int, hq: int, sq: int, sk: int, hd: int,
@@ -127,16 +137,53 @@ def attention_energy(b: int, hq: int, sq: int, sk: int, hd: int,
     flops = frac * 2.0 * b * hq * sq * sk * (hd + vd)
     hbm_b, vmem_b = attention_traffic(b, hq, sq, sk, hd, vd, blocks,
                                       dtype, causal)
-    compute_s = flops / hardware.peak_flops
-    memory_s = hbm_b / hardware.hbm.bandwidth_Bps
-    time_s = max(compute_s, memory_s)
-    bound = "compute" if time_s == compute_s else "memory"
-    e_dyn = (flops * hardware.flop_energy_pJ
-             + hbm_b * hardware.hbm.energy_pJ_per_byte
-             + vmem_b * hardware.vmem.energy_pJ_per_byte) * 1e-12
-    energy = e_dyn + hardware.sa_power_W * time_s
-    return EnergyReport(time_s, energy, energy / max(time_s, 1e-30),
-                        flops, hbm_b, vmem_b, 0.0, bound)
+    return _report(flops, hbm_b, vmem_b, 0.0, hardware)
+
+
+def scan_traffic(b: int, s: int, h: int, p: int, n: int,
+                 blocks: RecurrenceBlockChoice, dtype="float32",
+                 acc_dtype="float32",
+                 materialized: bool = False) -> tuple[float, float]:
+    """HBM and VMEM traffic (bytes) for the SSD chunked scan.
+
+    The derived carried-state schedule streams every operand exactly once
+    (x, dA, B, C in; y out; the state crosses chunks in VMEM), so its HBM
+    bytes are O(S) — independent of the chunk.  With ``materialized`` the
+    model instead charges the hand-rolled jnp formulation, which round-trips
+    the (b, c, h, q, q) decay mask L and the per-chunk scores through HBM —
+    the O(S * q * h) traffic the derived kernel's VMEM residency eliminates
+    (the same story as flash attention vs materialized softmax).
+    """
+    esize = _dtype_size(dtype)
+    acc = _dtype_size(acc_dtype)
+    q = blocks.bs
+    hbm = b * s * (h * p + h + 2 * n) * esize          # x, dA, B, C in
+    hbm += b * s * h * p * acc                         # y out (f32)
+    hbm += 2.0 * b * h * p * n * acc                   # state in + out
+    if materialized:
+        # L (b,c,h,q,q) + scores (b,c,q,q) written then re-read, plus the
+        # per-chunk state tensors the lax.scan stages through HBM
+        hbm += 2.0 * b * s * q * (h + 1) * acc
+        hbm += 2.0 * b * (s / q) * h * p * n * acc
+    steps = b * (s / max(q, 1))
+    vmem = steps * (q * (h * p + h + 2 * n) * esize
+                    + (q * q * (h + 1) + h * p * n) * acc)
+    return float(hbm), float(vmem)
+
+
+def scan_energy(b: int, s: int, h: int, p: int, n: int,
+                blocks: RecurrenceBlockChoice, dtype="float32",
+                materialized: bool = False,
+                hardware: HardwareShape = TPU_V5E) -> EnergyReport:
+    """Modeled time/energy for the SSD chunked scan under the derived chunk:
+    the scan analogue of ``gemm_energy``/``attention_energy`` (same
+    E = E_dyn + P*T model).  Intra-chunk work is quadratic in the chunk
+    (the block-diagonal q x q part) plus the linear state updates."""
+    q = blocks.bs
+    flops = 2.0 * b * s * (q * (n + h * p) + 2.0 * h * p * n)
+    hbm_b, vmem_b = scan_traffic(b, s, h, p, n, blocks, dtype,
+                                 materialized=materialized)
+    return _report(flops, hbm_b, vmem_b, 0.0, hardware)
 
 
 def energy_vs_blocksize(n: int, block_sizes, dtype="bfloat16",

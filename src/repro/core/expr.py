@@ -296,62 +296,180 @@ def attention_expr(b: int, hkv: int, g: int, sq: int, sk: int, hd: int,
 
 
 @dataclass(frozen=True)
-class StreamingForm:
-    """The composite normal form of a *streaming* (online-softmax-style)
-    reduction: two single-ONF contractions chained through one shared axis.
+class StateSpec:
+    """The typed carried-state monoid of a recurrence: ``kind`` names a
+    registered init/step/flush body (``kernels.emit`` resolves it — the
+    nonlinearity is the kind's business exactly as a semiring name resolves
+    to a combine), ``carried`` declares each scratch array as (name, logical
+    axes), ``rescale`` marks that every step multiplies the carried state by
+    a data-dependent factor (online softmax's ``exp(m_prev - m_new)``,
+    SSD's chunk decay, RG-LRU's gate product), and ``exports`` makes the
+    final state a kernel output (the SSM/LRU decode caches)."""
+    kind: str
+    carried: Tuple[Tuple[str, Tuple[str, ...]], ...]
+    rescale: bool = True
+    exports: bool = False
 
-    ``scores`` produces the intermediate over its trailing output axis
-    (``stream_axis``); ``context`` folds that same axis as its sole
-    reduction.  The intermediate (the first leaf of ``context``) never
-    leaves VMEM: a streaming schedule lifts ``stream_axis`` onto the sigma
-    "block" resource, so each grid step computes one ``(bq, bk)`` block of
-    the intermediate and folds it into carried state (running max m,
-    denominator l, rescaled accumulator) — the nonlinear generalization of
-    the plain sigma accumulator.
+    def key(self) -> tuple:
+        return (self.kind, self.carried, self.rescale, self.exports)
+
+
+#: the online-softmax monoid: running max + denominator per output row, plus
+#: the rescaled accumulator — flash attention's carried state
+SOFTMAX_STATE = StateSpec("online_softmax",
+                          (("m", ("row",)), ("l", ("row",)),
+                           ("acc", ("row", "val"))))
+
+#: the SSD (Mamba-2) monoid: one inter-chunk state h per (head, head_dim,
+#: state_dim), stepped ``h' = chunk_decay * h + B'(decay . x)`` and exported
+#: as the decode cache
+SSD_STATE = StateSpec("ssd", (("h", ("h", "p", "n")),), exports=True)
+
+#: the RG-LRU gated monoid: one state per channel, ``h' = a h + b``
+GATED_STATE = StateSpec("gated", (("h", ("w",)),), exports=True)
+
+
+@dataclass(frozen=True)
+class RecurrentForm:
+    """The composite normal form of a *carried-state recurrence*: N
+    single-ONF stages welded through one streamed axis, plus the typed
+    monoid the stream carries (``StateSpec``).
+
+    Two shapes of weld, both instances of the same contract:
+
+    * **folding** (online softmax): the streamed axis is an *output* axis of
+      the first stage and the sole *reduction* of the last — each streamed
+      step computes one block of the intermediate and folds it into the
+      carried (m, l, acc) state.  The intermediate (the first leaf of the
+      next stage) never leaves VMEM.
+    * **chunked scan** (SSD, RG-LRU): the streamed axis is an *output* axis
+      of every stage — the sequence axis dimension-lifted ``S -> (chunks,
+      chunk_len)`` with the chunk index streamed.  Each step emits its own
+      output block and steps the carried state (the inter-chunk ``h``
+      recurrence); the state is optionally exported as a final output.
+
+    ``aux`` declares extra operands consumed only by the state monoid (the
+    SSD decay inputs ``dA``, the initial state) — they get derived
+    BlockSpecs like any stage leaf.  ``window``/``prefix_len`` are
+    streamed-axis masking metadata: the emitter derives its block-skip and
+    in-block masks from them, so windowed / prefix-LM attention schedules
+    are derived rather than falling back to the chunked jnp path.
 
     This is the artifact ``core.schedule.get_schedule`` accepts alongside a
     plain ``NormalForm``; its ``key()`` keys the same LRU cache.
     """
     name: str
-    scores: NormalForm
-    context: NormalForm
+    stages: Tuple[NormalForm, ...]
     stream_axis: str
+    state: StateSpec
+    aux: Tuple[LeafSpec, ...] = ()
+    window: int = 0
+    prefix_len: int = 0
 
     def __post_init__(self):
-        if self.stream_axis not in self.scores.out_axes:
+        if not self.stages:
+            raise ValueError("a RecurrentForm needs at least one stage")
+        ext: dict[str, int] = {}
+        for nf in self.stages:
+            for sym, e in nf.extent_map.items():
+                if ext.setdefault(sym, e) != e:
+                    raise ValueError(
+                        f"axis {sym!r} disagrees between stages "
+                        f"({ext[sym]} vs {e})")
+        if self.stream_axis not in self.stages[0].out_axes:
             raise ValueError(
                 f"stream axis {self.stream_axis!r} is not an output axis of "
-                f"the scores form {self.scores.out_axes}")
-        if self.context.reduce_axes != (self.stream_axis,):
-            raise ValueError(
-                f"the context form must reduce exactly the stream axis "
-                f"{self.stream_axis!r}, got {self.context.reduce_axes}")
-        s_ext, c_ext = self.scores.extent_map, self.context.extent_map
-        for sym in set(s_ext) & set(c_ext):
-            if s_ext[sym] != c_ext[sym]:
+                f"the first stage {self.stages[0].out_axes}")
+        if self.folding:
+            if len(self.stages) < 2:
+                raise ValueError("a folding recurrence chains >= 2 stages")
+            if self.stages[-1].reduce_axes != (self.stream_axis,):
                 raise ValueError(
-                    f"axis {sym!r} disagrees between scores ({s_ext[sym]}) "
-                    f"and context ({c_ext[sym]})")
-        inter = self.context.leaves[0]
-        if inter.shape() != self.scores.out_shape():
-            raise ValueError(
-                f"context's first leaf {inter.shape()} is not the scores "
-                f"output {self.scores.out_shape()} — not a streaming chain")
+                    f"the last stage must reduce exactly the stream axis "
+                    f"{self.stream_axis!r}, got {self.stages[-1].reduce_axes}")
+        else:
+            for nf in self.stages:
+                if self.stream_axis not in nf.out_axes:
+                    raise ValueError(
+                        f"chunked-scan stream axis {self.stream_axis!r} must "
+                        f"be an output axis of every stage, missing from "
+                        f"{nf.out_axes}")
+        for prev, nxt in zip(self.stages, self.stages[1:]):
+            carrier = nxt.leaves[0]
+            c_syms = tuple(t for t, _ in carrier.dims if isinstance(t, str))
+            missing = [s for s in prev.out_axes if s not in c_syms]
+            if missing:
+                raise ValueError(
+                    f"stage {nxt.name!r}'s carrier leaf {c_syms} does not "
+                    f"cover the previous output axes (missing {missing}) — "
+                    "not a welded chain")
+            c_ext = dict((t, e) for t, e in carrier.dims
+                         if isinstance(t, str))
+            for s in prev.out_axes:
+                if c_ext[s] != ext[s]:
+                    raise ValueError(
+                        f"carrier extent of {s!r} ({c_ext[s]}) disagrees "
+                        f"with the stage extent ({ext[s]})")
+        if (self.window or self.prefix_len) and self.window < 0:
+            raise ValueError(f"negative window {self.window}")
+
+    @property
+    def folding(self) -> bool:
+        """True for the online-softmax shape (stream axis folded by the last
+        stage); False for the chunked-scan shape (stream axis an output)."""
+        return self.stream_axis in self.stages[-1].reduce_axes
+
+    # compat accessors for the two-stage streaming (attention) instance
+    @property
+    def scores(self) -> NormalForm:
+        return self.stages[0]
+
+    @property
+    def context(self) -> NormalForm:
+        return self.stages[-1]
+
+    def extent_map(self) -> dict[str, int]:
+        ext: dict[str, int] = {}
+        for nf in self.stages:
+            ext.update(nf.extent_map)
+        for leaf in self.aux:
+            for t, e in leaf.dims:
+                if isinstance(t, str):
+                    ext.setdefault(t, e)
+        return ext
 
     def key(self) -> tuple:
-        """Cache key: both normal forms' canonical keys plus the stream
-        axis's structural position (its index among scores' output axes)."""
-        return ("streaming", self.scores.key(), self.context.key(),
-                self.scores.out_axes.index(self.stream_axis))
+        """Cache key: every stage's canonical key, the stream axis's
+        structural position, the state monoid and the masking metadata."""
+        return ("recurrent", tuple(nf.key() for nf in self.stages),
+                self.stages[0].out_axes.index(self.stream_axis),
+                self.state.key(),
+                tuple((l.array, l.dims, l.layout) for l in self.aux),
+                self.window, self.prefix_len)
+
+
+def StreamingForm(name: str, scores: NormalForm, context: NormalForm,
+                  stream_axis: str) -> RecurrentForm:
+    """.. deprecated:: the streaming (online-softmax) form is now the
+    two-stage folding instance of ``RecurrentForm``; this factory is kept
+    for one release."""
+    import warnings
+    warnings.warn("StreamingForm is deprecated; construct a RecurrentForm "
+                  "(or use attention_form)", DeprecationWarning, stacklevel=2)
+    return RecurrentForm(name, (scores, context), stream_axis, SOFTMAX_STATE)
 
 
 def attention_form(b: int, hkv: int, g: int, sq: int, sk: int, hd: int,
-                   vd: Optional[int] = None) -> StreamingForm:
-    """Normalize the attention expression pair into a ``StreamingForm``.
+                   vd: Optional[int] = None, *, window: int = 0,
+                   prefix_len: int = 0) -> RecurrentForm:
+    """Normalize the attention expression pair into the online-softmax
+    ``RecurrentForm`` instance.
 
     Axis names: ``(b, h, g, i, j)`` + the score contraction ``c`` (head_dim)
     and the context value axis ``d`` — ``j`` (key position) is the streamed
     axis, an *output* of scores and the *reduction* of context.
+    ``window``/``prefix_len`` ride as streamed-axis masking metadata so the
+    emitter derives the windowed / prefix-LM block-skip.
     """
     scores, context = attention_expr(b, hkv, g, sq, sk, hd, vd)
     scores_nf = normal_form(scores, name="attn_scores",
@@ -360,7 +478,71 @@ def attention_form(b: int, hkv: int, g: int, sq: int, sk: int, hd: int,
     context_nf = normal_form(context, name="attn_context",
                              out_axes=("b", "h", "g", "i", "d"),
                              reduce_axes=("j",))
-    return StreamingForm("flash_attention", scores_nf, context_nf, "j")
+    return RecurrentForm("flash_attention", (scores_nf, context_nf), "j",
+                         SOFTMAX_STATE, window=int(window),
+                         prefix_len=int(prefix_len))
+
+
+def ssd_form(b: int, nc: int, q: int, h: int, p: int, n: int) -> RecurrentForm:
+    """The Mamba-2 SSD chunked scan as a carried-state recurrence.
+
+    The sequence axis arrives already dimension-lifted ``S -> (c, q)``
+    (chunk index x chunk length — ``q`` comes from
+    ``solve_recurrence_blocks``, the same a-priori derivation as every other
+    block in the repo); the chunk index ``c`` is the streamed axis.  Two
+    welded stages, both ordinary ONFs over the *stored* (B, S, ...) model
+    buffers read through the chunked view (a pure reshape):
+
+    * ``ssd_scores``:   G[b,c,i,j] = sum_n C[b,c,i,n] * B[b,c,j,n]
+    * ``ssd_context``:  y[b,c,i,h,p] = sum_j P[b,c,h,i,j] * X[b,c,j,h,p]
+
+    The intermediate P is the segsum-decay-weighted score block ``G . L`` —
+    the SSD monoid's nonlinearity, exactly as softmax's ``exp`` sits between
+    attention's two stages; it broadcasts the head axis (L depends on the
+    per-head decay), which is why the carrier leaf carries ``h`` while the
+    scores output does not.  ``aux`` declares the decay input ``dA``
+    (b,c,j,h) and the initial state ``H0`` (b,h,p,n); the carried state
+    ``h`` (head, head_dim, state) steps ``h' = chunk_decay * h + B'(decay
+    . x)`` across chunks and is exported as the decode cache.
+    """
+    C = LeafSpec("C", (("b", b), ("c", nc), ("i", q), ("n", n)), "row")
+    B = LeafSpec("B", (("b", b), ("c", nc), ("j", q), ("n", n)), "row")
+    scores = NormalForm(
+        name="ssd_scores", out_axes=("b", "c", "i", "j"), reduce_axes=("n",),
+        extents=(("b", b), ("c", nc), ("i", q), ("j", q), ("n", n)),
+        leaves=(C, B), combine="mul", reduce_op="add")
+    P = LeafSpec("P", (("b", b), ("c", nc), ("h", h), ("i", q), ("j", q)),
+                 "row")
+    X = LeafSpec("X", (("b", b), ("c", nc), ("j", q), ("h", h), ("p", p)),
+                 "row")
+    context = NormalForm(
+        name="ssd_context", out_axes=("b", "c", "i", "h", "p"),
+        reduce_axes=("j",),
+        extents=(("b", b), ("c", nc), ("i", q), ("h", h), ("p", p),
+                 ("j", q)),
+        leaves=(P, X), combine="mul", reduce_op="add")
+    dA = LeafSpec("dA", (("b", b), ("c", nc), ("j", q), ("h", h)), "row")
+    H0 = LeafSpec("H0", (("b", b), ("h", h), ("p", p), ("n", n)), "row")
+    return RecurrentForm("ssd_scan", (scores, context), "c", SSD_STATE,
+                         aux=(dA, H0))
+
+
+def rglru_form(b: int, nc: int, q: int, w: int) -> RecurrentForm:
+    """The RG-LRU gated scan as the degenerate (N=1, contraction-free)
+    carried-state recurrence: one elementwise stage over the chunked
+    sequence view, streamed over the chunk index, with the per-channel
+    state ``h' = a h + b`` carried across chunks and exported.  The stage
+    pairs the gate log ``A`` (log-space for the stable in-chunk cumsum) and
+    the gated input ``Bv`` — the recurrence itself is the ``gated`` monoid's
+    body, exactly as softmax is not part of attention's ONF pair."""
+    A = LeafSpec("A", (("b", b), ("c", nc), ("i", q), ("w", w)), "row")
+    Bv = LeafSpec("Bv", (("b", b), ("c", nc), ("i", q), ("w", w)), "row")
+    stage = NormalForm(
+        name="rglru_stage", out_axes=("b", "c", "i", "w"), reduce_axes=(),
+        extents=(("b", b), ("c", nc), ("i", q), ("w", w)),
+        leaves=(A, Bv), combine="mul", reduce_op="add")
+    H0 = LeafSpec("H0", (("b", b), ("w", w)), "row")
+    return RecurrentForm("rglru_scan", (stage,), "c", GATED_STATE, aux=(H0,))
 
 
 # ---------------------------------------------------------------------------

@@ -20,7 +20,8 @@ from dataclasses import dataclass
 from functools import lru_cache
 from typing import Iterator, Optional
 
-from repro.core.lifting import HardwareShape, TPU_V5E, TPU_V5E_2POD, V100
+from repro.core.lifting import (GPU_A100, HardwareShape, TPU_V5E,
+                                TPU_V5E_2POD, V100)
 
 
 @dataclass(frozen=True)
@@ -76,6 +77,14 @@ TPU_V5E_2POD_ENTRY = register_hardware(HardwareEntry(
     "tpu_v5e_2pod", TPU_V5E_2POD, "pallas", "2-pod TPU v5e (compiled Pallas)"))
 V100_ENTRY = register_hardware(HardwareEntry(
     "v100", V100, "xla", "the paper's V100 — block solver target, XLA exec"))
+# The GPU (triton-Pallas) entry: derive_schedule / solve_blocks produce
+# CUDA-shaped tiles from the A100 table (shared memory for VMEM, warp for
+# the lane tile, tensor-core fragment for the MXU tile) under
+# REPRO_HARDWARE=gpu.  CI has no GPU, so this entry is exercised by
+# schedule-inspection tests only; execution on a real GPU compiles the
+# same derived schedules through the Pallas triton lowering.
+GPU_ENTRY = register_hardware(HardwareEntry(
+    "gpu", GPU_A100, "pallas", "A100 SMs — triton-Pallas, derived CUDA tiles"))
 # The CPU entry deliberately reuses the v5e hardware shape: interpret-mode
 # Pallas then executes the *identical* derived schedule a v5e would compile,
 # which is what makes CPU runs a bit-level validation of the TPU path.

@@ -92,6 +92,28 @@ TPU_V5E = HardwareShape(
 TPU_V5E_2POD = dataclasses.replace(
     TPU_V5E, mesh_axes=(("pod", 2), ("data", 16), ("model", 16)))
 
+# A GPU target for the triton-Pallas backend: VMEM's analogue is the SM's
+# shared memory (A100: 164 KiB usable per SM, of which we expose the 192 KiB
+# carveout's usable slice), the MXU tile's analogue is the tensor-core
+# m16n16 fragment, and the (sublane, lane) register tile's analogue is a
+# warp of 32 lanes.  The same a-priori solver, pointed at this table,
+# produces CUDA-shaped tiles (multiples of 16/32, far smaller than the v5e's
+# 512-class blocks) — see tests/test_recurrence.py.
+GPU_A100 = HardwareShape(
+    name="gpu_a100",
+    mesh_axes=(("sm", 108),),
+    vmem=MemoryLevel("smem", capacity_bytes=164 * 2**10, bandwidth_Bps=1.9e13,
+                     energy_pJ_per_byte=0.09),
+    hbm=MemoryLevel("hbm", capacity_bytes=40 * 2**30, bandwidth_Bps=1555e9,
+                    energy_pJ_per_byte=4.0),
+    ici_Bps=600e9,                # NVLink3 aggregate
+    ici_energy_pJ_per_byte=8.0,
+    peak_flops=312e12,            # bf16 tensor core
+    flop_energy_pJ=0.4,
+    mxu_tile=(16, 16),            # tensor-core m16n16k16 fragment
+    vreg_tile=(1, 32),            # one warp, coalesced 32-lane accesses
+)
+
 # the paper's V100 (Table 1) for cross-validation of the block solver
 V100 = HardwareShape(
     name="v100",

@@ -33,12 +33,14 @@ import threading
 import warnings
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Optional, Union
+from typing import Optional, Sequence, Union
 
 from repro.core import expr as expr_mod
 from repro.core import onf as onf_mod
-from repro.core.blocking import (BlockChoice, StreamBlockChoice, solve_blocks,
-                                 solve_stream_blocks, _dtype_size)
+from repro.core.blocking import (BlockChoice, RecurrenceBlockChoice,
+                                 StreamBlockChoice, solve_blocks,
+                                 solve_recurrence_blocks, solve_stream_blocks,
+                                 _dtype_size)
 from repro.core.lifting import HardwareShape
 from repro.core.mesh import is_mesh_resource
 from repro.core.moa import pi
@@ -284,34 +286,62 @@ def derive_schedule(o: "onf_mod.Onf", hardware: Optional[HardwareShape] = None,
 
 
 # ---------------------------------------------------------------------------
-# streaming schedules: carried-state (online-softmax) reductions
+# recurrent schedules: carried-state recurrences (online softmax, SSD scan,
+# gated scan) — the sigma accumulator generalized to a typed monoid
 # ---------------------------------------------------------------------------
 
 @dataclass(frozen=True)
-class StreamingSchedule:
-    """A derived schedule for a *streaming* reduction: two chained
-    contractions whose shared axis is lifted onto the sigma "block" resource
-    with nonlinear carried state instead of a plain accumulator.
+class StagePlan:
+    """One welded stage's in-block contraction, symbolically: its operand
+    blocks (including the VMEM-only carrier), output block and in-block
+    contracted axes.  ``einsum_plan`` is the derived block body."""
+    ins: tuple[OperandSpec, ...]
+    out: OperandSpec
+    contracted: tuple[str, ...]
+
+    def einsum_plan(self) -> tuple[str, tuple[tuple[int, ...], ...]]:
+        return Schedule("stage", (), self.ins, self.out, self.contracted,
+                        None).einsum_plan()
+
+
+@dataclass(frozen=True)
+class RecurrentSchedule:
+    """A derived schedule for a *carried-state recurrence*: N chained
+    contractions whose shared streamed axis is lifted onto the sigma
+    "block" resource with a typed monoid (``expr.StateSpec``) instead of a
+    plain accumulator.
 
     Derived — like ``Schedule`` — entirely from lifted ONFs: the grid, the
     operand BlockSpecs (including the GQA q-head -> kv-head index map, which
-    falls out of the kv operands' zero coefficient on the group axis) and
-    the streamed dimension all come from the affine Access coefficients.
-    The carried state the emitter materializes per grid cell is the running
-    max ``m`` and denominator ``l`` (one per output row) plus the rescaled
-    f32 accumulator (one output block) — these join the block solver's
-    working-set model (``solve_stream_blocks``), which is where ``(bq, bk)``
-    come from.
+    falls out of the kv operands' zero coefficient on the group axis; and
+    the SSD head broadcast, which falls out the same way) and the streamed
+    dimension all come from the affine Access coefficients.  The carried
+    state the emitter materializes per grid cell is declared by ``state``
+    (online softmax's (m, l, acc); SSD's inter-chunk (h, p, n); RG-LRU's
+    channel vector) — it joins the block solvers' working-set models
+    (``solve_stream_blocks`` / ``solve_recurrence_blocks``), which is where
+    the blocks come from.  ``state_outs`` are the exported-final-state
+    outputs (the scan decode caches); ``stages`` carry each weld's derived
+    in-block einsum plan; ``window``/``prefix_len`` are the streamed-axis
+    masking metadata the emitter derives block-skip from.
+
+    The two-stage online-softmax instance is the old ``StreamingSchedule``
+    (that name is a one-release alias of this class).
     """
     name: str
     grid: tuple[GridAxis, ...]
-    ins: tuple[OperandSpec, ...]         # first-contraction inputs + carrier
-    out: OperandSpec
-    inter: OperandSpec                   # the VMEM-only intermediate block
+    ins: tuple[OperandSpec, ...]         # stage inputs (carriers excluded)
+    out: OperandSpec                     # then the aux (state) operands
+    inters: tuple[OperandSpec, ...]      # the VMEM-only intermediate blocks
+    state_outs: tuple[OperandSpec, ...]  # exported final state (may be ())
+    stages: tuple[StagePlan, ...]
     contracted: tuple[str, ...]          # first contraction's in-block axes
-    stream_grid_dim: int                 # grid axis carrying (m, l, acc)
-    row_axis: str                        # out axis the state is per-row over
+    stream_grid_dim: int                 # grid axis carrying the state
+    row_axis: str                        # per-row state axis ("" if chunked)
     stream_axis: str                     # the streamed logical axis
+    state: "expr_mod.StateSpec" = None   # the carried monoid declaration
+    window: int = 0
+    prefix_len: int = 0
 
     @property
     def grid_extents(self) -> tuple[int, ...]:
@@ -322,13 +352,20 @@ class StreamingSchedule:
         return tuple(g.semantics for g in self.grid)
 
     @property
+    def inter(self) -> OperandSpec:
+        """The first VMEM-only intermediate (THE intermediate for the
+        two-stage streaming instance)."""
+        return self.inters[0]
+
+    @property
     def row_block(self) -> int:
         """bq — the block extent of the per-row state axis."""
         return self.out.block[self.out.axes.index(self.row_axis)]
 
     @property
     def stream_block(self) -> int:
-        """bk — the block extent of the streamed axis."""
+        """bk — the block extent of the streamed axis in the intermediate
+        (1 for chunked scans: the chunk index streams whole steps)."""
         return self.inter.block[self.inter.axes.index(self.stream_axis)]
 
     @property
@@ -346,78 +383,181 @@ class StreamingSchedule:
             self.out.block[self.out.axes.index(ax)]
             for ax in self.value_axes)
 
+    def state_blocks(self) -> tuple[tuple[int, ...], ...]:
+        """Per exported state array, its in-kernel scratch shape: the
+        state-out block with the leading grid-pinned unit dims dropped."""
+        out = []
+        for so in self.state_outs:
+            blk = tuple(b for b, d in zip(so.block, so.grid_dims)
+                        if d is None)
+            out.append(blk if len(blk) >= 2 else (1,) * (2 - len(blk)) + blk)
+        return tuple(out)
+
     def vmem_bytes(self, dtype, buffering: int = 2, acc_bytes: int = 4) -> int:
         """Modeled resident working set: double-buffered input blocks, the
-        output block, the carried state (acc, m, l) and the two in-block f32
-        intermediates (scores before and after exponentiation)."""
+        output block, the carried state and the in-block f32 intermediates
+        (each counted twice: pre- and post-nonlinearity)."""
         esize = _dtype_size(dtype)
         ws = sum(pi(opn.block) for opn in self.ins) * esize * buffering
         ws += pi(self.out.block) * esize
-        ws += (pi(self.out.block) + 2 * self.row_block) * acc_bytes
-        ws += 2 * pi(self.inter.block) * acc_bytes
+        if self.row_axis:
+            ws += (pi(self.out.block) + 2 * self.row_block) * acc_bytes
+        for so in self.state_outs:
+            ws += pi(so.block) * acc_bytes
+        for inter in self.inters:
+            ws += 2 * pi(inter.block) * acc_bytes
         return ws
+
+
+#: one-release alias: the streaming (online-softmax) schedule is the
+#: two-stage instance of the recurrence subsystem
+StreamingSchedule = RecurrentSchedule
+
+
+def _aux_operand(leaf: "expr_mod.LeafSpec", grid_pos: dict[str, int]
+                 ) -> OperandSpec:
+    """BlockSpec for a state-monoid operand (SSD's dA, the initial state):
+    a dense row-major view of its declared axes — grid-lifted axes get
+    block extent 1 driven by their grid position, the rest stay resident
+    whole."""
+    axes = tuple(t for t, _ in leaf.dims)
+    shape = tuple(e for _, e in leaf.dims)
+    block = tuple(1 if ax in grid_pos else e for ax, e in leaf.dims)
+    gdims = tuple(grid_pos.get(ax) for ax in axes)
+    return OperandSpec(leaf.array, axes, shape, block, gdims,
+                       (0,) * len(axes))
+
+
+def derive_recurrent_schedule(stages: Sequence["onf_mod.Onf"],
+                              stream_axis: str,
+                              state: "expr_mod.StateSpec",
+                              aux: Sequence["expr_mod.LeafSpec"] = (),
+                              window: int = 0, prefix_len: int = 0,
+                              hardware: Optional[HardwareShape] = None,
+                              dtype="float32") -> RecurrentSchedule:
+    """Derive a ``RecurrentSchedule`` from the lifted ONFs of a recurrence
+    chain (``expr.RecurrentForm`` lifted per axis).
+
+    Every nest must lift onto the *same* grid, with the streamed axis on
+    the innermost grid dimension with "arbitrary" semantics (the carried
+    state is initialized at step 0 and flushed/exported at the last step —
+    anything else would share state across cells mid-recurrence); each
+    stage's first leaf after the first stage is the VMEM-only carrier of
+    the previous output (extra broadcast axes allowed — SSD's per-head
+    decay weighting).  Each stage is derived by the ordinary
+    ``derive_schedule`` — this function only welds them and verifies the
+    weld.
+    """
+    scheds = [derive_schedule(o, None, dtype) for o in stages]
+    for s in scheds[1:]:
+        if s.grid != scheds[0].grid:
+            raise ValueError(
+                f"recurrence stages derived different grids: "
+                f"{scheds[0].grid} vs {s.grid}")
+    grid = scheds[0].grid
+    stream_dims = [i for i, g in enumerate(grid) if g.base == stream_axis]
+    if not stream_dims:
+        raise ValueError(f"stream axis {stream_axis!r} is not a grid axis — "
+                         "lift it onto 'block' first")
+    stream_dim = stream_dims[0]
+    if grid[stream_dim].semantics != "arbitrary":
+        raise ValueError(
+            f"streamed axis {stream_axis!r} derived 'parallel' semantics — "
+            "the carried state needs a sequential grid dimension")
+    if stream_dim != len(grid) - 1:
+        raise ValueError(
+            f"streamed axis {stream_axis!r} lifted onto grid dim "
+            f"{stream_dim}, but the carried state requires it innermost "
+            f"(dim {len(grid) - 1})")
+    grid_pos = {g.base: i for i, g in enumerate(grid)}
+
+    inters, plans = [], []
+    plans.append(StagePlan(scheds[0].ins, scheds[0].out,
+                           scheds[0].contracted))
+    for prev, nxt in zip(scheds, scheds[1:]):
+        inter, carrier = prev.out, nxt.ins[0]
+        shared = set(inter.axes)
+        if not shared <= set(carrier.axes):
+            raise ValueError(
+                f"stage output axes {inter.axes} are not covered by the "
+                f"carrier {carrier.axes} — the intermediate cannot stay in "
+                "VMEM")
+        for ax in inter.axes:
+            ia, ca = inter.axes.index(ax), carrier.axes.index(ax)
+            if (inter.shape[ia], inter.block[ia], inter.grid_dims[ia]) != \
+                    (carrier.shape[ca], carrier.block[ca],
+                     carrier.grid_dims[ca]):
+                raise ValueError(
+                    f"carrier axis {ax!r} block disagrees with the stage "
+                    f"output ({carrier} vs {inter}) — the intermediate "
+                    "cannot stay in VMEM")
+        inters.append(carrier)
+        plans.append(StagePlan((carrier,) + nxt.ins[1:], nxt.out,
+                               nxt.contracted))
+
+    last = scheds[-1]
+    folding = stream_axis not in last.out.axes
+    row_axis = ""
+    if folding:
+        if last.reduce_grid_dim != stream_dim:
+            raise ValueError(
+                f"the last stage's lifted reduction axis is not the stream "
+                f"axis {stream_axis!r}")
+        row_candidates = [ax for ax, blk in zip(last.out.axes,
+                                                last.out.block)
+                          if blk > 1 and ax in inters[0].axes]
+        if len(row_candidates) != 1:
+            raise ValueError(
+                f"expected exactly one blocked per-row state axis shared by "
+                f"the output and the intermediate, got {row_candidates}")
+        row_axis = row_candidates[0]
+
+    ins = tuple(plans[0].ins)
+    for plan in plans[1:]:
+        ins += plan.ins[1:]
+    ins += tuple(_aux_operand(l, grid_pos) for l in aux)
+
+    state_outs: list[OperandSpec] = []
+    if state.exports:
+        full_extent: dict[str, int] = {}
+        for spec in ins + tuple(p.out for p in plans):
+            for ax, e in zip(spec.axes, spec.shape):
+                full_extent.setdefault(ax, e)
+        par = tuple(g.base for g in grid if g.semantics == "parallel")
+        for name, axes in state.carried:
+            lead = tuple(ax for ax in par if ax not in axes)
+            all_axes = lead + tuple(axes)
+            shape = tuple(full_extent[ax] for ax in all_axes)
+            block = tuple(1 if ax in lead else full_extent[ax]
+                          for ax in all_axes)
+            gdims = tuple(grid_pos.get(ax) if ax in lead else None
+                          for ax in all_axes)
+            state_outs.append(OperandSpec(name, all_axes, shape, block,
+                                          gdims, (0,) * len(all_axes)))
+
+    sched = RecurrentSchedule(
+        stages[0].name, grid, ins, last.out, tuple(inters),
+        tuple(state_outs), tuple(plans), scheds[0].contracted, stream_dim,
+        row_axis, stream_axis, state, int(window), int(prefix_len))
+    if hardware is not None:
+        ws = sched.vmem_bytes(dtype)
+        if ws > hardware.vmem.capacity_bytes:
+            raise ValueError(
+                f"derived recurrent blocks need {ws} B VMEM, over "
+                f"{hardware.name}'s {hardware.vmem.capacity_bytes} B capacity")
+    return sched
 
 
 def derive_streaming_schedule(scores: "onf_mod.Onf", context: "onf_mod.Onf",
                               stream_axis: str,
                               hardware: Optional[HardwareShape] = None,
-                              dtype="float32") -> StreamingSchedule:
-    """Derive a ``StreamingSchedule`` from the two lifted ONFs of a
-    streaming chain (``expr.StreamingForm`` lifted per axis).
-
-    Both nests must lift onto the *same* grid, with the streamed axis on
-    the sigma "block" resource; the scores output block must coincide with
-    the context's intermediate operand block (it never leaves VMEM).  Each
-    half is derived by the ordinary ``derive_schedule`` — this function
-    only welds them and verifies the weld.
-    """
-    s_sched = derive_schedule(scores, None, dtype)
-    c_sched = derive_schedule(context, None, dtype)
-    if s_sched.grid != c_sched.grid:
-        raise ValueError(
-            f"streaming halves derived different grids: "
-            f"{s_sched.grid} vs {c_sched.grid}")
-    if c_sched.reduce_grid_dim is None:
-        raise ValueError("context nest has no lifted reduction axis — the "
-                         "stream axis must be lifted onto 'block'")
-    stream_dim = c_sched.reduce_grid_dim
-    if c_sched.grid[stream_dim].base != stream_axis:
-        raise ValueError(
-            f"context's lifted reduction axis {c_sched.grid[stream_dim].base!r}"
-            f" is not the stream axis {stream_axis!r}")
-    if stream_dim != len(c_sched.grid) - 1:
-        # the emitter's carried state (m, l, acc) is initialized at step 0
-        # and flushed at step nk-1 of the streamed axis — it must be the
-        # innermost (fastest-iterating) grid dimension or the state would be
-        # shared across other cells mid-reduction
-        raise ValueError(
-            f"streamed axis {stream_axis!r} lifted onto grid dim "
-            f"{stream_dim}, but the carried state requires it innermost "
-            f"(dim {len(c_sched.grid) - 1})")
-    inter, carrier = s_sched.out, c_sched.ins[0]
-    if (inter.axes, inter.shape, inter.block, inter.grid_dims) != \
-            (carrier.axes, carrier.shape, carrier.block, carrier.grid_dims):
-        raise ValueError(
-            f"scores output block {inter} does not match the context "
-            f"carrier {carrier} — the intermediate cannot stay in VMEM")
-    row_candidates = [ax for ax, blk in zip(c_sched.out.axes,
-                                            c_sched.out.block)
-                      if blk > 1 and ax in inter.axes]
-    if len(row_candidates) != 1:
-        raise ValueError(
-            f"expected exactly one blocked per-row state axis shared by the "
-            f"output and the intermediate, got {row_candidates}")
-    sched = StreamingSchedule(
-        scores.name, s_sched.grid, s_sched.ins + c_sched.ins[1:],
-        c_sched.out, inter, s_sched.contracted, stream_dim,
-        row_candidates[0], stream_axis)
-    if hardware is not None:
-        ws = sched.vmem_bytes(dtype)
-        if ws > hardware.vmem.capacity_bytes:
-            raise ValueError(
-                f"derived streaming blocks need {ws} B VMEM, over "
-                f"{hardware.name}'s {hardware.vmem.capacity_bytes} B capacity")
-    return sched
+                              dtype="float32") -> RecurrentSchedule:
+    """.. deprecated:: the two-stage online-softmax weld is now
+    ``derive_recurrent_schedule`` with the ``SOFTMAX_STATE`` monoid; this
+    wrapper is kept for one release."""
+    return derive_recurrent_schedule((scores, context), stream_axis,
+                                     expr_mod.SOFTMAX_STATE,
+                                     hardware=hardware, dtype=dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -562,61 +702,93 @@ def _build_bundle(nf: "expr_mod.NormalForm", dtype, hw_shape,
                           nf.out_shape(), nf.leaf_storage_shapes())
 
 
-def _build_streaming_bundle(sf: "expr_mod.StreamingForm", dtype, hw_shape,
+def _build_recurrent_bundle(rf: "expr_mod.RecurrentForm", dtype, hw_shape,
                             blocks) -> ScheduleBundle:
-    """Pad, lift and derive a ``StreamingSchedule`` for a streaming form.
+    """Pad, lift and derive a ``RecurrentSchedule`` for a recurrent form.
 
-    Lifting policy (the streaming extension of ``_build_bundle``): every
-    scores output axis before the last two lifts fully onto "proc" (batch,
-    kv-head and group cells are independent), the per-row axis (second-to-
-    last scores output) lifts blockwise onto "proc" with ``bq``, and the
-    streamed axis (last scores output == the context reduction) lifts
-    blockwise onto the sigma "block" resource with ``bk``.  Both halves are
-    lifted with the *same* pads and factors so they derive one grid.
-    ``(bq, bk)`` come from ``solve_stream_blocks`` — the carried state is in
-    its working-set model — unless explicitly pinned via ``blocks``.
+    Two lifting policies, chosen by the weld's shape:
+
+    * **folding** (online softmax): every scores output axis before the
+      last two lifts fully onto "proc" (batch, kv-head and group cells are
+      independent), the per-row axis lifts blockwise onto "proc" with
+      ``bq``, and the streamed axis (last scores output == the last stage's
+      reduction) lifts blockwise onto the sigma "block" resource with
+      ``bk``.  ``(bq, bk)`` come from ``solve_stream_blocks`` — the carried
+      state is in its working-set model — unless pinned via ``blocks``.
+    * **chunked scan** (SSD, RG-LRU): the form arrives already chunk-split
+      (``S -> (c, q)`` — ``q`` chosen by ``solve_recurrence_blocks`` in the
+      ops layer, where the leaf shapes are known); every last-stage output
+      axis before the streamed chunk axis lifts fully onto "proc", and the
+      chunk axis lifts *fully* onto "block" (inner extent 1 — each streamed
+      step is one whole chunk).
+
+    All stages are lifted with the same pads and factors so they derive one
+    grid; ``derive_recurrent_schedule`` welds and verifies them.
     """
-    s_nf, c_nf = sf.scores, sf.context
-    ext = dict(s_nf.extent_map)
-    ext.update(c_nf.extent_map)
-    row_sym = s_nf.out_axes[-2]
-    stream_sym = sf.stream_axis
-    if s_nf.out_axes[-1] != stream_sym:
-        raise ValueError(
-            f"streaming lift expects the stream axis {stream_sym!r} as the "
-            f"trailing scores output axis, got {s_nf.out_axes}")
-    sq, sk = ext[row_sym], ext[stream_sym]
-    hd = ext[s_nf.reduce_axes[0]] if s_nf.reduce_axes else 1
-    vd = ext[c_nf.out_axes[-1]]
-    if blocks is None:
-        _stats["solves"] += 1
-        blocks = default_stream_blocks(sq, sk, hd, vd, dtype, hw_shape)
-    elif not isinstance(blocks, StreamBlockChoice):
-        bq, bk = blocks
-        blocks = StreamBlockChoice(min(bq, sq), min(bk, sk), 0, 0.0, 1.0)
-    bq, bk = blocks.as_tuple()
-    pads = {row_sym: _pad(sq, bq), stream_sym: _pad(sk, bk)}
+    ext = rf.extent_map()
+    stream_sym = rf.stream_axis
 
-    def lift_half(nf: "expr_mod.NormalForm") -> "onf_mod.Onf":
+    if rf.folding:
+        s_nf, c_nf = rf.stages[0], rf.stages[-1]
+        row_sym = s_nf.out_axes[-2]
+        if s_nf.out_axes[-1] != stream_sym:
+            raise ValueError(
+                f"streaming lift expects the stream axis {stream_sym!r} as "
+                f"the trailing first-stage output axis, got {s_nf.out_axes}")
+        sq, sk = ext[row_sym], ext[stream_sym]
+        hd = ext[s_nf.reduce_axes[0]] if s_nf.reduce_axes else 1
+        vd = ext[c_nf.out_axes[-1]]
+        if blocks is None:
+            _stats["solves"] += 1
+            blocks = default_stream_blocks(sq, sk, hd, vd, dtype, hw_shape)
+        elif not isinstance(blocks, StreamBlockChoice):
+            bq, bk = blocks
+            blocks = StreamBlockChoice(min(bq, sq), min(bk, sk), 0, 0.0, 1.0)
+        bq, bk = blocks.as_tuple()
+        pads = {row_sym: _pad(sq, bq), stream_sym: _pad(sk, bk)}
+        lead = s_nf.out_axes[:-2]
+        factors = {row_sym: (pads[row_sym] // bq, "proc"),
+                   stream_sym: (pads[stream_sym] // bk, "block")}
+        order = lead + (row_sym, stream_sym)
+    else:
+        out_axes = rf.stages[-1].out_axes
+        lead = out_axes[:out_axes.index(stream_sym)]
+        pads = {}
+        factors = {stream_sym: (ext[stream_sym], "block")}
+        if blocks is None:
+            # the chunk IS the inner extent of the split sequence axes; the
+            # solver already ran in the ops layer that built the chunked
+            # form — record the choice for the bundle's consumers
+            blocks = RecurrenceBlockChoice(
+                ext.get(rf.stages[0].out_axes[-1], 1), 0, 0.0, 1.0)
+        elif not isinstance(blocks, RecurrenceBlockChoice):
+            blocks = RecurrenceBlockChoice(int(blocks[0]) if
+                                           isinstance(blocks, (tuple, list))
+                                           else int(blocks), 0, 0.0, 1.0)
+        order = lead + (stream_sym,)
+
+    def lift_stage(nf: "expr_mod.NormalForm") -> "onf_mod.Onf":
         lifted = nf.onf({s: p for s, p in pads.items()
                          if s in nf.extent_map})
-        for s in s_nf.out_axes[:-2]:
-            lifted = onf_mod.lift_loop(lifted, s, ext[s], "proc")
-        lifted = onf_mod.lift_loop(lifted, row_sym, pads[row_sym] // bq,
-                                   "proc")
-        lifted = onf_mod.lift_loop(lifted, stream_sym,
-                                   pads[stream_sym] // bk, "block")
+        for s in lead:
+            if s in nf.extent_map:
+                lifted = onf_mod.lift_loop(lifted, s, ext[s], "proc")
+        for s, (f, res) in factors.items():
+            if s in nf.extent_map:
+                lifted = onf_mod.lift_loop(lifted, s, f, res)
         return lifted
 
-    sched = derive_streaming_schedule(lift_half(s_nf), lift_half(c_nf),
-                                      stream_sym, hw_shape, dtype)
-    order = s_nf.out_axes[:-2] + (row_sym, stream_sym)
+    sched = derive_recurrent_schedule(
+        tuple(lift_stage(nf) for nf in rf.stages), stream_sym, rf.state,
+        rf.aux, rf.window, rf.prefix_len, hw_shape, dtype)
     logical = tuple(ext[s] for s in order)
     padded = tuple(pads.get(s, ext[s]) for s in order)
-    return ScheduleBundle(sf.name, sched, blocks, logical, padded,
-                          c_nf.out_shape(),
-                          s_nf.leaf_storage_shapes()
-                          + c_nf.leaf_storage_shapes()[1:])
+    in_shapes = rf.stages[0].leaf_storage_shapes()
+    for nf in rf.stages[1:]:
+        in_shapes += nf.leaf_storage_shapes()[1:]
+    in_shapes += tuple(l.storage_shape() for l in rf.aux)
+    return ScheduleBundle(rf.name, sched, blocks, logical, padded,
+                          rf.stages[-1].out_shape(), in_shapes)
 
 
 #: the deprecated string ops, as the expressions they always were
@@ -646,11 +818,13 @@ def get_schedule(op, shapes=None, dtype="float32", hardware=None,
     to the same loop nest (e.g. ``transpose(arr(..., "row"))`` and
     ``arr(..., "col")``) share one derivation.
 
-    A ``core.expr.StreamingForm`` (e.g. ``expr.attention_form``) is accepted
-    in place of an expression: the bundle then carries a
-    ``StreamingSchedule`` (grid + BlockSpecs for both chained contractions,
-    carried-state scratch, ``(bq, bk)`` from ``solve_stream_blocks``) on the
-    same cache, keyed on the composite streaming key.
+    A ``core.expr.RecurrentForm`` (e.g. ``expr.attention_form``,
+    ``expr.ssd_form``, ``expr.rglru_form``) is accepted in place of an
+    expression: the bundle then carries a ``RecurrentSchedule`` (grid +
+    BlockSpecs for all welded contractions, carried-state scratch and
+    exported-state outputs, blocks from ``solve_stream_blocks`` /
+    ``solve_recurrence_blocks``) on the same cache, keyed on the composite
+    recurrent key.
 
     .. deprecated:: the string signature ``get_schedule("gemm", (m, k, n),
        dtype, hardware)`` is kept for one release; it builds the equivalent
@@ -670,7 +844,7 @@ def get_schedule(op, shapes=None, dtype="float32", hardware=None,
         raise TypeError("shapes is only valid with the deprecated string op")
     if hardware is None:
         raise TypeError("get_schedule requires a hardware entry/shape")
-    if isinstance(op, (expr_mod.NormalForm, expr_mod.StreamingForm)):
+    if isinstance(op, (expr_mod.NormalForm, expr_mod.RecurrentForm)):
         nf = op
     else:
         nf = expr_mod.normal_form(op, name=getattr(op, "name", None) or "expr")
@@ -678,7 +852,8 @@ def get_schedule(op, shapes=None, dtype="float32", hardware=None,
     hw_name = getattr(hardware, "name", None) or hw_shape.name
     dtype_key = str(dtype)
     block_key = tuple(blocks) if isinstance(blocks, (list, tuple)) else blocks
-    if isinstance(block_key, (BlockChoice, StreamBlockChoice)):
+    if isinstance(block_key, (BlockChoice, StreamBlockChoice,
+                              RecurrenceBlockChoice)):
         block_key = block_key.as_tuple()
     key = (nf.key(), dtype_key, hw_name, block_key)
     with _lock:
@@ -688,8 +863,8 @@ def get_schedule(op, shapes=None, dtype="float32", hardware=None,
             _cache.move_to_end(key)
             return hit
         _stats["misses"] += 1
-        if isinstance(nf, expr_mod.StreamingForm):
-            bundle = _build_streaming_bundle(nf, dtype_key, hw_shape, blocks)
+        if isinstance(nf, expr_mod.RecurrentForm):
+            bundle = _build_recurrent_bundle(nf, dtype_key, hw_shape, blocks)
         else:
             bundle = _build_bundle(nf, dtype_key, hw_shape, blocks)
         _cache[key] = bundle

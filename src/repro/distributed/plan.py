@@ -165,12 +165,20 @@ def reset_plan_cache() -> None:
             _stats[k] = 0
 
 
-def _spec_entries(a: "onf_mod.Access", shard_axes: dict[str, str]
+def _spec_entries(a: "onf_mod.Access", shard_axes: dict[str, str],
+                  storage_rank: Optional[int] = None
                   ) -> tuple[Optional[str], ...]:
     """PartitionSpec entries recovered from lifted Access coefficients: the
     operand's storage dims are its base axes in descending-stride order (the
     BlockSpec recovery rule), and a dim is sharded iff its axis was
-    mesh-lifted."""
+    mesh-lifted.
+
+    ``storage_rank`` is the bound buffer's rank (``len(leaf.dims)``): a psi
+    view fixes leading dims to constants, which contribute NO coefficient —
+    detected *structurally* as storage rank exceeding the entry count, never
+    by ``Access.const`` truthiness (a view at index 0 has ``const == 0`` and
+    used to mis-place its entries onto the leading slab dim).  Fixed leading
+    dims are never sharded, so they pad with None entries."""
     strides: dict[str, int] = {}
     for idx, c in a.coeffs.items():
         if c == 0:
@@ -178,7 +186,10 @@ def _spec_entries(a: "onf_mod.Access", shard_axes: dict[str, str]
         b = _base(idx)
         strides[b] = min(strides.get(b, c), c)
     order = sorted(strides, key=lambda b: -strides[b])
-    return tuple(shard_axes.get(b) for b in order)
+    entries = tuple(shard_axes.get(b) for b in order)
+    if storage_rank is not None and storage_rank > len(entries):
+        entries = (None,) * (storage_rank - len(entries)) + entries
+    return entries
 
 
 def _local_normal_form(nf: "expr_mod.NormalForm",
@@ -236,8 +247,12 @@ def derive_plan(expr: Union["expr_mod.Expr", "expr_mod.NormalForm"],
         _stats["misses"] += 1
 
     if any(l.const for l in (lf.access(nf.extent_map) for lf in nf.leaves)):
-        raise ValueError("psi-view leaves are not supported in distributed "
-                         "plans yet — materialize the view first")
+        # non-zero slab offsets need BlockSpec-offset plumbing through the
+        # shard_map path; index-0 views (const == 0) ARE supported — their
+        # fixed leading dims are detected structurally by _spec_entries
+        raise ValueError("psi-view leaves with non-zero offsets are not "
+                         "supported in distributed plans yet — materialize "
+                         "the view first")
     ext = nf.extent_map
     applied, dropped, used_axes = [], [], set()
     for sym in sorted(shard):
@@ -262,7 +277,9 @@ def derive_plan(expr: Union["expr_mod.Expr", "expr_mod.NormalForm"],
         o = onf_mod.lift_loop(o, sym, mesh.axis_size(axis),
                               mesh_resource(axis))
 
-    in_entries = tuple(_spec_entries(a, shard_axes) for a in o.ins)
+    in_entries = tuple(
+        _spec_entries(a, shard_axes, storage_rank=len(leaf.dims))
+        for a, leaf in zip(o.ins, nf.leaves))
     out_entries = list(_spec_entries(o.out, shard_axes))
 
     # the collective schedule, from which axes were lifted where

@@ -189,47 +189,47 @@ def _shape_ok(shp: tuple[int, ...], opn) -> bool:
 
 
 # ---------------------------------------------------------------------------
-# streaming emitter: the sigma accumulator generalized to rescale-carrying
-# state (online softmax) — flash attention's init/step/flush, derived
+# recurrent emitter: the sigma accumulator generalized to a typed carried-
+# state monoid — online softmax, the SSD chunked scan and the RG-LRU gated
+# scan are registered *kinds* sharing one init/step/flush driver
 # ---------------------------------------------------------------------------
 
-def emit_streaming(ss: StreamingSchedule, *, scale: float = 1.0,
-                   causal: bool = False, logical_stream: Optional[int] = None,
-                   out_dtype=None, interpret: bool = False) -> Callable:
-    """Build the ``pl.pallas_call`` a ``StreamingSchedule`` describes.
+def _cell_shape(spec) -> tuple[int, ...]:
+    """An operand's per-grid-cell block: its block extents on the dims no
+    grid axis drives (the derived analogue of squeezing the lifted dims)."""
+    return tuple(b for b, d in zip(spec.block, spec.grid_dims) if d is None)
 
-    The in-block body generalizes ``emit_pallas``'s sigma init/step/flush
-    contract: instead of ``acc += block``, each step of the streamed grid
-    axis computes one block of the first contraction (q·kᵀ), folds it into
-    the carried softmax state — running max ``m``, denominator ``l``, and
-    the accumulator *rescaled* by ``exp(m_prev - m_new)`` — and adds the
-    second contraction (p·v); the flush divides by ``l``.  Masking is
-    positional: ``causal`` keeps keys at or before the query's absolute
-    position (and skips fully-masked streamed blocks), and
-    ``logical_stream`` masks keys the pad added (the ``kpos < sk`` guard).
 
-    Grid, BlockSpecs, dimension semantics, scratch shapes and both in-block
-    einsums all come from the schedule — nothing here is hand-written.
+def _softmax_kind(rs: StreamingSchedule, *, scale, causal, logical_stream,
+                  out_dtype):
+    """The online-softmax monoid: running max ``m`` + denominator ``l`` per
+    output row and the accumulator *rescaled* by ``exp(m_prev - m_new)``
+    each streamed step; the flush divides by ``l``.  Masking is positional
+    and derived from the schedule's streamed-axis metadata: ``causal``
+    keeps keys at or before the query's absolute position, ``window`` drops
+    keys more than ``window`` behind it, ``prefix_len`` re-admits the
+    bidirectional prefix block (PaLI prefix-LM), and ``logical_stream``
+    masks keys the pad added — each with its block-skip, so fully-masked
+    streamed blocks never run.
     """
-    out_dtype = jnp.dtype(out_dtype or jnp.float32)
-    ni = len(ss.ins)
-    bq, bk = ss.row_block, ss.stream_block
-    stream_dim = ss.stream_grid_dim
-    nk = ss.grid[stream_dim].extent
-    row_dim = ss.out.grid_dims[ss.out.axes.index(ss.row_axis)]
+    ni = len(rs.ins)
+    bq, bk = rs.row_block, rs.stream_block
+    stream_dim = rs.stream_grid_dim
+    nk = rs.grid[stream_dim].extent
+    row_dim = rs.out.grid_dims[rs.out.axes.index(rs.row_axis)]
     sk_pad = nk * bk
     masked_pad = logical_stream is not None and logical_stream < sk_pad
+    window, prefix_len = rs.window, rs.prefix_len
+    if (window or prefix_len) and not causal:
+        raise ValueError(
+            f"window={window} / prefix_len={prefix_len} require causal "
+            "attention (the honor-or-raise contract of _chunk_mask)")
 
     # both in-block contractions as derived einsum plans (the axis structure
     # of the blocks, not a hand-chosen spec)
-    scores_plan, scores_keep = Schedule(
-        ss.name, ss.grid, ss.ins[:2], ss.inter, ss.contracted, None,
-    ).einsum_plan()
-    ctx_plan, ctx_keep = Schedule(
-        ss.name, ss.grid, (ss.inter,) + ss.ins[2:], ss.out,
-        (ss.stream_axis,), None,
-    ).einsum_plan()
-    acc_block = ss.acc_block
+    scores_plan, scores_keep = rs.stages[0].einsum_plan()
+    ctx_plan, ctx_keep = rs.stages[1].einsum_plan()
+    acc_block = rs.acc_block
 
     def body(*refs):
         o_ref = refs[ni]
@@ -244,10 +244,22 @@ def emit_streaming(ss: StreamingSchedule, *, scale: float = 1.0,
             acc_ref[...] = jnp.zeros_like(acc_ref)
 
         # skip streamed blocks that are entirely masked: strictly above the
-        # causal diagonal, or entirely inside the key padding
+        # causal diagonal, or entirely behind the local window.  A block
+        # touching the bidirectional prefix region (some row AND some key
+        # below prefix_len) is re-admitted against BOTH skips — prefix
+        # blocks sit above the diagonal too.  Key padding always skips.
+        admit = (jnp.logical_and(ki * bk < prefix_len, qi * bq < prefix_len)
+                 if prefix_len else None)
         run = True
         if causal:
             run = ki * bk <= qi * bq + bq - 1
+            if admit is not None:
+                run = jnp.logical_or(run, admit)
+        if window:
+            below = ki * bk + bk - 1 > qi * bq - window
+            if admit is not None:
+                below = jnp.logical_or(below, admit)
+            run = jnp.logical_and(run, below)
         if masked_pad:
             run = jnp.logical_and(run, ki * bk < logical_stream)
 
@@ -255,7 +267,7 @@ def emit_streaming(ss: StreamingSchedule, *, scale: float = 1.0,
         def _step():
             q, k = (refs[i][...].reshape(
                 tuple(opn.block[d] for d in keep))
-                for i, (opn, keep) in enumerate(zip(ss.ins[:2], scores_keep)))
+                for i, (opn, keep) in enumerate(zip(rs.ins[:2], scores_keep)))
             s = jnp.einsum(scores_plan, q, k,
                            preferred_element_type=jnp.float32) * scale
             need_mask = causal or masked_pad
@@ -267,6 +279,12 @@ def emit_streaming(ss: StreamingSchedule, *, scale: float = 1.0,
                 mask = jnp.ones((bq, bk), bool)
                 if causal:
                     mask = kpos <= qpos
+                    if window:
+                        mask = jnp.logical_and(mask, kpos > qpos - window)
+                    if prefix_len:
+                        mask = jnp.logical_or(
+                            mask, jnp.logical_and(qpos < prefix_len,
+                                                  kpos < prefix_len))
                 if masked_pad:
                     mask = jnp.logical_and(mask, kpos < logical_stream)
                 s = jnp.where(mask, s, NEG_INF)
@@ -277,7 +295,7 @@ def emit_streaming(ss: StreamingSchedule, *, scale: float = 1.0,
             l_ref[:, 0] = l_ref[:, 0] * corr + p.sum(axis=-1)
             m_ref[:, 0] = m_new
             v = refs[2][...].reshape(
-                tuple(ss.ins[2].block[d] for d in ctx_keep[1]))
+                tuple(rs.ins[2].block[d] for d in ctx_keep[1]))
             acc_ref[...] = (
                 acc_ref[...] * corr[:, None]
                 + jnp.einsum(ctx_plan, p.astype(v.dtype), v,
@@ -288,60 +306,237 @@ def emit_streaming(ss: StreamingSchedule, *, scale: float = 1.0,
         def _flush():
             o_ref[...] = (acc_ref[...] /
                           jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
-                          ).astype(out_dtype).reshape(ss.out.block)
+                          ).astype(out_dtype).reshape(rs.out.block)
 
+    scratch = [
+        pltpu.VMEM((bq, 1), jnp.float32),            # running max m
+        pltpu.VMEM((bq, 1), jnp.float32),            # denominator l
+        pltpu.VMEM(acc_block, jnp.float32),          # rescaled acc
+    ]
+    return body, scratch
+
+
+def _ssd_kind(rs: StreamingSchedule, *, scale, causal, logical_stream,
+              out_dtype):
+    """The SSD (Mamba-2) monoid: one inter-chunk state ``h`` (head,
+    head_dim, state_dim) per grid cell, stepped ``h' = chunk_decay * h +
+    B'(decay . x)`` and exported at the last chunk.  Per streamed step the
+    two derived stage contractions run on the diagonal chunk — G = C.B'
+    and y = P.x — welded through the segsum decay weighting ``P = G . L``
+    (the monoid's nonlinearity, exactly where softmax's exp sits), plus the
+    monoid's state readout ``C.h`` and state update.  Operand order:
+    (C, B, X, dA, H0); outputs (y, h_final)."""
+    ni = len(rs.ins)
+    stream_dim = rs.stream_grid_dim
+    nk = rs.grid[stream_dim].extent
+    scores_plan, _ = rs.stages[0].einsum_plan()         # "in,jn->ij"
+    ctx_plan, _ = rs.stages[1].einsum_plan()            # "hij,jhp->ihp"
+    c_cell = _cell_shape(rs.ins[0])                     # (q, n)
+    b_cell = _cell_shape(rs.ins[1])                     # (q, n)
+    x_cell = _cell_shape(rs.ins[2])                     # (q, h, p)
+    da_cell = _cell_shape(rs.ins[3])                    # (q, h)
+    h_cell = _cell_shape(rs.ins[4])                     # (h, p, n)
+    q = da_cell[0]
+
+    def body(*refs):
+        y_ref, hf_ref = refs[ni], refs[ni + 1]
+        h_ref = refs[ni + 2]
+        ki = pl.program_id(stream_dim)
+
+        @pl.when(ki == 0)
+        def _init():
+            h_ref[...] = refs[4][...].reshape(h_cell)
+
+        Cb = refs[0][...].reshape(c_cell).astype(jnp.float32)
+        Bb = refs[1][...].reshape(b_cell).astype(jnp.float32)
+        Xb = refs[2][...].reshape(x_cell).astype(jnp.float32)
+        dAb = refs[3][...].reshape(da_cell).astype(jnp.float32)
+        h_prev = h_ref[...]
+        csh = jnp.transpose(jnp.cumsum(dAb, axis=0))        # (h, i)
+        seg = csh[:, :, None] - csh[:, None, :]             # (h, i, j)
+        tril = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
+            jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+        L = jnp.exp(jnp.where(tril[None], seg, NEG_INF))    # (h, i, j)
+        G = jnp.einsum(scores_plan, Cb, Bb,
+                       preferred_element_type=jnp.float32)  # (i, j)
+        P = G[None] * L                                     # (h, i, j)
+        y = jnp.einsum(ctx_plan, P, Xb,
+                       preferred_element_type=jnp.float32)  # (i, h, p)
+        in_decay = jnp.exp(csh)                             # (h, i)
+        t_off = jnp.einsum("in,hpn->ihp", Cb, h_prev,
+                           preferred_element_type=jnp.float32)
+        y = y + t_off * jnp.transpose(in_decay)[:, :, None]
+        y_ref[...] = y.astype(out_dtype).reshape(rs.out.block)
+        total = csh[:, -1]                                  # (h,)
+        decay_states = jnp.exp(total[:, None] - csh)        # (h, j)
+        Xd = Xb * jnp.transpose(decay_states)[:, :, None]   # (j, h, p)
+        S = jnp.einsum("jn,jhp->hpn", Bb, Xd,
+                       preferred_element_type=jnp.float32)
+        h_ref[...] = jnp.exp(total)[:, None, None] * h_prev + S
+
+        @pl.when(ki == nk - 1)
+        def _flush():
+            hf_ref[...] = h_ref[...].reshape(rs.state_outs[0].block)
+
+    scratch = [pltpu.VMEM(h_cell, jnp.float32)]
+    return body, scratch
+
+
+def _gated_kind(rs: StreamingSchedule, *, scale, causal, logical_stream,
+                out_dtype):
+    """The gated (RG-LRU) monoid: one state per channel, stepped ``h' = a h
+    + b`` — the contraction-free recurrence.  Per streamed chunk the body
+    exponentiates the gate log, scans the chunk with the associative gated
+    combine, re-bases onto the carried state via the chunk's gate cumprod,
+    and exports the final state.  Operand order: (log_a, b, H0); outputs
+    (h_seq, h_final)."""
+    ni = len(rs.ins)
+    stream_dim = rs.stream_grid_dim
+    nk = rs.grid[stream_dim].extent
+    a_cell = _cell_shape(rs.ins[0])                     # (q, w)
+    h_cell = rs.state_blocks()[0]                       # (1, w)
+
+    def body(*refs):
+        y_ref, hf_ref = refs[ni], refs[ni + 1]
+        h_ref = refs[ni + 2]
+        ki = pl.program_id(stream_dim)
+
+        @pl.when(ki == 0)
+        def _init():
+            h_ref[...] = refs[2][...].reshape(h_cell)
+
+        a = jnp.exp(refs[0][...].reshape(a_cell).astype(jnp.float32))
+        b = refs[1][...].reshape(a_cell).astype(jnp.float32)
+
+        def comb(x, y):
+            return (x[0] * y[0], y[0] * x[1] + y[1])
+
+        aa, hh = jax.lax.associative_scan(comb, (a, b), axis=0)
+        hh = hh + aa * h_ref[...]                       # re-base on carry
+        y_ref[...] = hh.astype(out_dtype).reshape(rs.out.block)
+        h_ref[...] = hh[-1:]
+
+        @pl.when(ki == nk - 1)
+        def _flush():
+            hf_ref[...] = h_ref[...].reshape(rs.state_outs[0].block)
+
+    scratch = [pltpu.VMEM(h_cell, jnp.float32)]
+    return body, scratch
+
+
+#: the carried-state monoid registry: ``expr.StateSpec.kind`` -> body
+#: builder.  New recurrences (flash backward, windowed streams) register
+#: here instead of growing their own emitters.
+RECURRENCE_KINDS: dict[str, Callable] = {
+    "online_softmax": _softmax_kind,
+    "ssd": _ssd_kind,
+    "gated": _gated_kind,
+}
+
+
+def register_recurrence_kind(kind: str, builder: Callable) -> None:
+    RECURRENCE_KINDS[kind] = builder
+
+
+def emit_recurrent(rs: StreamingSchedule, *, scale: float = 1.0,
+                   causal: bool = False, logical_stream: Optional[int] = None,
+                   out_dtype=None, interpret: bool = False) -> Callable:
+    """Build the ``pl.pallas_call`` a ``RecurrentSchedule`` describes.
+
+    The driver generalizes ``emit_pallas``'s sigma init/step/flush contract
+    to a typed carried-state monoid: the state scratch initializes at step 0
+    of the streamed grid axis, every step folds one streamed block through
+    the registered kind's body (``RECURRENCE_KINDS``, keyed by the form's
+    ``StateSpec.kind``), and the last step flushes — dividing out the
+    softmax denominator, or exporting the final scan state as an extra
+    kernel output (``state_outs``).
+
+    Grid, BlockSpecs, dimension semantics, scratch shapes, masking metadata
+    and every stage's in-block einsum all come from the schedule — nothing
+    here is hand-written.
+    """
+    out_dtype = jnp.dtype(out_dtype or jnp.float32)
+    ni = len(rs.ins)
+    builder = RECURRENCE_KINDS.get(rs.state.kind if rs.state else
+                                   "online_softmax")
+    if builder is None:
+        raise ValueError(f"unregistered recurrence kind "
+                         f"{rs.state.kind!r}; known: "
+                         f"{sorted(RECURRENCE_KINDS)}")
+    body, scratch = builder(rs, scale=scale, causal=causal,
+                            logical_stream=logical_stream,
+                            out_dtype=out_dtype)
+    outs = (rs.out,) + rs.state_outs
+    out_dtypes = (out_dtype,) + (jnp.float32,) * len(rs.state_outs)
     call = pl.pallas_call(
         body,
-        grid=ss.grid_extents,
+        grid=rs.grid_extents,
         in_specs=[pl.BlockSpec(opn.block, _index_map(opn.grid_dims,
                                                      opn.offsets))
-                  for opn in ss.ins],
-        out_specs=pl.BlockSpec(ss.out.block, _index_map(ss.out.grid_dims,
-                                                        ss.out.offsets)),
-        out_shape=jax.ShapeDtypeStruct(ss.out.shape, out_dtype),
-        scratch_shapes=[
-            pltpu.VMEM((bq, 1), jnp.float32),            # running max m
-            pltpu.VMEM((bq, 1), jnp.float32),            # denominator l
-            pltpu.VMEM(acc_block, jnp.float32),          # rescaled acc
-        ],
+                  for opn in rs.ins],
+        out_specs=[pl.BlockSpec(o.block, _index_map(o.grid_dims, o.offsets))
+                   for o in outs],
+        out_shape=[jax.ShapeDtypeStruct(o.shape, dt)
+                   for o, dt in zip(outs, out_dtypes)],
+        scratch_shapes=scratch,
         compiler_params=compiler_params(
-            dimension_semantics=ss.dimension_semantics),
+            dimension_semantics=rs.dimension_semantics),
         interpret=interpret,
     )
 
     def fn(*arrays):
         if len(arrays) != ni:
-            raise ValueError(f"{ss.name}: expected {ni} operands")
-        for arr, opn in zip(arrays, ss.ins):
+            raise ValueError(f"{rs.name}: expected {ni} operands")
+        for arr, opn in zip(arrays, rs.ins):
             if tuple(arr.shape) != opn.shape:
                 raise ValueError(
-                    f"{ss.name}: operand {opn.array} has shape {arr.shape}, "
+                    f"{rs.name}: operand {opn.array} has shape {arr.shape}, "
                     f"schedule derived {opn.shape} — pad first")
-        return call(*arrays)
+        out = call(*arrays)
+        return out[0] if len(outs) == 1 else tuple(out)
 
     return fn
 
 
-def emit_streaming_bundle(bundle: ScheduleBundle, *, scale: float,
-                          causal: bool, out_dtype=None,
+def emit_streaming(ss: StreamingSchedule, *, scale: float = 1.0,
+                   causal: bool = False, logical_stream: Optional[int] = None,
+                   out_dtype=None, interpret: bool = False) -> Callable:
+    """.. deprecated:: the streaming (online-softmax) emitter is now the
+    ``online_softmax`` kind of ``emit_recurrent``; kept for one release."""
+    return emit_recurrent(ss, scale=scale, causal=causal,
+                          logical_stream=logical_stream, out_dtype=out_dtype,
+                          interpret=interpret)
+
+
+def emit_recurrent_bundle(bundle: ScheduleBundle, *, scale: float = 1.0,
+                          causal: bool = False, out_dtype=None,
                           interpret: bool = False) -> Callable:
-    """Executable for a cached streaming derivation over *logical* operands:
-    pad the sequence axes to the derived block multiples (padded keys are
-    inert — the emitter's ``kpos < sk`` guard masks them), run the emitted
-    kernel, slice the logical result back out."""
-    ss = bundle.schedule
+    """Executable for a cached recurrent derivation over *logical* operands:
+    pad the streamed axes to the derived block multiples (padded keys/tokens
+    are inert — masked by the ``kpos < sk`` guard, or zero-padded into the
+    monoid's identity step), run the emitted kernel, slice the logical
+    result back out.  Exported state outputs pass through unsliced."""
+    rs = bundle.schedule
     logical_stream = bundle.shapes[-1]
-    kern = emit_streaming(ss, scale=scale, causal=causal,
+    kern = emit_recurrent(rs, scale=scale, causal=causal,
                           logical_stream=logical_stream,
                           out_dtype=out_dtype, interpret=interpret)
     out_slices = tuple(slice(0, d) for d in bundle.out_shape)
+    exports = bool(rs.state_outs)
 
     def call(*arrays):
         padded = [_pad_to_shape(x, spec.shape)
-                  for x, spec in zip(arrays, ss.ins)]
-        return kern(*padded)[out_slices]
+                  for x, spec in zip(arrays, rs.ins)]
+        out = kern(*padded)
+        if exports:
+            return (out[0][out_slices],) + tuple(out[1:])
+        return out[out_slices]
 
     return call
+
+
+#: one-release alias of :func:`emit_recurrent_bundle`
+emit_streaming_bundle = emit_recurrent_bundle
 
 
 # ---------------------------------------------------------------------------

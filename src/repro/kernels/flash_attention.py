@@ -37,24 +37,31 @@ from repro.kernels.emit import NEG_INF, emit_streaming_bundle  # noqa: F401
 
 def attention_bundle(b: int, hkv: int, g: int, sq: int, sk: int, hd: int,
                      vd: Optional[int] = None, *, dtype="float32",
-                     hardware=None, blocks=None) -> "_sched.ScheduleBundle":
-    """The cached streaming-schedule derivation for one attention shape."""
+                     hardware=None, blocks=None, window: int = 0,
+                     prefix_len: int = 0) -> "_sched.ScheduleBundle":
+    """The cached streaming-schedule derivation for one attention shape.
+    ``window``/``prefix_len`` ride the recurrent form as streamed-axis
+    masking metadata (the emitter derives block-skip from them)."""
     hw = hardware or current_hardware()
-    return _sched.get_schedule(E.attention_form(b, hkv, g, sq, sk, hd, vd),
+    return _sched.get_schedule(E.attention_form(b, hkv, g, sq, sk, hd, vd,
+                                                window=window,
+                                                prefix_len=prefix_len),
                                dtype=dtype, hardware=hw, blocks=blocks)
 
 
 @functools.lru_cache(maxsize=256)
 def _executor(b: int, hkv: int, g: int, sq: int, sk: int, hd: int, vd: int,
               dtype_s: str, out_dtype_s: str, hw_name: str, interpret: bool,
-              causal: bool, scale: float, blocks):
+              causal: bool, scale: float, blocks, window: int = 0,
+              prefix_len: int = 0):
     """Jitted pad/kernel/slice callable over the *stored* model layouts
     ``q (b, sq, hkv, g, hd); k (b, sk, hkv, hd); v (b, sk, hkv, vd)`` —
     the derived BlockSpecs walk these buffers in place (no relayout) —
     memoized per (shape, dtype, hardware, masking, blocks).  Returns the
     derived output layout ``(b, hkv, g, sq, vd)``."""
     bundle = attention_bundle(b, hkv, g, sq, sk, hd, vd, dtype=dtype_s,
-                              hardware=get_entry(hw_name), blocks=blocks)
+                              hardware=get_entry(hw_name), blocks=blocks,
+                              window=window, prefix_len=prefix_len)
     return jax.jit(emit_streaming_bundle(bundle, scale=scale, causal=causal,
                                          out_dtype=out_dtype_s,
                                          interpret=interpret))

@@ -55,6 +55,16 @@ def _resolve(hardware, interpret) -> tuple[HardwareEntry, bool]:
     return hw, (hw.interpret if interpret is None else interpret)
 
 
+def _use_kernel(hw: HardwareEntry, interp: bool, interpret) -> bool:
+    """The one dispatch policy for the streaming/recurrent entries
+    (attention, scan_ssd, gated_scan): the derived kernel on compiled-Pallas
+    entries, on "interpret" entries (the CPU validation path), or by
+    explicit request; "xla" entries use the jnp oracle."""
+    return (hw.backend == "pallas"
+            or (hw.backend == "interpret" and interp)
+            or bool(interpret))
+
+
 # ---------------------------------------------------------------------------
 # the generic executor: expression -> cached, jitted pad/kernel/slice callable
 # ---------------------------------------------------------------------------
@@ -497,43 +507,50 @@ def head_matmul(x: jax.Array, w: jax.Array, *, transpose_b: bool = False,
 # attention: the derived streaming schedule behind an ops-level wrapper
 # ---------------------------------------------------------------------------
 
-def _oracle_attention(q, k, v, scale, causal):
+def _oracle_attention(q, k, v, scale, causal, window=0, prefix_len=0):
     """The jnp online-softmax oracle on the grouped model layout (also the
     recompute body of the kernel path's backward pass)."""
     from repro.models.chunked_attention import chunked_attention
-    return chunked_attention(q, k, v, scale=scale, causal=causal)
+    return chunked_attention(q, k, v, scale=scale, causal=causal,
+                             window=window, prefix_len=prefix_len)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
-def _flash_grouped(q, k, v, scale, causal, hw_name, interpret, blocks):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def _flash_grouped(q, k, v, scale, causal, window, prefix_len, hw_name,
+                   interpret, blocks):
     """Forward: the derived streaming Pallas kernel over the grouped layout
     ``q (B, Sq, KV, G, hd); k/v (B, Sk, KV, hd)`` -> ``(B, Sq, KV*G, hd)``.
     The schedule was derived on exactly these *stored* layouts (the logical
     grouped views are transposed leaves, pure index rewrites), so operands
     feed the kernel with no relayout copy; padding to the derived blocks and
     the slice back happen inside the cached executor
-    (``kernels.flash_attention``)."""
+    (``kernels.flash_attention``).  ``window``/``prefix_len`` ride the
+    recurrent form as streamed-axis masking metadata — the kernel derives
+    its block-skip from them instead of falling back to the jnp path."""
     from repro.kernels import flash_attention as fa
     b, sq, kv, g, hd = q.shape
     sk, vd = k.shape[1], v.shape[-1]
     fn = fa._executor(b, kv, g, sq, sk, hd, vd, str(jnp.dtype(q.dtype)),
                       str(jnp.dtype(q.dtype)), hw_name, interpret, causal,
-                      scale, blocks)
+                      scale, blocks, window, prefix_len)
     out = fn(q, k, v)                               # (b, kv, g, sq, vd)
     return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, kv * g, vd)
 
 
-def _flash_grouped_fwd(q, k, v, scale, causal, hw_name, interpret, blocks):
-    return _flash_grouped(q, k, v, scale, causal, hw_name, interpret,
-                          blocks), (q, k, v)
+def _flash_grouped_fwd(q, k, v, scale, causal, window, prefix_len, hw_name,
+                       interpret, blocks):
+    return _flash_grouped(q, k, v, scale, causal, window, prefix_len,
+                          hw_name, interpret, blocks), (q, k, v)
 
 
-def _flash_grouped_bwd(scale, causal, hw_name, interpret, blocks, resid, g_out):
+def _flash_grouped_bwd(scale, causal, window, prefix_len, hw_name, interpret,
+                       blocks, resid, g_out):
     """Flash-style backward: recompute through the online-softmax oracle
     (identical semantics, O(chunk) memory) instead of saving probabilities."""
     q, k, v = resid
     _, vjp = jax.vjp(
-        lambda qq, kk, vv: _oracle_attention(qq, kk, vv, scale, causal),
+        lambda qq, kk, vv: _oracle_attention(qq, kk, vv, scale, causal,
+                                             window, prefix_len),
         q, k, v)
     return vjp(g_out)
 
@@ -542,7 +559,8 @@ _flash_grouped.defvjp(_flash_grouped_fwd, _flash_grouped_bwd)
 
 
 def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, scale: float,
-              causal: bool = True, interpret: Optional[bool] = None,
+              causal: bool = True, window: int = 0, prefix_len: int = 0,
+              interpret: Optional[bool] = None,
               hardware: Optional[HardwareEntry] = None,
               blocks: Optional[tuple[int, int]] = None) -> jax.Array:
     """Unified grouped-query attention — the model-facing entry.
@@ -558,18 +576,237 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, scale: float,
     back.  Differentiable: the backward pass recomputes through the
     chunked online-softmax oracle.  On "xla" entries the same oracle is
     the forward path, so semantics are identical everywhere.
+
+    ``window``/``prefix_len`` (causal only — the honor-or-raise contract of
+    ``_chunk_mask``) derive windowed / prefix-LM schedules: the masking
+    metadata rides the recurrent form, so the kernel block-skips from it
+    instead of dispatching those modes to the jnp path.
     """
     hw, interp = _resolve(hardware, interpret)
     # kernel on compiled-Pallas entries, on "interpret" entries (the CPU
     # validation path — this is what attn_impl="pallas" means off-TPU), or
     # by explicit request; "xla" entries use the jnp oracle.
-    use_kernel = (hw.backend == "pallas"
-                  or (hw.backend == "interpret" and interp)
-                  or bool(interpret))
+    use_kernel = _use_kernel(hw, interp, interpret)
     if use_kernel:
-        return _flash_grouped(q, k, v, float(scale), bool(causal), hw.name,
+        return _flash_grouped(q, k, v, float(scale), bool(causal),
+                              int(window), int(prefix_len), hw.name,
                               bool(interp), blocks)
-    return _oracle_attention(q, k, v, scale, causal).astype(q.dtype)
+    return _oracle_attention(q, k, v, scale, causal, window,
+                             prefix_len).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# carried-state recurrences: the SSD chunked scan and the RG-LRU gated scan
+# through the same derived-schedule pipeline (expr.RecurrentForm ->
+# derive_recurrent_schedule -> emit_recurrent), with the ops-level contract:
+# pad/reshape the sequence into the derived chunks (padded tokens are the
+# monoid's identity step), differentiable via the chunked-jnp oracle VJP,
+# "xla" entries dispatch to the oracle directly.
+# ---------------------------------------------------------------------------
+
+def default_ssd_chunk(s: int, h: int, p: int, n: int, dtype="float32",
+                      hardware: Optional[HardwareEntry] = None) -> int:
+    """The derived SSD chunk length: ``solve_recurrence_blocks`` with the
+    carried (h, p, n) state, the double-buffered per-token operands and the
+    quadratic segsum intermediates (scores + the per-head decay mask L) in
+    the VMEM working-set model — replacing the old hand-written
+    ``models.ssm.default_ssd_chunk`` doubling heuristic."""
+    from repro.core.blocking import solve_recurrence_blocks
+    hw = hardware or current_hardware()
+    choice = solve_recurrence_blocks(
+        s,
+        token_elems=2 * n + h * (p + 1) + h * p,     # B, C, x, dA in + y out
+        state_elems=2 * h * p * n,                   # carried h + H0 operand
+        quad_elems=1 + h,                            # scores G + decay L
+        lin_elems=4 * h,                             # cumsum/decay vectors
+        dtype=dtype, hardware=getattr(hw, "shape", hw))
+    return choice.bs
+
+
+def default_gated_chunk(s: int, w: int, dtype="float32",
+                        hardware: Optional[HardwareEntry] = None) -> int:
+    """The derived RG-LRU chunk length: per-channel state, three per-token
+    streams (gate log, input, output), linear scan intermediates."""
+    from repro.core.blocking import solve_recurrence_blocks
+    hw = hardware or current_hardware()
+    choice = solve_recurrence_blocks(
+        s, token_elems=3 * w, state_elems=2 * w, quad_elems=0,
+        lin_elems=2 * w, dtype=dtype, hardware=getattr(hw, "shape", hw))
+    return choice.bs
+
+
+@functools.lru_cache(maxsize=128)
+def _ssd_executor(b, nc, q, h, p, n, dtype_s, hw_name, interpret):
+    """Jitted executable for one chunked SSD shape: the cached derivation
+    of ``expr.ssd_form`` through ``emit_recurrent``.  Binds the chunked
+    storage views (pure reshapes of the stored model buffers) in schedule
+    operand order (C, B, X, dA, H0); returns ``(y, final_state)``."""
+    from repro.kernels.emit import emit_recurrent_bundle
+    form = E.ssd_form(b, nc, q, h, p, n)
+    bundle = _sched.get_schedule(form, dtype=dtype_s,
+                                 hardware=get_entry(hw_name), blocks=(q,))
+    return jax.jit(emit_recurrent_bundle(bundle, out_dtype="float32",
+                                         interpret=interpret))
+
+
+def _ssd_oracle(xdt, dA, B, C, h0, chunk, unroll=False):
+    """The chunked-jnp oracle with the ops-level pad/slice contract (padded
+    tokens are inert: zero ``xdt`` adds nothing, zero ``dA`` decays by 1)."""
+    s = xdt.shape[1]
+    pad = (-s) % chunk
+    if pad:
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    y, final = ref.ssd_scan_ref(xdt, dA, B, C, h0, chunk=chunk,
+                                unroll=unroll)
+    return y[:, :s], final
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def _ssd_kernel(xdt, dA, B, C, h0, chunk, hw_name, interpret):
+    b, s, h, p = xdt.shape
+    n = B.shape[-1]
+    pad = (-s) % chunk
+    sp = s + pad
+    nc = sp // chunk
+    xp = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else xdt
+    dp = jnp.pad(dA, ((0, 0), (0, pad), (0, 0))) if pad else dA
+    Bp = jnp.pad(B, ((0, 0), (0, pad), (0, 0))) if pad else B
+    Cp = jnp.pad(C, ((0, 0), (0, pad), (0, 0))) if pad else C
+    fn = _ssd_executor(b, nc, chunk, h, p, n, str(jnp.dtype(xdt.dtype)),
+                       hw_name, interpret)
+    y, final = fn(Cp.reshape(b, nc, chunk, n), Bp.reshape(b, nc, chunk, n),
+                  xp.reshape(b, nc, chunk, h, p),
+                  dp.reshape(b, nc, chunk, h), h0)
+    return y.reshape(b, sp, h, p)[:, :s], final
+
+
+def _ssd_kernel_fwd(xdt, dA, B, C, h0, chunk, hw_name, interpret):
+    return _ssd_kernel(xdt, dA, B, C, h0, chunk, hw_name, interpret), \
+        (xdt, dA, B, C, h0)
+
+
+def _ssd_kernel_bwd(chunk, hw_name, interpret, resid, g):
+    """Scan-style backward: recompute through the chunked-jnp oracle —
+    identical semantics per chunk, O(chunk) live intermediates."""
+    xdt, dA, B, C, h0 = resid
+    _, vjp = jax.vjp(
+        lambda *a: _ssd_oracle(*a, chunk), xdt, dA, B, C, h0)
+    return vjp(g)
+
+
+_ssd_kernel.defvjp(_ssd_kernel_fwd, _ssd_kernel_bwd)
+
+
+def scan_ssd(xdt: jax.Array, dA: jax.Array, B: jax.Array, C: jax.Array, *,
+             init_state: Optional[jax.Array] = None,
+             chunk: Optional[int] = None, unroll: bool = False,
+             interpret: Optional[bool] = None,
+             hardware: Optional[HardwareEntry] = None
+             ) -> tuple[jax.Array, jax.Array]:
+    """Unified Mamba-2 SSD chunked scan — the model-facing entry.
+
+    ``xdt (B, S, H, P)`` the dt-folded input, ``dA (B, S, H)`` the log
+    decay, ``B/C (B, S, N)`` the state projections.  Returns ``(y (B, S,
+    H, P) f32, final state (B, H, P, N) f32)``.
+
+    On a Pallas backend (or under ``interpret=True``) this runs the kernel
+    from the *derived* recurrent schedule (``expr.ssd_form`` — the chunk
+    from ``solve_recurrence_blocks`` unless pinned), with the ops-level
+    pad/slice contract: any sequence length works, padded tokens are the
+    monoid's identity step.  Differentiable: the backward pass recomputes
+    through the chunked-jnp oracle.  On "xla" entries the same oracle is
+    the forward path, so semantics are identical everywhere.
+    """
+    hw, interp = _resolve(hardware, interpret)
+    b, s, h, p = xdt.shape
+    n = B.shape[-1]
+    if chunk is None:
+        chunk = default_ssd_chunk(s, h, p, n, str(jnp.dtype(xdt.dtype)), hw)
+    chunk = max(1, min(int(chunk), s))
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+    use_kernel = _use_kernel(hw, interp, interpret)
+    if use_kernel:
+        return _ssd_kernel(xdt, dA, B, C, init_state, chunk, hw.name,
+                           bool(interp))
+    return _ssd_oracle(xdt, dA, B, C, init_state, chunk, unroll)
+
+
+@functools.lru_cache(maxsize=128)
+def _gated_executor(b, nc, q, w, dtype_s, hw_name, interpret):
+    """Jitted executable for one chunked gated-scan shape
+    (``expr.rglru_form`` through ``emit_recurrent``): operand order
+    (log_a, b, H0); returns ``(h_seq, final_state)``."""
+    from repro.kernels.emit import emit_recurrent_bundle
+    form = E.rglru_form(b, nc, q, w)
+    bundle = _sched.get_schedule(form, dtype=dtype_s,
+                                 hardware=get_entry(hw_name), blocks=(q,))
+    return jax.jit(emit_recurrent_bundle(bundle, out_dtype="float32",
+                                         interpret=interpret))
+
+
+def _gated_oracle(log_a, b_in, h0):
+    return ref.gated_scan_ref(log_a, b_in, h0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _gated_kernel(log_a, b_in, h0, chunk, hw_name, interpret):
+    b, s, w = log_a.shape
+    pad = (-s) % chunk
+    sp = s + pad
+    nc = sp // chunk
+    la = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0))) if pad else log_a
+    bb = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0))) if pad else b_in
+    fn = _gated_executor(b, nc, chunk, w, str(jnp.dtype(log_a.dtype)),
+                         hw_name, interpret)
+    hs, final = fn(la.reshape(b, nc, chunk, w), bb.reshape(b, nc, chunk, w),
+                   h0)
+    return hs.reshape(b, sp, w)[:, :s], final
+
+
+def _gated_kernel_fwd(log_a, b_in, h0, chunk, hw_name, interpret):
+    return _gated_kernel(log_a, b_in, h0, chunk, hw_name, interpret), \
+        (log_a, b_in, h0)
+
+
+def _gated_kernel_bwd(chunk, hw_name, interpret, resid, g):
+    log_a, b_in, h0 = resid
+    _, vjp = jax.vjp(_gated_oracle, log_a, b_in, h0)
+    return vjp(g)
+
+
+_gated_kernel.defvjp(_gated_kernel_fwd, _gated_kernel_bwd)
+
+
+def gated_scan(log_a: jax.Array, b_in: jax.Array, *,
+               init_state: Optional[jax.Array] = None,
+               chunk: Optional[int] = None,
+               interpret: Optional[bool] = None,
+               hardware: Optional[HardwareEntry] = None
+               ) -> tuple[jax.Array, jax.Array]:
+    """Unified RG-LRU gated linear scan ``h_t = exp(log_a_t) h_{t-1} +
+    b_t`` — the model-facing entry.  Returns ``(h (B, S, w) f32, final
+    (B, w) f32)``.
+
+    Same contract as ``scan_ssd``: the derived chunked kernel on Pallas /
+    interpret entries (chunk from ``solve_recurrence_blocks``), the
+    log-depth associative-scan oracle on "xla" entries and in the VJP.
+    """
+    hw, interp = _resolve(hardware, interpret)
+    b, s, w = log_a.shape
+    if init_state is None:
+        init_state = jnp.zeros((b, w), jnp.float32)
+    use_kernel = _use_kernel(hw, interp, interpret)
+    if not use_kernel:
+        return _gated_oracle(log_a, b_in, init_state)
+    if chunk is None:
+        chunk = default_gated_chunk(s, w, str(jnp.dtype(log_a.dtype)), hw)
+    chunk = max(1, min(int(chunk), s))
+    return _gated_kernel(log_a, b_in, init_state, chunk, hw.name,
+                         bool(interp))
 
 
 # ---------------------------------------------------------------------------

@@ -159,6 +159,87 @@ def eval_nf(nf: "E.NormalForm", *arrays: jax.Array) -> jax.Array:
     return out
 
 
+# ---------------------------------------------------------------------------
+# carried-state recurrence oracles (the jnp semantics of emit_recurrent's
+# registered kinds; also the VJP recompute bodies of ops.scan_ssd /
+# ops.gated_scan and their XLA-entry execution path)
+# ---------------------------------------------------------------------------
+
+def ssd_scan_ref(xdt: jax.Array, dA: jax.Array, B: jax.Array, C: jax.Array,
+                 init_state: jax.Array | None = None, *, chunk: int,
+                 unroll: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan oracle — the ``ssd`` monoid's jnp semantics.
+
+    ``xdt (b,s,h,p)`` is the dt-folded input, ``dA (b,s,h)`` the per-token
+    log decay (``dt * A``, <= 0), ``B/C (b,s,n)`` the state in/out
+    projections.  Returns ``(y (b,s,h,p) f32, final state (b,h,p,n) f32)``.
+    The per-chunk factoring mirrors the emitted kernel body step for step
+    (same einsum structure, same order of operations), which is what makes
+    the interpret-mode kernel bit-identical to this oracle.
+    """
+    b, s, h, p = xdt.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc, q = s // chunk, chunk
+    xc = xdt.astype(jnp.float32).reshape(b, nc, q, h, p)
+    dac = dA.astype(jnp.float32).reshape(b, nc, q, h)
+    Bc = B.astype(jnp.float32).reshape(b, nc, q, n)
+    Cc = C.astype(jnp.float32).reshape(b, nc, q, n)
+    tril = jnp.arange(q)[:, None] >= jnp.arange(q)[None, :]
+    neg_inf = jnp.float32(semiring.MASK_NEG_INF)
+
+    def step(h_prev, inp):
+        xb, dab, Bb, Cb = inp                       # (b,q,h,p) (b,q,h) ...
+        csh = jnp.transpose(jnp.cumsum(dab, axis=1), (0, 2, 1))  # (b,h,i)
+        seg = csh[..., :, None] - csh[..., None, :]              # (b,h,i,j)
+        L = jnp.exp(jnp.where(tril, seg, neg_inf))
+        G = jnp.einsum("bin,bjn->bij", Cb, Bb,
+                       preferred_element_type=jnp.float32)
+        P = G[:, None] * L                                       # (b,h,i,j)
+        y = jnp.einsum("bhij,bjhp->bihp", P, xb,
+                       preferred_element_type=jnp.float32)
+        in_decay = jnp.exp(csh)                                  # (b,h,i)
+        t_off = jnp.einsum("bin,bhpn->bihp", Cb, h_prev,
+                           preferred_element_type=jnp.float32)
+        y = y + t_off * jnp.transpose(in_decay, (0, 2, 1))[..., None]
+        total = csh[..., -1]                                     # (b,h)
+        decay_states = jnp.exp(total[..., None] - csh)           # (b,h,j)
+        xd = xb * jnp.transpose(decay_states, (0, 2, 1))[..., None]
+        S = jnp.einsum("bjn,bjhp->bhpn", Bb, xd,
+                       preferred_element_type=jnp.float32)
+        h_new = jnp.exp(total)[..., None, None] * h_prev + S
+        return h_new, y
+
+    init = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+            else init_state.astype(jnp.float32))
+    final, ys = jax.lax.scan(
+        step, init,
+        (xc.transpose(1, 0, 2, 3, 4), dac.transpose(1, 0, 2, 3),
+         Bc.transpose(1, 0, 2, 3), Cc.transpose(1, 0, 2, 3)),
+        unroll=bool(unroll))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    return y, final
+
+
+def gated_scan_ref(log_a: jax.Array, b_in: jax.Array,
+                   init_state: jax.Array | None = None
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Gated linear scan oracle — the ``gated`` (RG-LRU) monoid's jnp
+    semantics: ``h_t = a_t h_{t-1} + b_t`` with ``a = exp(log_a)``, via the
+    log-depth associative scan over the sequence axis.  ``log_a/b_in``:
+    (B, S, w) f32.  Returns ``(h (B,S,w) f32, final (B,w) f32)``."""
+    a = jnp.exp(log_a.astype(jnp.float32))
+    b = b_in.astype(jnp.float32)
+
+    def comb(x, y):
+        return (x[0] * y[0], y[0] * x[1] + y[1])
+
+    aa, hh = jax.lax.associative_scan(comb, (a, b), axis=1)
+    if init_state is not None:
+        hh = hh + aa * init_state.astype(jnp.float32)[:, None, :]
+    return hh, hh[:, -1]
+
+
 def ipophp_ref(a: jax.Array, b: jax.Array, mode: str) -> jax.Array:
     """The unified inner/outer/hadamard/kron operator (paper appendix)."""
     if mode == "ip":

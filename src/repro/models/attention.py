@@ -184,13 +184,16 @@ def attention_fwd(p: dict, x: jax.Array, cfg: ArchConfig, *,
     kvh = k.shape[2]
     qg = _split_groups(q, kvh)
     sk = k.shape[1]
-    if (cfg.attn_impl == "pallas" and causal and window == 0
-            and prefix_len == 0):
-        # execution path: the flash kernel from the derived streaming
+    if cfg.attn_impl == "pallas" and causal:
+        # execution path: the flash kernel from the derived recurrent
         # schedule, via the ops-level wrapper whose pad/slice contract
-        # accepts ANY sequence length (no silent jnp fallback off
-        # block multiples; interpret-mode Pallas on CPU, oracle on "xla")
-        out = ops.attention(qg, k, v, scale=scale, causal=True)
+        # accepts ANY sequence length (no silent jnp fallback off block
+        # multiples; interpret-mode Pallas on CPU, oracle on "xla").
+        # window/prefix_len ride the form as streamed-axis masking metadata
+        # — windowed and prefix-LM causal shapes derive their schedules
+        # (block-skip included) instead of falling back to the jnp path.
+        out = ops.attention(qg, k, v, scale=scale, causal=True,
+                            window=window, prefix_len=prefix_len)
     elif s >= cfg.attn_chunk_min_seq and causal:
         out = chunked_attention(qg, k, v, scale=scale, causal=True,
                                 window=window, prefix_len=prefix_len,

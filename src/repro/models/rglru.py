@@ -7,10 +7,12 @@ Recurrence (elementwise over the lru_width channels, f32):
     a_t = exp(-c * softplus(Lambda) * r_t),  c = 8
     h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
 
-Training uses ``jax.lax.associative_scan`` (log-depth — this is what makes
-the 512k-token long-context cell tractable); decode is the single step.
-The full block is: (x-branch: linear -> causal conv(4) -> RG-LRU) gated by
-(gate-branch: linear -> gelu), then an output projection.
+Training hands the scan to the derived carried-state recurrence subsystem
+(``ops.gated_scan``: the chunked kernel from ``expr.rglru_form`` on Pallas
+backends, the log-depth associative-scan oracle on "xla" entries — the
+latter is what makes the 512k-token long-context cell tractable); decode is
+the single step.  The full block is: (x-branch: linear -> causal conv(4) ->
+RG-LRU) gated by (gate-branch: linear -> gelu), then an output projection.
 """
 from __future__ import annotations
 
@@ -20,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import constrain
+from repro.kernels import ops
 from repro.models.common import ArchConfig, Collector
 
 _C = 8.0
@@ -69,6 +72,8 @@ def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
 
 
 def _gates(p: dict, xc: jax.Array):
+    """Returns ``(log_a, b)`` — the gate *log* (the scan entries cumsum it
+    stably in-chunk) and the gated input."""
     r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xc, p["wa"],
                                   preferred_element_type=jnp.float32)
                        + p["ba"].astype(jnp.float32))
@@ -78,30 +83,26 @@ def _gates(p: dict, xc: jax.Array):
     log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
     a = jnp.exp(log_a)
     mult = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
-    return a, mult * i * xc.astype(jnp.float32)
+    return log_a, mult * i * xc.astype(jnp.float32)
 
 
 def apply_rglru(p: dict, x: jax.Array, cfg: ArchConfig
                 ) -> tuple[jax.Array, RGLRUCache]:
-    """Full-sequence block.  x: (B,S,d)."""
+    """Full-sequence block.  x: (B,S,d).  The recurrence itself is the
+    derived ``gated`` carried-state scan (``ops.gated_scan``) — this module
+    hand-rolls no scan loop."""
     xb = jnp.einsum("bsd,dw->bsw", x, p["w_x"],
                     preferred_element_type=jnp.float32).astype(x.dtype)
     gate = jnp.einsum("bsd,dw->bsw", x, p["w_gate"],
                       preferred_element_type=jnp.float32)
     xc = _causal_conv(xb, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype))
     xc = constrain(xc, "batch", None, "lru")
-    a, b_in = _gates(p, xc)
-
-    def combine(l, r):
-        al, bl = l
-        ar, br = r
-        return al * ar, ar * bl + br
-
-    a_s, h = jax.lax.associative_scan(combine, (a, b_in), axis=1)
+    log_a, b_in = _gates(p, xc)
+    h, h_last = ops.gated_scan(log_a, b_in)
     y = (h * jax.nn.gelu(gate, approximate=True)).astype(x.dtype)
     out = jnp.einsum("bsw,wd->bsd", y, p["w_out"],
                      preferred_element_type=jnp.float32).astype(x.dtype)
-    cache = RGLRUCache(h=h[:, -1], conv=xb[:, -(cfg.conv_width - 1):])
+    cache = RGLRUCache(h=h_last, conv=xb[:, -(cfg.conv_width - 1):])
     return out, cache
 
 
@@ -115,8 +116,8 @@ def decode_rglru(p: dict, x: jax.Array, cache: RGLRUCache, cfg: ArchConfig
     hist = jnp.concatenate([cache.conv, xb], axis=1)         # (B,W,lru)
     w = p["conv_w"].astype(x.dtype)
     xc = (jnp.einsum("bwc,wc->bc", hist, w) + p["conv_b"].astype(x.dtype))[:, None]
-    a, b_in = _gates(p, xc)
-    h = a[:, 0] * cache.h + b_in[:, 0]
+    log_a, b_in = _gates(p, xc)
+    h = jnp.exp(log_a[:, 0]) * cache.h + b_in[:, 0]
     y = (h[:, None] * jax.nn.gelu(gate, approximate=True)).astype(x.dtype)
     out = jnp.einsum("bsw,wd->bsd", y, p["w_out"],
                      preferred_element_type=jnp.float32).astype(x.dtype)

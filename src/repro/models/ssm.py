@@ -4,8 +4,13 @@ recurrent for decode.  [arXiv:2405.21060]
 The chunked SSD algorithm is itself a dimension lifting: the sequence axis is
 split ``S -> (chunks, chunk_len)`` and the computation decomposes into
 block-diagonal (intra-chunk, quadratic-in-q matmuls on the MXU) plus low-rank
-(inter-chunk, a scan over chunk states).  The chunk length is chosen by the
-same VMEM block solver as the GEMM kernel (``default_ssd_chunk``).
+(inter-chunk, a carried-state recurrence over chunk states).  This module no
+longer hand-rolls that loop: ``ssd_chunked`` is a thin consumer of
+``ops.scan_ssd`` — the scan schedule (grid, BlockSpecs, chunk length, the
+carried (h, p, n) state scratch and the final-state export) is *derived*
+from the lifted recurrent form ``expr.ssd_form`` by the same pipeline as
+every GEMM and the flash-attention kernel, with the chunk from
+``solve_recurrence_blocks``.
 
 Decode is the dual recurrent form: O(1) state update per token —
 state (B, H, p, N);  h' = exp(dt*A) h + dt * x outer B;  y = C . h + D x.
@@ -77,64 +82,25 @@ def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
     return out + b
 
 
-def _segsum(dA: jax.Array) -> jax.Array:
-    """Stable segment-sum: out[..., i, j] = sum_{j<t<=i} dA[..., t] (i>=j)."""
-    q = dA.shape[-1]
-    cs = jnp.cumsum(dA, axis=-1)
-    diff = cs[..., :, None] - cs[..., None, :]          # (..., i, j)
-    mask = jnp.tril(jnp.ones((q, q), bool))
-    return jnp.where(mask, diff, -jnp.inf)
-
-
 def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
-                C: jax.Array, chunk: int, init_state: jax.Array | None = None,
+                C: jax.Array, chunk: int | None = None,
+                init_state: jax.Array | None = None,
                 unroll: bool = False) -> tuple[jax.Array, jax.Array]:
     """SSD over a full sequence.  x: (b,s,h,p), dt: (b,s,h) (post-softplus),
     A: (h,) negative, B,C: (b,s,n).  Returns (y (b,s,h,p), final state
-    (b,h,p,n) f32)."""
-    b, s, h, p = x.shape
-    n = B.shape[-1]
-    assert s % chunk == 0, (s, chunk)
-    c = s // chunk
+    (b,h,p,n) f32).
+
+    Thin consumer of the derived recurrence subsystem: folds dt into the
+    input and the log decay, then hands the carried-state chunked scan to
+    ``ops.scan_ssd`` (derived kernel on Pallas backends, chunked-jnp oracle
+    on "xla" entries and in the VJP).  ``chunk=None`` lets
+    ``solve_recurrence_blocks`` choose the chunk length.
+    """
     xf = (x * dt[..., None]).astype(jnp.float32)         # fold dt into x
-    dA = (dt * A).astype(jnp.float32)                    # (b,s,h)
-    xc = xf.reshape(b, c, chunk, h, p)
-    Bc = B.reshape(b, c, chunk, n).astype(jnp.float32)
-    Cc = C.reshape(b, c, chunk, n).astype(jnp.float32)
-    dAc = dA.reshape(b, c, chunk, h).transpose(0, 1, 3, 2)   # (b,c,h,q)
-
-    # intra-chunk (block-diagonal): the MXU-friendly quadratic part
-    L = jnp.exp(_segsum(dAc))                                # (b,c,h,q,q)
-    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)           # (b,c,q,q)
-    y_diag = jnp.einsum("bcij,bchij,bcjhp->bcihp", scores, L, xc)
-
-    # chunk states: S_c = sum_j exp(dAsum - cum_j) B_j x_j
-    cum = jnp.cumsum(dAc, axis=-1)                           # (b,c,h,q)
-    total = cum[..., -1:]
-    decay_states = jnp.exp(total - cum)                      # (b,c,h,q)
-    S = jnp.einsum("bcjn,bchj,bcjhp->bchpn", Bc, decay_states, xc)
-
-    # inter-chunk recurrence over c (sequential scan, c is small)
-    chunk_decay = jnp.exp(total[..., 0])                     # (b,c,h)
-
-    def step(prev, inp):
-        s_in, dec = inp
-        nxt = dec[..., None, None] * prev + s_in
-        return nxt, prev
-
-    init = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
-            else init_state.astype(jnp.float32))
-    S_t = S.transpose(1, 0, 2, 3, 4)                         # (c,b,h,p,n)
-    dec_t = chunk_decay.transpose(1, 0, 2)                   # (c,b,h)
-    final, prevs = jax.lax.scan(step, init, (S_t, dec_t), unroll=bool(unroll))
-    prev_states = prevs.transpose(1, 0, 2, 3, 4)             # (b,c,h,p,n)
-
-    # inter-chunk contribution
-    in_decay = jnp.exp(cum)                                  # (b,c,h,q)
-    y_off = jnp.einsum("bcin,bchpn,bchi->bcihp", Cc, prev_states, in_decay)
-
-    y = (y_diag + y_off).reshape(b, s, h, p)
-    return y, final
+    dA = (dt * A).astype(jnp.float32)                    # (b,s,h) log decay
+    return ops.scan_ssd(xf, dA, B.astype(jnp.float32),
+                        C.astype(jnp.float32), init_state=init_state,
+                        chunk=chunk, unroll=bool(unroll))
 
 
 def apply_mamba2(p: dict, x: jax.Array, cfg: ArchConfig) -> tuple[jax.Array, SSMCache]:
@@ -151,7 +117,8 @@ def apply_mamba2(p: dict, x: jax.Array, cfg: ArchConfig) -> tuple[jax.Array, SSM
     dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
     A = -jnp.exp(p["A_log"].astype(jnp.float32))
     xh = xs.reshape(b, s, h, hp)
-    y, final = ssd_chunked(xh, dtv, A, B, C, min(cfg.ssm_chunk, s),
+    y, final = ssd_chunked(xh, dtv, A, B, C,
+                           min(cfg.ssm_chunk, s) if cfg.ssm_chunk else None,
                            unroll=bool(cfg.scan_unroll))
     y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
     y = y.reshape(b, s, din).astype(x.dtype)
@@ -200,15 +167,10 @@ def decode_mamba2(p: dict, x: jax.Array, cache: SSMCache, cfg: ArchConfig
     return out, SSMCache(conv=new_conv, state=state)
 
 
-def default_ssd_chunk(cfg: ArchConfig, vmem_budget: int = 16 * 2**20) -> int:
-    """Chunk length from the VMEM solver view: the intra-chunk working set
-    (q x q scores per head group + q x p x h operands) should fit the budget;
-    MXU-align to 128."""
-    h, p, n = n_ssd_heads(cfg), cfg.ssm_head_dim, cfg.ssm_state
-    q = 128
-    while True:
-        nxt = q * 2
-        ws = 4 * (nxt * nxt * h + 2 * nxt * h * p + 2 * nxt * n)
-        if ws > vmem_budget or nxt > 1024:
-            return q
-        q = nxt
+def default_ssd_chunk(cfg: ArchConfig) -> int:
+    """.. deprecated:: the chunk length is now derived by
+    ``solve_recurrence_blocks`` (see ``ops.default_ssd_chunk``) with the
+    carried state and chunk intermediates in the VMEM working-set model;
+    this config-front wrapper is kept for one release."""
+    return ops.default_ssd_chunk(4096, n_ssd_heads(cfg),
+                                 cfg.ssm_head_dim, cfg.ssm_state)

@@ -243,6 +243,33 @@ def test_plan_rejects_psi_view_leaves():
         dplan.derive_plan(e, MS8, shard={"i": "x"}, hardware=CPU)
 
 
+def test_plan_psi_view_at_index_zero_places_specs_structurally():
+    """Regression: _spec_entries used to key psi-view detection on
+    Access.const *truthiness*, so a view at index 0 (const == 0) mis-placed
+    its PartitionSpec entries on the leading slab dim.  Fixed leading dims
+    are now detected structurally (storage rank vs entry count): the slab
+    dim is replicated and the sharded axis lands on the right stored dim."""
+    e = E.inner("add", "mul", E.psi((0,), E.arr("X", (2, 8, 8))),
+                E.arr("B", (8, 8)))
+    plan = dplan.derive_plan(e, MS8, shard={"i": "x"}, hardware=CPU)
+    # X binds its FULL (2, 8, 8) storage: slab dim replicated, rows sharded
+    assert plan.in_entries[0] == (None, "x", None)
+    assert plan.in_entries[1] == (None, None)
+    assert plan.out_entries == ("x", None)
+    assert plan.collective == "none"
+    # and the plan executes: sharded == single-device oracle
+    devs = jax.devices()
+    if len(devs) >= 8:
+        from jax.sharding import Mesh
+        from repro.kernels.emit import emit_shard_map
+        x = jnp.arange(2 * 8 * 8, dtype=jnp.float32).reshape(2, 8, 8)
+        b = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
+        with Mesh(np.array(devs[:8]), ("x",)) as m:
+            got = emit_shard_map(plan, m, use_kernel=False)(x, b)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(x[0] @ b), atol=1e-4)
+
+
 # ---------------------------------------------------------------------------
 # multi-device matrix: sharded result == single-device oracle, and the
 # jaxpr contains exactly the planned collectives
