@@ -8,9 +8,13 @@ derived GEMM, the transposed-operand ``matmul(transpose_b=True)`` schedule
 (column-gamma coefficients, no relayout copy), the max-plus semiring through
 the same emitter, and ``matmul_sharded`` rows — the derived DistributedPlan
 per sharding kind on an 8-way mesh, with its collective choice and modeled
-per-device HBM residency + interconnect bytes.  Also writes
+per-device HBM residency + interconnect bytes.  The training rows time the
+derived backward passes (``flash_backward``, ``ssd_backward`` — the custom
+VJPs running the dQ/dKdV and reverse-scan recurrence kinds) against the
+jitted jnp-oracle recompute, and ``matmul_bf16_acc`` exercises the bf16
+accumulation semiring (tiles solved for 2-byte partial sums).  Also writes
 ``BENCH_schedule.json`` at the repo root so later PRs can diff the
-trajectory.
+trajectory; ``benchmarks/check_regression.py`` gates CI on it.
 """
 from __future__ import annotations
 
@@ -31,10 +35,17 @@ from repro.kernels import ops
 from repro.models.chunked_attention import chunked_attention
 
 SHAPES = [(128, 128, 128), (256, 256, 256), (100, 70, 130)]
+#: bf16-accumulation rows: the semiring solver sizes tiles for 2-byte
+#: partial sums (acc_dtype="bfloat16"), vs the default f32 accumulator
+BF16_ACC_SHAPES = [(256, 256, 256), (512, 512, 512)]
 #: flash-attention rows: (batch, q_heads, kv_heads, seq, head_dim)
 ATTN_SHAPES = [(1, 4, 2, 512, 64), (1, 4, 2, 300, 64)]
+#: backward rows reuse the first attention/ssd shape: derived-VJP grad vs
+#: the jitted jnp-oracle grad, plus the dq/dkv (resp. reverse-scan) bundles
+BWD_ATTN_SHAPE = ATTN_SHAPES[0]
 #: ssd-scan rows: (batch, seq, heads, head_dim, state_dim)
 SSD_SHAPES = [(1, 512, 4, 32, 32), (1, 300, 4, 32, 32)]
+BWD_SSD_SHAPE = SSD_SHAPES[0]
 #: the distributed-plan rows model an 8-way slice of the v5e "data" ring
 MESH8 = MeshShape((("x", 8),))
 #: sharding kinds for the matmul_sharded rows (collective derived, then
@@ -197,10 +208,126 @@ def run():
             "modeled_energy_J_materialized": rep_mat.energy_J,
             "bound": rep.bound,
         })
+    # ---- derived backward passes (ISSUE 6): flash dQ/dKdV + SSD reverse -
+    b, hq, hkv, s, hd = BWD_ATTN_SHAPE
+    g = hq // hkv
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(k1, (b, s, hkv, g, hd), jnp.float32)
+    k = jax.random.normal(k2, (b, s, hkv, hd), jnp.float32)
+    v = jax.random.normal(k3, (b, s, hkv, hd), jnp.float32)
+    scale = hd ** -0.5
+    tag = f"schedule/flash_backward_{b}x{hq}x{s}x{hd}"
+    grad_derived = jax.grad(lambda *a: (ops.attention(
+        *a, scale=scale, causal=True, interpret=True) ** 2).sum(),
+        argnums=(0, 1, 2))
+    grad_oracle = jax.jit(jax.grad(lambda *a: (ops._oracle_attention(
+        *a, scale, True, 0, 0) ** 2).sum(), argnums=(0, 1, 2)))
+    us_bwd = time_fn(lambda: grad_derived(q, k, v), warmup=1, iters=3)
+    us_bwd_oracle = time_fn(grad_oracle, q, k, v, warmup=1, iters=3)
+    dq_bundle = sched.get_schedule(E.attention_dq_form(b, hkv, g, s, s, hd),
+                                   dtype="float32", hardware=entry)
+    dkv_bundle = sched.get_schedule(E.attention_dkv_form(b, hkv, g, s, s, hd),
+                                    dtype="float32", hardware=entry)
+    rep_dq = attention_energy(b, hq, s, s, hd, dq_bundle.blocks, "float32",
+                              causal=True, hardware=entry.shape)
+    rep_dkv = attention_energy(b, hq, s, s, hd, dkv_bundle.blocks, "float32",
+                               causal=True, hardware=entry.shape)
+    rows.append((f"{tag}/derived", us_bwd,
+                 f"dq blocks={dq_bundle.blocks.as_tuple()} "
+                 f"dkv blocks={dkv_bundle.blocks.as_tuple()} modeled "
+                 f"t={rep_dq.time_s + rep_dkv.time_s:.3e}s "
+                 f"E={rep_dq.energy_J + rep_dkv.energy_J:.3e}J (two passes)"))
+    rows.append((f"{tag}/oracle_recompute", us_bwd_oracle,
+                 "jitted grad through the chunked-jnp oracle"))
+    flash_bwd_record = {
+        "shape": [b, hq, hkv, s, hd],
+        "us_bwd_derived_interpret": us_bwd,
+        "us_bwd_oracle_jit": us_bwd_oracle,
+        "dq_blocks": list(dq_bundle.blocks.as_tuple()),
+        "dkv_blocks": list(dkv_bundle.blocks.as_tuple()),
+        "modeled_time_s": rep_dq.time_s + rep_dkv.time_s,
+        "modeled_energy_J": rep_dq.energy_J + rep_dkv.energy_J,
+        "modeled_hbm_bytes": rep_dq.hbm_bytes + rep_dkv.hbm_bytes,
+    }
+
+    b, s, h, p, n = BWD_SSD_SHAPE
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(4), 4)
+    xdt = jax.random.normal(k1, (b, s, h, p), jnp.float32)
+    dA = -jnp.abs(jax.random.normal(k2, (b, s, h), jnp.float32)) * 0.3
+    B = jax.random.normal(k3, (b, s, n), jnp.float32)
+    C = jax.random.normal(k4, (b, s, n), jnp.float32)
+    chunk = min(ops.default_ssd_chunk(s, h, p, n, "float32", entry), s)
+    nc = -(-s // chunk)
+    tag = f"schedule/ssd_backward_{b}x{s}x{h}x{p}x{n}"
+    grad_derived = jax.grad(lambda *a: (ops.scan_ssd(
+        *a, chunk=chunk, interpret=True)[0] ** 2).sum(), argnums=(0, 1, 2, 3))
+    h0z = jnp.zeros((b, h, p, n), jnp.float32)
+    grad_oracle = jax.jit(jax.grad(lambda *a: (ops._ssd_oracle(
+        *a, h0z, chunk)[0] ** 2).sum(), argnums=(0, 1, 2, 3)))
+    us_bwd = time_fn(lambda: grad_derived(xdt, dA, B, C), warmup=1, iters=3)
+    us_bwd_oracle = time_fn(grad_oracle, xdt, dA, B, C, warmup=1, iters=3)
+    bwd_bundle = sched.get_schedule(E.ssd_bwd_form(b, nc, chunk, h, p, n),
+                                    dtype="float32", hardware=entry,
+                                    blocks=(chunk,))
+    rep_bwd = scan_energy(b, s, h, p, n, bwd_bundle.blocks, "float32",
+                          hardware=entry.shape)
+    rows.append((f"{tag}/derived", us_bwd,
+                 f"chunk={chunk} (reverse stream) modeled "
+                 f"t={rep_bwd.time_s:.3e}s E={rep_bwd.energy_J:.3e}J"))
+    rows.append((f"{tag}/oracle_recompute", us_bwd_oracle,
+                 "jitted grad through the chunked-jnp oracle"))
+    ssd_bwd_record = {
+        "shape": [b, s, h, p, n],
+        "chunk": chunk,
+        "us_bwd_derived_interpret": us_bwd,
+        "us_bwd_oracle_jit": us_bwd_oracle,
+        "modeled_time_s": rep_bwd.time_s,
+        "modeled_energy_J": rep_bwd.energy_J,
+        "modeled_hbm_bytes": rep_bwd.hbm_bytes,
+    }
+
+    # ---- bf16 accumulation semiring: tiles solved for 2-byte partials ----
+    bf16_records = []
+    for m, k, n in BF16_ACC_SHAPES:
+        k1, k2 = jax.random.split(jax.random.PRNGKey(5))
+        a = jax.random.normal(k1, (m, k), jnp.bfloat16)
+        bmat = jax.random.normal(k2, (k, n), jnp.bfloat16)
+        tag = f"schedule/matmul_bf16_acc_{m}x{k}x{n}"
+        us_acc = time_fn(lambda: ops.apply(
+            E.matmul_expr(m, k, n), a, bmat, interpret=True,
+            acc_dtype="bfloat16"), warmup=1, iters=3)
+        us_jnp = time_fn(jax.jit(lambda x, y: jnp.dot(
+            x, y, preferred_element_type=jnp.bfloat16)), a, bmat)
+        acc_bundle = sched.get_schedule(E.matmul_expr(m, k, n),
+                                        dtype="bfloat16", hardware=entry,
+                                        acc_dtype="bfloat16")
+        f32_bundle = sched.get_schedule(E.matmul_expr(m, k, n),
+                                        dtype="bfloat16", hardware=entry)
+        rep_acc = gemm_energy(m, k, n, acc_bundle.blocks, "bfloat16",
+                              hardware=entry.shape)
+        rows.append((f"{tag}/derived", us_acc,
+                     f"blocks={acc_bundle.blocks.as_tuple()} "
+                     f"(f32-acc: {f32_bundle.blocks.as_tuple()}) modeled "
+                     f"t={rep_acc.time_s:.3e}s E={rep_acc.energy_J:.3e}J"))
+        rows.append((f"{tag}/jnp_dot", us_jnp,
+                     "XLA dot, preferred_element_type=bf16"))
+        bf16_records.append({
+            "shape": [m, k, n],
+            "us_bf16_acc_interpret": us_acc,
+            "us_jnp_dot": us_jnp,
+            "blocks_bf16_acc": list(acc_bundle.blocks.as_tuple()),
+            "blocks_f32_acc": list(f32_bundle.blocks.as_tuple()),
+            "modeled_time_s": rep_acc.time_s,
+            "modeled_energy_J": rep_acc.energy_J,
+        })
+
     stats = sched.schedule_cache_stats()
     payload = {"hardware": entry.name, "mesh": list(MESH8.axes),
                "entries": records, "flash_attention": attn_records,
                "ssd_scan": ssd_records,
+               "flash_backward": flash_bwd_record,
+               "ssd_backward": ssd_bwd_record,
+               "matmul_bf16_acc": bf16_records,
                "schedule_cache": stats,
                "plan_cache": dplan.plan_cache_stats()}
     with open(JSON_PATH, "w") as f:

@@ -1,0 +1,113 @@
+"""CI bench-regression gate: re-run ``bench_schedule`` and diff against the
+committed ``BENCH_schedule.json`` baseline.
+
+The paper's energy claims only stay honest if every PR's numbers are
+enforced ("Racing to Idle"): the modeled quantities — block choices, grids,
+collectives, modeled time/energy/HBM — are pure functions of the derived
+schedules, so any drift is a real behavior change and compares exact-ish
+(rtol 1e-6).  Interpret-mode wall-clock timings are host noise on top of a
+real signal, so they only fail when a fresh timing exceeds ``TIME_TOL``x
+its baseline — catching an accidental oracle fallback or a schedule-cache
+regression (order-of-magnitude slowdowns), not CI jitter.
+
+A PR that intentionally changes a modeled number (new solver, new rows)
+regenerates the baseline in the same commit::
+
+    PYTHONPATH=src python -m benchmarks.bench_schedule
+
+and this gate then pins the new trajectory.  Exit status: 0 clean,
+1 on any regression (each violation printed).
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+
+BASELINE_PATH = os.path.join(os.path.dirname(__file__), "..",
+                             "BENCH_schedule.json")
+#: interpret-mode timings: fresh may be up to this factor over baseline
+TIME_TOL = 3.0
+#: modeled quantities are deterministic — exact-ish only absorbs float repr
+MODEL_RTOL = 1e-6
+
+
+def _is_timing(key: str) -> bool:
+    return key.startswith("us_")
+
+
+def _compare(path: str, base, fresh, errors: list[str]) -> None:
+    if isinstance(base, dict):
+        if not isinstance(fresh, dict):
+            errors.append(f"{path}: baseline dict, fresh {type(fresh).__name__}")
+            return
+        for key in base:
+            if key not in fresh:
+                errors.append(f"{path}.{key}: missing from fresh run")
+                continue
+            _compare(f"{path}.{key}", base[key], fresh[key], errors)
+        for key in fresh:
+            if key not in base:
+                errors.append(f"{path}.{key}: new row not in baseline — "
+                              "regenerate BENCH_schedule.json")
+        return
+    if isinstance(base, list):
+        if not isinstance(fresh, list) or len(base) != len(fresh):
+            errors.append(f"{path}: length {len(base)} -> "
+                          f"{len(fresh) if isinstance(fresh, list) else fresh}")
+            return
+        for i, (b, f) in enumerate(zip(base, fresh)):
+            _compare(f"{path}[{i}]", b, f, errors)
+        return
+    key = path.rsplit(".", 1)[-1].split("[")[0]
+    if isinstance(base, (int, float)) and isinstance(fresh, (int, float)) \
+            and not isinstance(base, bool):
+        if _is_timing(key):
+            if base > 0 and fresh > TIME_TOL * base:
+                errors.append(f"{path}: timing regressed "
+                              f"{base:.1f}us -> {fresh:.1f}us "
+                              f"(> {TIME_TOL}x)")
+        elif not math.isclose(base, fresh, rel_tol=MODEL_RTOL,
+                              abs_tol=1e-12):
+            errors.append(f"{path}: modeled value drifted {base!r} -> "
+                          f"{fresh!r}")
+        return
+    if base != fresh:
+        errors.append(f"{path}: {base!r} -> {fresh!r}")
+
+
+def main() -> int:
+    if not os.path.exists(BASELINE_PATH):
+        print("no committed BENCH_schedule.json baseline — run "
+              "`PYTHONPATH=src python -m benchmarks.bench_schedule` and "
+              "commit it", file=sys.stderr)
+        return 1
+    with open(BASELINE_PATH) as f:
+        baseline = json.load(f)
+
+    from benchmarks import bench_schedule
+    bench_schedule.run()                 # rewrites BENCH_schedule.json
+    with open(BASELINE_PATH) as f:
+        fresh = json.load(f)
+
+    errors: list[str] = []
+    _compare("bench", baseline, fresh, errors)
+    if errors:
+        print(f"bench regression: {len(errors)} violation(s) vs committed "
+              "baseline", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    n_timings = sum(
+        1 for section in baseline.values() if isinstance(section, (list, dict))
+        for rec in (section if isinstance(section, list) else [section])
+        if isinstance(rec, dict)
+        for k in rec if _is_timing(k))
+    print(f"bench regression gate clean: modeled values exact, "
+          f"{n_timings} timings within {TIME_TOL}x of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

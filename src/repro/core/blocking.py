@@ -104,6 +104,11 @@ def solve_blocks(m: int, k: int, n: int, dtype="bfloat16",
     """
     esize = _dtype_size(dtype)
     acc_size = _dtype_size(acc_dtype)
+    supported = getattr(hardware, "acc_dtypes", ("float32",))
+    if str(acc_dtype) not in supported:
+        raise ValueError(
+            f"hardware {hardware.name!r} has no {acc_dtype!r} accumulation "
+            f"path (supports {supported})")
     budget = int(hardware.vmem.capacity_bytes * vmem_budget_frac)
     lane = hardware.mxu_tile[1]                     # 128 on TPU, 1 on V100
     sub = _sublane_multiple(dtype) if hardware.mxu_tile == (128, 128) else 1
@@ -151,7 +156,10 @@ def solve_stream_blocks(sq: int, sk: int, hd: int, vd: Optional[int] = None,
                         dtype="bfloat16", hardware: HardwareShape = TPU_V5E,
                         vmem_budget_frac: float = 0.5,
                         buffering: int = 2,
-                        acc_dtype="float32") -> StreamBlockChoice:
+                        acc_dtype="float32",
+                        q_extra: int = 0, k_extra: int = 0,
+                        n_inter: int = 2,
+                        n_row_state: int = 2) -> StreamBlockChoice:
     """Choose ``(bq, bk)`` for a streamed two-contraction reduction
     (flash attention): per grid step the VMEM residents are the input
     blocks q ``(bq, hd)``, k ``(bk, hd)``, v ``(bk, vd)`` (double-buffered),
@@ -166,6 +174,14 @@ def solve_stream_blocks(sq: int, sk: int, hd: int, vd: Optional[int] = None,
     flash-attention default: at large sequence lengths on the v5e table it
     *lands on* (512, 512), and degrades gracefully when head_dim, dtype or
     the budget push the state over.
+
+    The backward recurrence kinds reuse this model with extra terms:
+    ``q_extra``/``k_extra`` widen the per-row / per-streamed-element input
+    payload (e.g. the saved dO block riding the row axis, V riding the
+    stream), ``n_inter`` counts the (bq, bk) f32 in-block intermediates
+    (4 for flash backward: s, p, dp, ds) and ``n_row_state`` the f32
+    per-row state/statistics vectors (m, l, delta, ...).  The defaults
+    reproduce the forward model exactly.
     """
     vd = vd or hd
     esize = _dtype_size(dtype)
@@ -181,10 +197,11 @@ def solve_stream_blocks(sq: int, sk: int, hd: int, vd: Optional[int] = None,
     cand_k = _candidates(max(min(sk, 4096), align_k), align_k)
     for bq in cand_q:
         for bk in cand_k:
-            ws = (bq * hd + bk * hd + bk * vd) * esize * buffering
+            ws = (bq * (hd + q_extra)
+                  + bk * (hd + vd + k_extra)) * esize * buffering
             ws += bq * vd * esize                       # output block
-            ws += (bq * vd + 2 * bq) * acc_size         # acc + m + l state
-            ws += 2 * bq * bk * acc_size                # scores + probs
+            ws += (bq * vd + n_row_state * bq) * acc_size   # acc + row state
+            ws += n_inter * bq * bk * acc_size          # scores/probs/grads
             if ws > budget:
                 continue
             flops = 2.0 * bq * bk * (hd + vd)

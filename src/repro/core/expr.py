@@ -304,14 +304,33 @@ class StateSpec:
     axes), ``rescale`` marks that every step multiplies the carried state by
     a data-dependent factor (online softmax's ``exp(m_prev - m_new)``,
     SSD's chunk decay, RG-LRU's gate product), and ``exports`` makes the
-    final state a kernel output (the SSM/LRU decode caches)."""
+    final state a kernel output (the SSM/LRU decode caches).
+
+    ``export_names`` restricts *which* carried arrays export (empty = all);
+    ``per_step`` names carried arrays exported once **per streamed step**
+    rather than once at the end — their output operands gain the streamed
+    axis, block-1 and grid-indexed, so each step writes its own slab (the
+    forward-pass statistics and per-chunk checkpoints the derived backward
+    kernels consume)."""
     kind: str
     carried: Tuple[Tuple[str, Tuple[str, ...]], ...]
     rescale: bool = True
     exports: bool = False
+    export_names: Tuple[str, ...] = ()
+    per_step: Tuple[str, ...] = ()
 
     def key(self) -> tuple:
-        return (self.kind, self.carried, self.rescale, self.exports)
+        return (self.kind, self.carried, self.rescale, self.exports,
+                self.export_names, self.per_step)
+
+    def exported(self) -> Tuple[Tuple[str, Tuple[str, ...]], ...]:
+        """The carried entries that become kernel outputs, in carried
+        order (``export_names`` filters; empty means all)."""
+        if not self.exports:
+            return ()
+        if not self.export_names:
+            return self.carried
+        return tuple(c for c in self.carried if c[0] in self.export_names)
 
 
 #: the online-softmax monoid: running max + denominator per output row, plus
@@ -525,6 +544,215 @@ def ssd_form(b: int, nc: int, q: int, h: int, p: int, n: int) -> RecurrentForm:
     H0 = LeafSpec("H0", (("b", b), ("h", h), ("p", p), ("n", n)), "row")
     return RecurrentForm("ssd_scan", (scores, context), "c", SSD_STATE,
                          aux=(dA, H0))
+
+
+#: the forward online-softmax monoid *with exported statistics*: identical
+#: body (kind "online_softmax" — same derived blocks, same kernel math),
+#: but the carried (m, l) flush as per-row kernel outputs so a derived
+#: backward can reconstruct p = exp(s - lse) without re-running the stream
+SOFTMAX_STATS_STATE = StateSpec("online_softmax",
+                                (("m", ("i",)), ("l", ("i",)),
+                                 ("acc", ("i", "d"))),
+                                exports=True, export_names=("m", "l"))
+
+#: flash backward dQ: the carried per-row gradient accumulator, streamed
+#: over keys exactly as the forward (no rescale — the softmax statistics
+#: are already final)
+FLASH_DQ_STATE = StateSpec("flash_dq", (("dq", ("i", "c")),), rescale=False)
+
+#: flash backward dK/dV: the transposed weld — rows are key positions, the
+#: stream is query positions; dV rides as carried state exported per row
+#: block (dK is the main output)
+FLASH_DKV_STATE = StateSpec("flash_dkv", (("dv", ("j", "d")),),
+                            rescale=False, exports=True,
+                            export_names=("dv",))
+
+#: the SSD monoid with per-chunk state checkpoints: same ``ssd`` body, but
+#: each streamed step also exports the state *entering* that chunk — the
+#: recomputation anchor the derived backward consumes
+SSD_CHK_STATE = StateSpec("ssd", (("h", ("h", "p", "n")),
+                                  ("h_in", ("h", "p", "n"))),
+                          exports=True, per_step=("h_in",))
+
+#: the SSD backward monoid: the inter-chunk state cotangent ``dh`` carried
+#: across (reversed) chunks, with the per-chunk projection/decay cotangents
+#: exported per streamed step
+SSD_BWD_STATE = StateSpec("ssd_backward",
+                          (("dh", ("h", "p", "n")), ("dB", ("j", "n")),
+                           ("dC", ("i", "n")), ("ddA", ("j", "h"))),
+                          rescale=False, exports=True,
+                          per_step=("dB", "dC", "ddA"))
+
+#: the gated backward monoid: the reversed recurrence ``z_k = a'_k z_{k-1}
+#: + b'_k`` is *itself* a gated scan on flipped operands — degenerate case
+GATED_BWD_STATE = StateSpec("gated_backward", (("h", ("w",)),),
+                            exports=True)
+
+
+def attention_stats_form(b: int, hkv: int, g: int, sq: int, sk: int, hd: int,
+                         vd: Optional[int] = None, *, window: int = 0,
+                         prefix_len: int = 0) -> RecurrentForm:
+    """``attention_form`` with the (m, l) statistics exported: the same two
+    welded stages and the same ``online_softmax`` kind (so the solver
+    derives the *same* (bq, bk) as the plain forward), but the carried
+    running max and denominator flush as per-row f32 outputs — the saved
+    activations the derived backward kernels reconstruct ``p`` from."""
+    scores, context = attention_expr(b, hkv, g, sq, sk, hd, vd)
+    scores_nf = normal_form(scores, name="attn_scores",
+                            out_axes=("b", "h", "g", "i", "j"),
+                            reduce_axes=("c",))
+    context_nf = normal_form(context, name="attn_context",
+                             out_axes=("b", "h", "g", "i", "d"),
+                             reduce_axes=("j",))
+    return RecurrentForm("flash_attention_stats", (scores_nf, context_nf),
+                         "j", SOFTMAX_STATS_STATE, window=int(window),
+                         prefix_len=int(prefix_len))
+
+
+def attention_dq_form(b: int, hkv: int, g: int, sq: int, sk: int, hd: int,
+                      vd: Optional[int] = None, *, window: int = 0,
+                      prefix_len: int = 0) -> RecurrentForm:
+    """Flash backward dQ as a carried-state recurrence: the same weld shape
+    as the forward (rows = query positions, stream = key positions), with
+    the recomputed score block as stage 1 and the ``dS . K`` contraction as
+    stage 2.  The saved statistics (M, L) and the precomputed row dot
+    ``D = rowsum(dO * O)`` ride as aux operands; the monoid's body turns
+    the streamed score block into ``dS = p * (dO.Vᵀ - D)`` and folds
+    ``dS . K`` into the carried dq accumulator.  K binds twice (stage 1
+    recompute and stage 2 contraction) — same buffer, two derived
+    BlockSpecs."""
+    vd = vd or hd
+    Q = LeafSpec("Q", (("b", b), ("i", sq), ("h", hkv), ("g", g),
+                       ("c", hd)), "row")
+    K = LeafSpec("K", (("b", b), ("j", sk), ("h", hkv), ("c", hd)), "row")
+    scores = NormalForm(
+        name="dq_scores", out_axes=("b", "h", "g", "i", "j"),
+        reduce_axes=("c",),
+        extents=(("b", b), ("h", hkv), ("g", g), ("i", sq), ("j", sk),
+                 ("c", hd)),
+        leaves=(Q, K), combine="mul", reduce_op="add")
+    dS = LeafSpec("dS", (("b", b), ("h", hkv), ("g", g), ("i", sq),
+                         ("j", sk)), "row")
+    out = NormalForm(
+        name="dq_out", out_axes=("b", "h", "g", "i", "c"),
+        reduce_axes=("j",),
+        extents=(("b", b), ("h", hkv), ("g", g), ("i", sq), ("c", hd),
+                 ("j", sk)),
+        leaves=(dS, K), combine="mul", reduce_op="add")
+    dO = LeafSpec("dO", (("b", b), ("i", sq), ("h", hkv), ("g", g),
+                         ("d", vd)), "row")
+    V = LeafSpec("V", (("b", b), ("j", sk), ("h", hkv), ("d", vd)), "row")
+    M = LeafSpec("M", (("b", b), ("h", hkv), ("g", g), ("i", sq)), "row")
+    L = LeafSpec("L", (("b", b), ("h", hkv), ("g", g), ("i", sq)), "row")
+    D = LeafSpec("D", (("b", b), ("h", hkv), ("g", g), ("i", sq)), "row")
+    return RecurrentForm("flash_dq", (scores, out), "j", FLASH_DQ_STATE,
+                         aux=(dO, V, M, L, D), window=int(window),
+                         prefix_len=int(prefix_len))
+
+
+def attention_dkv_form(b: int, hkv: int, g: int, sq: int, sk: int, hd: int,
+                       vd: Optional[int] = None, *, window: int = 0,
+                       prefix_len: int = 0) -> RecurrentForm:
+    """Flash backward dK/dV as the *transposed* weld: rows are key
+    positions ``j``, the streamed axis is query positions ``i``.  Stage 1
+    recomputes the transposed score block ``K . Qᵀ``; stage 2 contracts
+    ``dSᵀ . Q`` into the dK output while the monoid folds ``pᵀ . dO`` into
+    the carried dV, exported per row block.  Q binds twice; the per-group
+    dK/dV land on a ``(b, h, g, j, ...)`` layout the ops layer sums over
+    ``g`` (the GQA head-group reduction stays outside the kernel)."""
+    vd = vd or hd
+    K = LeafSpec("K", (("b", b), ("j", sk), ("h", hkv), ("c", hd)), "row")
+    Q = LeafSpec("Q", (("b", b), ("i", sq), ("h", hkv), ("g", g),
+                       ("c", hd)), "row")
+    scores = NormalForm(
+        name="dkv_scores", out_axes=("b", "h", "g", "j", "i"),
+        reduce_axes=("c",),
+        extents=(("b", b), ("h", hkv), ("g", g), ("j", sk), ("i", sq),
+                 ("c", hd)),
+        leaves=(K, Q), combine="mul", reduce_op="add")
+    dS = LeafSpec("dS", (("b", b), ("h", hkv), ("g", g), ("j", sk),
+                         ("i", sq)), "row")
+    out = NormalForm(
+        name="dkv_out", out_axes=("b", "h", "g", "j", "c"),
+        reduce_axes=("i",),
+        extents=(("b", b), ("h", hkv), ("g", g), ("j", sk), ("c", hd),
+                 ("i", sq)),
+        leaves=(dS, Q), combine="mul", reduce_op="add")
+    dO = LeafSpec("dO", (("b", b), ("i", sq), ("h", hkv), ("g", g),
+                         ("d", vd)), "row")
+    V = LeafSpec("V", (("b", b), ("j", sk), ("h", hkv), ("d", vd)), "row")
+    M = LeafSpec("M", (("b", b), ("h", hkv), ("g", g), ("i", sq)), "row")
+    L = LeafSpec("L", (("b", b), ("h", hkv), ("g", g), ("i", sq)), "row")
+    D = LeafSpec("D", (("b", b), ("h", hkv), ("g", g), ("i", sq)), "row")
+    return RecurrentForm("flash_dkv", (scores, out), "i", FLASH_DKV_STATE,
+                         aux=(dO, V, M, L, D), window=int(window),
+                         prefix_len=int(prefix_len))
+
+
+def ssd_chk_form(b: int, nc: int, q: int, h: int, p: int,
+                 n: int) -> RecurrentForm:
+    """``ssd_form`` with per-chunk state checkpoints: the same two welded
+    stages and the same ``ssd`` kind, but each streamed step additionally
+    exports the inter-chunk state *entering* that chunk (``h_in``,
+    (b, nc, h, p, n)) — the recomputation anchors the derived SSD backward
+    streams instead of re-scanning the whole sequence."""
+    fwd = ssd_form(b, nc, q, h, p, n)
+    return RecurrentForm("ssd_scan_chk", fwd.stages, fwd.stream_axis,
+                         SSD_CHK_STATE, aux=fwd.aux)
+
+
+def ssd_bwd_form(b: int, nc: int, q: int, h: int, p: int,
+                 n: int) -> RecurrentForm:
+    """The SSD backward as a carried-state recurrence over *reversed*
+    chunks: stage 1 recomputes the score block ``G = C . Bᵀ``, stage 2 is
+    the ``dX`` contraction ``Pᵀ . dY``; the monoid's body replays the
+    forward chunk factoring from the saved per-chunk state checkpoints
+    (aux ``Hin``) and chains every cotangent — ``dh`` carried across
+    chunks (seeded by aux ``dHf``), ``dB``/``dC``/``ddA`` exported per
+    streamed step, ``dh0`` flushed at the end."""
+    C = LeafSpec("C", (("b", b), ("c", nc), ("i", q), ("n", n)), "row")
+    B = LeafSpec("B", (("b", b), ("c", nc), ("j", q), ("n", n)), "row")
+    scores = NormalForm(
+        name="ssd_bwd_scores", out_axes=("b", "c", "i", "j"),
+        reduce_axes=("n",),
+        extents=(("b", b), ("c", nc), ("i", q), ("j", q), ("n", n)),
+        leaves=(C, B), combine="mul", reduce_op="add")
+    P = LeafSpec("P", (("b", b), ("c", nc), ("h", h), ("i", q), ("j", q)),
+                 "row")
+    dY = LeafSpec("dY", (("b", b), ("c", nc), ("i", q), ("h", h), ("p", p)),
+                  "row")
+    out = NormalForm(
+        name="ssd_bwd_out", out_axes=("b", "c", "j", "h", "p"),
+        reduce_axes=("i",),
+        extents=(("b", b), ("c", nc), ("j", q), ("h", h), ("p", p),
+                 ("i", q)),
+        leaves=(P, dY), combine="mul", reduce_op="add")
+    X = LeafSpec("X", (("b", b), ("c", nc), ("j", q), ("h", h), ("p", p)),
+                 "row")
+    dA = LeafSpec("dA", (("b", b), ("c", nc), ("j", q), ("h", h)), "row")
+    Hin = LeafSpec("Hin", (("b", b), ("c", nc), ("h", h), ("p", p),
+                           ("n", n)), "row")
+    dHf = LeafSpec("dHf", (("b", b), ("h", h), ("p", p), ("n", n)), "row")
+    return RecurrentForm("ssd_backward", (scores, out), "c", SSD_BWD_STATE,
+                         aux=(X, dA, Hin, dHf))
+
+
+def rglru_bwd_form(b: int, nc: int, q: int, w: int) -> RecurrentForm:
+    """The RG-LRU backward recurrence: the reversed cotangent scan
+    ``z_k = a'_k z_{k-1} + b'_k`` is *itself* a gated scan on flipped,
+    shifted operands — the degenerate (N=1) backward kind shares the
+    forward's body verbatim, only the ``StateSpec.kind`` registration
+    differs (the ops layer does the flip/shift/unflip)."""
+    A = LeafSpec("A", (("b", b), ("c", nc), ("i", q), ("w", w)), "row")
+    Bv = LeafSpec("Bv", (("b", b), ("c", nc), ("i", q), ("w", w)), "row")
+    stage = NormalForm(
+        name="rglru_bwd_stage", out_axes=("b", "c", "i", "w"),
+        reduce_axes=(),
+        extents=(("b", b), ("c", nc), ("i", q), ("w", w)),
+        leaves=(A, Bv), combine="mul", reduce_op="add")
+    H0 = LeafSpec("H0", (("b", b), ("w", w)), "row")
+    return RecurrentForm("rglru_backward", (stage,), "c", GATED_BWD_STATE,
+                         aux=(H0,))
 
 
 def rglru_form(b: int, nc: int, q: int, w: int) -> RecurrentForm:

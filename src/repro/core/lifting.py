@@ -57,6 +57,10 @@ class HardwareShape:
     mxu_tile: tuple[int, int] = (128, 128)
     vreg_tile: tuple[int, int] = (8, 128)
     sa_power_W: float = 200.0                     # static+active power scale for energy model
+    #: accumulation dtypes this part's matrix unit supports (names resolved
+    #: through ``core.semiring.accum_def``); every entry keeps f32, and the
+    #: MXU-era parts add the bf16 partial-sum and int8->int32 paths.
+    acc_dtypes: tuple = ("float32", "bfloat16", "int32")
 
     @property
     def n_chips(self) -> int:
@@ -128,6 +132,7 @@ V100 = HardwareShape(
     flop_energy_pJ=6.0,
     mxu_tile=(1, 1),              # no systolic alignment for CUDA cores
     vreg_tile=(1, 8),             # warp-coalesced groups of 8 doubles
+    acc_dtypes=("float32",),      # CUDA-core FMA: f32 partial sums only
 )
 
 

@@ -37,6 +37,7 @@ from typing import Optional, Sequence, Union
 
 from repro.core import expr as expr_mod
 from repro.core import onf as onf_mod
+from repro.core import semiring
 from repro.core.blocking import (BlockChoice, RecurrenceBlockChoice,
                                  StreamBlockChoice, solve_blocks,
                                  solve_recurrence_blocks, solve_stream_blocks,
@@ -385,11 +386,12 @@ class RecurrentSchedule:
 
     def state_blocks(self) -> tuple[tuple[int, ...], ...]:
         """Per exported state array, its in-kernel scratch shape: the
-        state-out block with the leading grid-pinned unit dims dropped."""
+        state-out block with the grid-pinned unit dims dropped (blockwise
+        grid-driven dims — a blocked per-row axis — keep their extent)."""
         out = []
         for so in self.state_outs:
             blk = tuple(b for b, d in zip(so.block, so.grid_dims)
-                        if d is None)
+                        if d is None or b > 1)
             out.append(blk if len(blk) >= 2 else (1,) * (2 - len(blk)) + blk)
         return tuple(out)
 
@@ -414,15 +416,19 @@ class RecurrentSchedule:
 StreamingSchedule = RecurrentSchedule
 
 
-def _aux_operand(leaf: "expr_mod.LeafSpec", grid_pos: dict[str, int]
-                 ) -> OperandSpec:
-    """BlockSpec for a state-monoid operand (SSD's dA, the initial state):
-    a dense row-major view of its declared axes — grid-lifted axes get
-    block extent 1 driven by their grid position, the rest stay resident
-    whole."""
+def _aux_operand(leaf: "expr_mod.LeafSpec", grid_pos: dict[str, int],
+                 grid_block: Optional[dict[str, int]] = None) -> OperandSpec:
+    """BlockSpec for a state-monoid operand (SSD's dA, the initial state,
+    the saved softmax statistics a derived backward re-reads): a dense
+    row-major view of its declared axes — grid-lifted axes get their grid
+    dimension's block extent (1 for fully-lifted axes, the derived row/
+    stream block for blockwise-lifted axes) driven by their grid position,
+    the rest stay resident whole."""
+    grid_block = grid_block or {}
     axes = tuple(t for t, _ in leaf.dims)
     shape = tuple(e for _, e in leaf.dims)
-    block = tuple(1 if ax in grid_pos else e for ax, e in leaf.dims)
+    block = tuple(grid_block.get(ax, 1) if ax in grid_pos else e
+                  for ax, e in leaf.dims)
     gdims = tuple(grid_pos.get(ax) for ax in axes)
     return OperandSpec(leaf.array, axes, shape, block, gdims,
                        (0,) * len(axes))
@@ -512,10 +518,20 @@ def derive_recurrent_schedule(stages: Sequence["onf_mod.Onf"],
                 f"the output and the intermediate, got {row_candidates}")
         row_axis = row_candidates[0]
 
+    # each grid axis's per-step block extent, recovered from the stage
+    # operands it drives (1 for fully-lifted axes, bq/bk for the blockwise
+    # row/stream lifts)
+    grid_block: dict[str, int] = {}
+    for spec in tuple(plans[0].ins) + tuple(p.out for p in plans) \
+            + tuple(s for p in plans[1:] for s in p.ins):
+        for ax, blk, gd in zip(spec.axes, spec.block, spec.grid_dims):
+            if gd is not None and blk > 1:
+                grid_block[ax] = blk
+
     ins = tuple(plans[0].ins)
     for plan in plans[1:]:
         ins += plan.ins[1:]
-    ins += tuple(_aux_operand(l, grid_pos) for l in aux)
+    ins += tuple(_aux_operand(l, grid_pos, grid_block) for l in aux)
 
     state_outs: list[OperandSpec] = []
     if state.exports:
@@ -524,16 +540,30 @@ def derive_recurrent_schedule(stages: Sequence["onf_mod.Onf"],
             for ax, e in zip(spec.axes, spec.shape):
                 full_extent.setdefault(ax, e)
         par = tuple(g.base for g in grid if g.semantics == "parallel")
-        for name, axes in state.carried:
+        for name, axes in state.exported():
             lead = tuple(ax for ax in par if ax not in axes)
             all_axes = lead + tuple(axes)
+            if name in state.per_step:
+                # per-step export: the streamed axis joins the operand,
+                # grid-indexed so each streamed step writes its own slab
+                all_axes = lead + (stream_axis,) + tuple(axes)
             shape = tuple(full_extent[ax] for ax in all_axes)
-            block = tuple(1 if ax in lead else full_extent[ax]
-                          for ax in all_axes)
-            gdims = tuple(grid_pos.get(ax) if ax in lead else None
-                          for ax in all_axes)
-            state_outs.append(OperandSpec(name, all_axes, shape, block,
-                                          gdims, (0,) * len(all_axes)))
+            block, gdims = [], []
+            for ax in all_axes:
+                if ax in grid_pos:
+                    # grid-lifted axes — the leading parallel cells, a
+                    # per-step streamed slab, or a carried axis that is
+                    # itself blockwise-lifted (the blocked per-row axis of
+                    # a folding form's saved statistics) — are written
+                    # block by block, driven by their grid position
+                    block.append(grid_block.get(ax, 1))
+                    gdims.append(grid_pos[ax])
+                else:
+                    block.append(full_extent[ax])
+                    gdims.append(None)
+            state_outs.append(OperandSpec(name, all_axes, shape,
+                                          tuple(block), tuple(gdims),
+                                          (0,) * len(all_axes)))
 
     sched = RecurrentSchedule(
         stages[0].name, grid, ins, last.out, tuple(inters),
@@ -565,22 +595,32 @@ def derive_streaming_schedule(scores: "onf_mod.Onf", context: "onf_mod.Onf",
 # ---------------------------------------------------------------------------
 
 def default_gemm_blocks(m: int, k: int, n: int, dtype,
-                        hardware: HardwareShape) -> BlockChoice:
+                        hardware: HardwareShape,
+                        acc_dtype: str = "float32") -> BlockChoice:
     """Solver defaults tuned for kernel use: quarter-VMEM budget keeps
     double-buffering headroom; caps keep the grid >= a few cells."""
     return solve_blocks(min(m, 512), min(k, 2048), min(n, 512), dtype,
-                        hardware=hardware, vmem_budget_frac=0.25)
+                        hardware=hardware, vmem_budget_frac=0.25,
+                        acc_dtype=acc_dtype)
 
 
 def default_stream_blocks(sq: int, sk: int, hd: int, vd: int, dtype,
-                          hardware: HardwareShape) -> StreamBlockChoice:
+                          hardware: HardwareShape,
+                          q_extra: int = 0, k_extra: int = 0,
+                          n_inter: int = 2,
+                          n_row_state: int = 2) -> StreamBlockChoice:
     """Streaming (bq, bk) policy: same quarter-VMEM budget and the same
     512 grid-coverage cap as the GEMM policy — on the v5e table this lands
     on the (512, 512) tiles the hand-written flash kernel used to fix, but
     *derived* from the carried-state working-set model, so fatter head dims
-    or narrower budgets shrink the blocks instead of overflowing VMEM."""
+    or narrower budgets shrink the blocks instead of overflowing VMEM.
+    The extra terms widen the model for the backward recurrence kinds
+    (saved dO/V payloads, four in-block grad intermediates, saved-stat row
+    vectors); the defaults are the forward model exactly."""
     return solve_stream_blocks(min(sq, 512), min(sk, 512), hd, vd, dtype,
-                               hardware=hardware, vmem_budget_frac=0.25)
+                               hardware=hardware, vmem_budget_frac=0.25,
+                               q_extra=q_extra, k_extra=k_extra,
+                               n_inter=n_inter, n_row_state=n_row_state)
 
 
 def _pad(x: int, mult: int) -> int:
@@ -605,6 +645,7 @@ class ScheduleBundle:
     padded: tuple[int, ...]          # same, padded to block multiples
     out_shape: tuple[int, ...] = ()
     in_shapes: tuple[tuple[int, ...], ...] = ()
+    acc_dtype: str = "float32"       # accumulation dtype the emitter honors
 
 
 SCHEDULE_CACHE_SIZE = 256
@@ -633,7 +674,7 @@ _LANE, _SUBLANE = 128, 8
 
 
 def _build_bundle(nf: "expr_mod.NormalForm", dtype, hw_shape,
-                  blocks) -> ScheduleBundle:
+                  blocks, acc_dtype: str = "float32") -> ScheduleBundle:
     """Pad, lift and derive a schedule for any normalized expression.
 
     The policy generalizes the paper's fig-2 lifting: leading output axes
@@ -657,7 +698,8 @@ def _build_bundle(nf: "expr_mod.NormalForm", dtype, hw_shape,
         if blocks is None:
             _stats["solves"] += 1
             if nf.combine == "mul" and nf.reduce_op == "add":
-                blocks = default_gemm_blocks(m, k, n, dtype, hw_shape)
+                blocks = default_gemm_blocks(m, k, n, dtype, hw_shape,
+                                             acc_dtype=acc_dtype)
             else:
                 # general semirings materialize a (bm, bn, bk) f32 combine
                 # intermediate in-block (no MXU fusion): the same solver,
@@ -699,11 +741,13 @@ def _build_bundle(nf: "expr_mod.NormalForm", dtype, hw_shape,
     padded = tuple(pads.get(s, ext[s]) for s in order)
     return ScheduleBundle(nf.name, derive_schedule(lifted, hw_shape, dtype),
                           blocks, logical, padded,
-                          nf.out_shape(), nf.leaf_storage_shapes())
+                          nf.out_shape(), nf.leaf_storage_shapes(),
+                          acc_dtype=acc_dtype)
 
 
 def _build_recurrent_bundle(rf: "expr_mod.RecurrentForm", dtype, hw_shape,
-                            blocks) -> ScheduleBundle:
+                            blocks,
+                            acc_dtype: str = "float32") -> ScheduleBundle:
     """Pad, lift and derive a ``RecurrentSchedule`` for a recurrent form.
 
     Two lifting policies, chosen by the weld's shape:
@@ -738,15 +782,40 @@ def _build_recurrent_bundle(rf: "expr_mod.RecurrentForm", dtype, hw_shape,
         sq, sk = ext[row_sym], ext[stream_sym]
         hd = ext[s_nf.reduce_axes[0]] if s_nf.reduce_axes else 1
         vd = ext[c_nf.out_axes[-1]]
+        lead = s_nf.out_axes[:-2]
         if blocks is None:
             _stats["solves"] += 1
-            blocks = default_stream_blocks(sq, sk, hd, vd, dtype, hw_shape)
+            # backward folding kinds carry wider per-cell payloads than the
+            # forward: aux leaves riding the row axis (dO) widen the q-side
+            # working set, leaves riding the stream (V, saved stats) the
+            # k-side, and the grad chain needs four (bq, bk) intermediates
+            q_extra = k_extra = 0
+            n_inter, n_rows = 2, 2
+            if rf.state.kind != "online_softmax":
+                n_inter = 4
+                for leaf in rf.aux:
+                    syms = tuple(t for t, _ in leaf.dims if isinstance(t, str))
+                    per = 1
+                    for t, e in leaf.dims:
+                        if not isinstance(t, str) or t not in (
+                                (row_sym, stream_sym) + lead):
+                            per *= e
+                    if row_sym in syms:
+                        if per > 1:
+                            q_extra += per
+                        else:
+                            n_rows += 1
+                    elif stream_sym in syms:
+                        k_extra += per
+            blocks = default_stream_blocks(sq, sk, hd, vd, dtype, hw_shape,
+                                           q_extra=q_extra, k_extra=k_extra,
+                                           n_inter=n_inter,
+                                           n_row_state=n_rows)
         elif not isinstance(blocks, StreamBlockChoice):
             bq, bk = blocks
             blocks = StreamBlockChoice(min(bq, sq), min(bk, sk), 0, 0.0, 1.0)
         bq, bk = blocks.as_tuple()
         pads = {row_sym: _pad(sq, bq), stream_sym: _pad(sk, bk)}
-        lead = s_nf.out_axes[:-2]
         factors = {row_sym: (pads[row_sym] // bq, "proc"),
                    stream_sym: (pads[stream_sym] // bk, "block")}
         order = lead + (row_sym, stream_sym)
@@ -778,9 +847,19 @@ def _build_recurrent_bundle(rf: "expr_mod.RecurrentForm", dtype, hw_shape,
                 lifted = onf_mod.lift_loop(lifted, s, f, res)
         return lifted
 
+    # aux leaves bypass the per-stage onf(pads) lift — re-declare them with
+    # padded extents so their derived BlockSpecs match the padded grid
+    # (the saved statistics of a folding backward ride the padded row axis)
+    aux = tuple(
+        expr_mod.LeafSpec(
+            l.array,
+            tuple((t, pads.get(t, e) if isinstance(t, str) else e)
+                  for t, e in l.dims),
+            l.layout)
+        for l in rf.aux)
     sched = derive_recurrent_schedule(
         tuple(lift_stage(nf) for nf in rf.stages), stream_sym, rf.state,
-        rf.aux, rf.window, rf.prefix_len, hw_shape, dtype)
+        aux, rf.window, rf.prefix_len, hw_shape, dtype)
     logical = tuple(ext[s] for s in order)
     padded = tuple(pads.get(s, ext[s]) for s in order)
     in_shapes = rf.stages[0].leaf_storage_shapes()
@@ -788,7 +867,8 @@ def _build_recurrent_bundle(rf: "expr_mod.RecurrentForm", dtype, hw_shape,
         in_shapes += nf.leaf_storage_shapes()[1:]
     in_shapes += tuple(l.storage_shape() for l in rf.aux)
     return ScheduleBundle(rf.name, sched, blocks, logical, padded,
-                          rf.stages[-1].out_shape(), in_shapes)
+                          rf.stages[-1].out_shape(), in_shapes,
+                          acc_dtype=acc_dtype)
 
 
 #: the deprecated string ops, as the expressions they always were
@@ -805,7 +885,7 @@ def _expr_for_op(op: str, shapes: tuple[int, ...]) -> "expr_mod.Expr":
 
 
 def get_schedule(op, shapes=None, dtype="float32", hardware=None,
-                 blocks=None) -> ScheduleBundle:
+                 blocks=None, acc_dtype: str = "float32") -> ScheduleBundle:
     """LRU-cached schedule derivation keyed on the expression's normal form.
 
     New signature::
@@ -851,11 +931,27 @@ def get_schedule(op, shapes=None, dtype="float32", hardware=None,
     hw_shape = getattr(hardware, "shape", hardware)
     hw_name = getattr(hardware, "name", None) or hw_shape.name
     dtype_key = str(dtype)
+    acc_dtype = str(acc_dtype)
+    if acc_dtype != "float32":
+        # the registry is the legality oracle; the hardware table is the
+        # availability oracle — a part without the bf16 partial-sum path
+        # must not get bf16-accumulation schedules cached under its name
+        if isinstance(nf, expr_mod.RecurrentForm):
+            last = nf.stages[-1]
+            semiring.check_accum(acc_dtype, dtype_key, last.combine,
+                                 last.reduce_op)
+        else:
+            semiring.check_accum(acc_dtype, dtype_key, nf.combine,
+                                 nf.reduce_op)
+        if acc_dtype not in getattr(hw_shape, "acc_dtypes", ("float32",)):
+            raise ValueError(
+                f"hardware {hw_name!r} has no {acc_dtype!r} accumulation "
+                f"path (supports {hw_shape.acc_dtypes})")
     block_key = tuple(blocks) if isinstance(blocks, (list, tuple)) else blocks
     if isinstance(block_key, (BlockChoice, StreamBlockChoice,
                               RecurrenceBlockChoice)):
         block_key = block_key.as_tuple()
-    key = (nf.key(), dtype_key, hw_name, block_key)
+    key = (nf.key(), dtype_key, hw_name, block_key, acc_dtype)
     with _lock:
         hit = _cache.get(key)
         if hit is not None:
@@ -864,9 +960,11 @@ def get_schedule(op, shapes=None, dtype="float32", hardware=None,
             return hit
         _stats["misses"] += 1
         if isinstance(nf, expr_mod.RecurrentForm):
-            bundle = _build_recurrent_bundle(nf, dtype_key, hw_shape, blocks)
+            bundle = _build_recurrent_bundle(nf, dtype_key, hw_shape, blocks,
+                                             acc_dtype=acc_dtype)
         else:
-            bundle = _build_bundle(nf, dtype_key, hw_shape, blocks)
+            bundle = _build_bundle(nf, dtype_key, hw_shape, blocks,
+                                   acc_dtype=acc_dtype)
         _cache[key] = bundle
         while len(_cache) > SCHEDULE_CACHE_SIZE:
             _cache.popitem(last=False)

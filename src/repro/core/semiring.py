@@ -95,6 +95,70 @@ _PAD_VALUES = {
 }
 
 
+@dataclass(frozen=True)
+class AccumDef:
+    """An accumulation dtype entry: what the MXU/partial-sum register holds.
+
+    The paper's working-set model already takes an element size for the
+    accumulator; this registry pins down *which* accumulators are legal for
+    which input dtypes (and on which semirings), so the solver and the
+    emitter agree.  ``flops_scale`` is the throughput multiplier relative to
+    f32 accumulation on the same unit (bf16 partial sums double MXU issue
+    rate on v5e-class parts; int8 quadruples it).
+    """
+    name: str                       # jnp dtype name used as the accumulator
+    itemsize: int                   # bytes per accumulator element
+    inputs: tuple                   # input dtype names this accumulator serves
+    flops_scale: float = 1.0        # peak-flops multiplier vs f32 accumulation
+
+
+_ACCUMS: dict[str, AccumDef] = {}
+
+
+def register_accum(d: AccumDef) -> AccumDef:
+    _ACCUMS[d.name] = d
+    return d
+
+
+def accum_def(name: str) -> AccumDef:
+    try:
+        return _ACCUMS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown accumulation dtype {name!r}; registered: "
+            f"{sorted(_ACCUMS)}") from None
+
+
+def registered_accums() -> tuple:
+    return tuple(sorted(_ACCUMS))
+
+
+register_accum(AccumDef("float32", 4,
+                        ("float32", "bfloat16", "float16"), 1.0))
+register_accum(AccumDef("bfloat16", 2, ("bfloat16",), 2.0))
+register_accum(AccumDef("int32", 4, ("int8",), 4.0))
+
+
+def check_accum(acc_dtype: str, in_dtype: str, combine: str,
+                reduce_op: str) -> AccumDef:
+    """Validate an (input dtype, accumulator, semiring) triple.
+
+    Only the linear (mul, add) semiring has hardware accumulation paths;
+    tropical semirings fold through the VPU at the input width and must use
+    the f32 accumulator.
+    """
+    d = accum_def(acc_dtype)
+    if acc_dtype != "float32" and (combine, reduce_op) != ("mul", "add"):
+        raise ValueError(
+            f"acc_dtype={acc_dtype!r} is only defined for the (mul, add) "
+            f"semiring, not ({combine!r}, {reduce_op!r})")
+    if in_dtype not in d.inputs:
+        raise ValueError(
+            f"acc_dtype={acc_dtype!r} does not accept {in_dtype!r} inputs "
+            f"(accepts {d.inputs})")
+    return d
+
+
 #: finite stand-in for -inf used by masked online-softmax reductions: large
 #: enough that exp(x - m) underflows to exactly 0.0 for masked entries, but
 #: finite so max/subtraction arithmetic never produces NaNs.  One definition,

@@ -166,19 +166,23 @@ def reset_plan_cache() -> None:
 
 
 def _spec_entries(a: "onf_mod.Access", shard_axes: dict[str, str],
-                  storage_rank: Optional[int] = None
+                  leaf: Optional["expr_mod.LeafSpec"] = None
                   ) -> tuple[Optional[str], ...]:
     """PartitionSpec entries recovered from lifted Access coefficients: the
     operand's storage dims are its base axes in descending-stride order (the
     BlockSpec recovery rule), and a dim is sharded iff its axis was
     mesh-lifted.
 
-    ``storage_rank`` is the bound buffer's rank (``len(leaf.dims)``): a psi
-    view fixes leading dims to constants, which contribute NO coefficient —
-    detected *structurally* as storage rank exceeding the entry count, never
-    by ``Access.const`` truthiness (a view at index 0 has ``const == 0`` and
-    used to mis-place its entries onto the leading slab dim).  Fixed leading
-    dims are never sharded, so they pad with None entries."""
+    ``leaf`` disambiguates psi views: a view fixes dims to constants, which
+    contribute NO coefficient — only a constant term ``Access.const`` — so
+    the entry sequence must interleave None at each fixed *storage* dim
+    (leading for row layout, trailing once a col layout's reversal is
+    applied).  Detection is structural (which leaf dims carry a symbol),
+    never by ``Access.const`` truthiness: a view at index 0 has
+    ``const == 0`` yet still binds its full slab storage.  Fixed dims are
+    never sharded.  The constant itself needs no spec plumbing here — the
+    per-shard schedule re-derives it at local extents as a BlockSpec
+    index-map offset (``OperandSpec.offsets``)."""
     strides: dict[str, int] = {}
     for idx, c in a.coeffs.items():
         if c == 0:
@@ -187,9 +191,11 @@ def _spec_entries(a: "onf_mod.Access", shard_axes: dict[str, str],
         strides[b] = min(strides.get(b, c), c)
     order = sorted(strides, key=lambda b: -strides[b])
     entries = tuple(shard_axes.get(b) for b in order)
-    if storage_rank is not None and storage_rank > len(entries):
-        entries = (None,) * (storage_rank - len(entries)) + entries
-    return entries
+    if leaf is None:
+        return entries
+    dims = leaf.dims if leaf.layout == "row" else tuple(reversed(leaf.dims))
+    it = iter(entries)
+    return tuple(next(it) if isinstance(t, str) else None for t, _ in dims)
 
 
 def _local_normal_form(nf: "expr_mod.NormalForm",
@@ -246,13 +252,6 @@ def derive_plan(expr: Union["expr_mod.Expr", "expr_mod.NormalForm"],
             return hit
         _stats["misses"] += 1
 
-    if any(l.const for l in (lf.access(nf.extent_map) for lf in nf.leaves)):
-        # non-zero slab offsets need BlockSpec-offset plumbing through the
-        # shard_map path; index-0 views (const == 0) ARE supported — their
-        # fixed leading dims are detected structurally by _spec_entries
-        raise ValueError("psi-view leaves with non-zero offsets are not "
-                         "supported in distributed plans yet — materialize "
-                         "the view first")
     ext = nf.extent_map
     applied, dropped, used_axes = [], [], set()
     for sym in sorted(shard):
@@ -278,7 +277,7 @@ def derive_plan(expr: Union["expr_mod.Expr", "expr_mod.NormalForm"],
                               mesh_resource(axis))
 
     in_entries = tuple(
-        _spec_entries(a, shard_axes, storage_rank=len(leaf.dims))
+        _spec_entries(a, shard_axes, leaf=leaf)
         for a, leaf in zip(o.ins, nf.leaves))
     out_entries = list(_spec_entries(o.out, shard_axes))
 

@@ -89,22 +89,31 @@ def _general_combine(schedule: Schedule, combine_fn, reducer, vals):
 
 
 def emit_pallas(schedule: Schedule, combine=None, *, out_dtype=None,
-                interpret: bool = False) -> Callable:
+                interpret: bool = False,
+                acc_dtype=None) -> Callable:
     """Build the ``pl.pallas_call`` a schedule describes.
 
     Returns ``fn(*operands) -> out`` over arrays of exactly the schedule's
     (padded) operand shapes.  ``combine`` overrides the schedule's pairing op
     by name (it defaults to ``schedule.combine``, which ``derive_schedule``
-    copied from the expression's normal form).
+    copied from the expression's normal form).  ``acc_dtype`` is the
+    accumulator the solver budgeted for — it becomes the MXU
+    ``preferred_element_type`` and the sigma scratch dtype; only the
+    (mul, add) semiring has non-f32 accumulation paths.
     """
     ni = len(schedule.ins)
     out_dtype = jnp.dtype(out_dtype or jnp.float32)
+    acc_dtype = jnp.dtype(acc_dtype or jnp.float32)
     spec, in_keep = schedule.einsum_plan()
     red = schedule.reduce_grid_dim
     gk = schedule.grid[red].extent if red is not None else 0
     combine_name = combine or schedule.combine
     reduce_name = schedule.reduce_op
     multiplicative = (combine_name, reduce_name) == ("mul", "add")
+    if acc_dtype != jnp.float32 and not multiplicative:
+        raise ValueError(
+            f"acc_dtype={acc_dtype} requires the (mul, add) semiring, got "
+            f"({combine_name!r}, {reduce_name!r})")
     out_block = schedule.out.block
     if not multiplicative:
         combine_fn = _jnp_combine(combine_name)
@@ -121,7 +130,7 @@ def emit_pallas(schedule: Schedule, combine=None, *, out_dtype=None,
                 for i, (opn, keep) in enumerate(zip(schedule.ins, in_keep))
             ]
             val = jnp.einsum(spec, *squeezed,
-                             preferred_element_type=jnp.float32)
+                             preferred_element_type=acc_dtype)
         else:
             val = _general_combine(schedule, combine_fn, reducer,
                                    [refs[i][...] for i in range(ni)])
@@ -157,7 +166,7 @@ def emit_pallas(schedule: Schedule, combine=None, *, out_dtype=None,
         out_specs=pl.BlockSpec(out_block, _index_map(schedule.out.grid_dims,
                                                      schedule.out.offsets)),
         out_shape=jax.ShapeDtypeStruct(schedule.out.shape, out_dtype),
-        scratch_shapes=([pltpu.VMEM(out_block, jnp.float32)]
+        scratch_shapes=([pltpu.VMEM(out_block, acc_dtype)]
                         if red is not None else []),
         compiler_params=compiler_params(
             dimension_semantics=schedule.dimension_semantics),
@@ -231,9 +240,11 @@ def _softmax_kind(rs: StreamingSchedule, *, scale, causal, logical_stream,
     ctx_plan, ctx_keep = rs.stages[1].einsum_plan()
     acc_block = rs.acc_block
 
+    ns = len(rs.state_outs)           # 0 (plain) or 2 (exported (m, l))
+
     def body(*refs):
         o_ref = refs[ni]
-        m_ref, l_ref, acc_ref = refs[ni + 1:ni + 4]
+        m_ref, l_ref, acc_ref = refs[ni + 1 + ns:ni + 4 + ns]
         qi = pl.program_id(row_dim)
         ki = pl.program_id(stream_dim)
 
@@ -307,6 +318,11 @@ def _softmax_kind(rs: StreamingSchedule, *, scale, causal, logical_stream,
             o_ref[...] = (acc_ref[...] /
                           jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
                           ).astype(out_dtype).reshape(rs.out.block)
+            if ns:                    # export the final (m, l) statistics
+                refs[ni + 1][...] = m_ref[...].reshape(
+                    rs.state_outs[0].block)
+                refs[ni + 2][...] = l_ref[...].reshape(
+                    rs.state_outs[1].block)
 
     scratch = [
         pltpu.VMEM((bq, 1), jnp.float32),            # running max m
@@ -337,10 +353,11 @@ def _ssd_kind(rs: StreamingSchedule, *, scale, causal, logical_stream,
     da_cell = _cell_shape(rs.ins[3])                    # (q, h)
     h_cell = _cell_shape(rs.ins[4])                     # (h, p, n)
     q = da_cell[0]
+    n_so = len(rs.state_outs)         # 1 (h only) or 2 (+ per-chunk h_in)
 
     def body(*refs):
         y_ref, hf_ref = refs[ni], refs[ni + 1]
-        h_ref = refs[ni + 2]
+        h_ref = refs[ni + 1 + n_so]
         ki = pl.program_id(stream_dim)
 
         @pl.when(ki == 0)
@@ -352,6 +369,8 @@ def _ssd_kind(rs: StreamingSchedule, *, scale, causal, logical_stream,
         Xb = refs[2][...].reshape(x_cell).astype(jnp.float32)
         dAb = refs[3][...].reshape(da_cell).astype(jnp.float32)
         h_prev = h_ref[...]
+        if n_so == 2:                 # checkpoint the state entering ki
+            refs[ni + 2][...] = h_prev.reshape(rs.state_outs[1].block)
         csh = jnp.transpose(jnp.cumsum(dAb, axis=0))        # (h, i)
         seg = csh[:, :, None] - csh[:, None, :]             # (h, i, j)
         tril = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
@@ -424,13 +443,342 @@ def _gated_kind(rs: StreamingSchedule, *, scale, causal, logical_stream,
     return body, scratch
 
 
+def _flash_dq_kind(rs: StreamingSchedule, *, scale, causal, logical_stream,
+                   out_dtype):
+    """Flash backward dQ: the same weld orientation as the forward (rows =
+    queries, stream = keys) with the carried per-row gradient accumulator.
+    Each streamed step recomputes the masked score block from stage 1,
+    reconstructs ``p = exp(s - lse)`` from the saved (m, l) statistics,
+    forms ``dS = p * (dO.Vᵀ - D)`` and folds stage 2's ``dS . K`` into the
+    accumulator; the flush applies the score scale once.  Block-skip and
+    in-block masking are byte-for-byte the forward's — the backward visits
+    exactly the blocks the forward did.  Operand order:
+    (Q, K, K2, dO, V, M, L, D)."""
+    ni = len(rs.ins)
+    bq, bk = rs.row_block, rs.stream_block
+    stream_dim = rs.stream_grid_dim
+    nk = rs.grid[stream_dim].extent
+    row_dim = rs.out.grid_dims[rs.out.axes.index(rs.row_axis)]
+    sk_pad = nk * bk
+    masked_pad = logical_stream is not None and logical_stream < sk_pad
+    window, prefix_len = rs.window, rs.prefix_len
+    if (window or prefix_len) and not causal:
+        raise ValueError(
+            f"window={window} / prefix_len={prefix_len} require causal "
+            "attention (the honor-or-raise contract of _chunk_mask)")
+    scores_plan, scores_keep = rs.stages[0].einsum_plan()
+    out_plan, out_keep = rs.stages[1].einsum_plan()
+    acc_block = rs.acc_block                            # (bq, hd)
+    vd = rs.ins[3].block[-1]
+
+    def body(*refs):
+        o_ref = refs[ni]
+        acc_ref = refs[ni + 1]
+        qi = pl.program_id(row_dim)
+        ki = pl.program_id(stream_dim)
+
+        @pl.when(ki == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        admit = (jnp.logical_and(ki * bk < prefix_len, qi * bq < prefix_len)
+                 if prefix_len else None)
+        run = True
+        if causal:
+            run = ki * bk <= qi * bq + bq - 1
+            if admit is not None:
+                run = jnp.logical_or(run, admit)
+        if window:
+            below = ki * bk + bk - 1 > qi * bq - window
+            if admit is not None:
+                below = jnp.logical_or(below, admit)
+            run = jnp.logical_and(run, below)
+        if masked_pad:
+            run = jnp.logical_and(run, ki * bk < logical_stream)
+
+        @pl.when(run)
+        def _step():
+            q, k = (refs[i][...].reshape(
+                tuple(opn.block[d] for d in keep))
+                for i, (opn, keep) in enumerate(zip(rs.ins[:2], scores_keep)))
+            s = jnp.einsum(scores_plan, q, k,
+                           preferred_element_type=jnp.float32) * scale
+            need_mask = causal or masked_pad
+            if need_mask:
+                qpos = qi * bq + jax.lax.broadcasted_iota(
+                    jnp.int32, (bq, bk), 0)
+                kpos = ki * bk + jax.lax.broadcasted_iota(
+                    jnp.int32, (bq, bk), 1)
+                mask = jnp.ones((bq, bk), bool)
+                if causal:
+                    mask = kpos <= qpos
+                    if window:
+                        mask = jnp.logical_and(mask, kpos > qpos - window)
+                    if prefix_len:
+                        mask = jnp.logical_or(
+                            mask, jnp.logical_and(qpos < prefix_len,
+                                                  kpos < prefix_len))
+                if masked_pad:
+                    mask = jnp.logical_and(mask, kpos < logical_stream)
+                s = jnp.where(mask, s, NEG_INF)
+            mv = refs[5][...].reshape((bq,))
+            lv = refs[6][...].reshape((bq,))
+            dl = refs[7][...].reshape((bq,))
+            lse = mv + jnp.log(jnp.maximum(lv, 1e-30))
+            p = jnp.exp(s - lse[:, None])
+            do = refs[3][...].reshape((bq, vd)).astype(jnp.float32)
+            vb = refs[4][...].reshape((bk, vd)).astype(jnp.float32)
+            dp = jnp.einsum("ad,bd->ab", do, vb,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - dl[:, None])
+            k2 = refs[2][...].reshape(
+                tuple(rs.ins[2].block[d] for d in out_keep[1])
+                ).astype(jnp.float32)
+            acc_ref[...] += jnp.einsum(
+                out_plan, ds, k2,
+                preferred_element_type=jnp.float32).reshape(acc_block)
+
+        @pl.when(ki == nk - 1)
+        def _flush():
+            o_ref[...] = (acc_ref[...] * scale).astype(out_dtype).reshape(
+                rs.out.block)
+
+    scratch = [pltpu.VMEM(acc_block, jnp.float32)]
+    return body, scratch
+
+
+def _flash_dkv_kind(rs: StreamingSchedule, *, scale, causal, logical_stream,
+                    out_dtype):
+    """Flash backward dK/dV: the *transposed* weld — rows are key
+    positions, the stream is query positions.  Each streamed step
+    recomputes the transposed score block, reconstructs ``p``, contracts
+    ``dSᵀ . Q`` into the dK accumulator (the main output) and folds
+    ``pᵀ . dO`` into the carried dV, exported per row block.  The
+    block-skip conditions mirror the forward's with the roles swapped, and
+    padded query positions are always masked (their saved statistics can
+    be degenerate).  Operand order: (K, Q, Q2, dO, V, M, L, D)."""
+    ni = len(rs.ins)
+    bj, bi = rs.row_block, rs.stream_block
+    stream_dim = rs.stream_grid_dim
+    nk = rs.grid[stream_dim].extent
+    row_dim = rs.out.grid_dims[rs.out.axes.index(rs.row_axis)]
+    si_pad = nk * bi
+    masked_pad = logical_stream is not None and logical_stream < si_pad
+    window, prefix_len = rs.window, rs.prefix_len
+    if (window or prefix_len) and not causal:
+        raise ValueError(
+            f"window={window} / prefix_len={prefix_len} require causal "
+            "attention (the honor-or-raise contract of _chunk_mask)")
+    scores_plan, scores_keep = rs.stages[0].einsum_plan()
+    out_plan, out_keep = rs.stages[1].einsum_plan()
+    acc_block = rs.acc_block                            # (bj, hd)
+    dv_block = rs.state_blocks()[0]                     # (bj, vd)
+    vd = rs.ins[3].block[-1]
+
+    def body(*refs):
+        o_ref, dv_out = refs[ni], refs[ni + 1]
+        dk_ref, dv_ref = refs[ni + 2], refs[ni + 3]
+        ji = pl.program_id(row_dim)
+        ki = pl.program_id(stream_dim)
+
+        @pl.when(ki == 0)
+        def _init():
+            dk_ref[...] = jnp.zeros_like(dk_ref)
+            dv_ref[...] = jnp.zeros_like(dv_ref)
+
+        admit = (jnp.logical_and(ji * bj < prefix_len, ki * bi < prefix_len)
+                 if prefix_len else None)
+        run = True
+        if causal:
+            run = ji * bj <= ki * bi + bi - 1
+            if admit is not None:
+                run = jnp.logical_or(run, admit)
+        if window:
+            below = ji * bj + bj - 1 > ki * bi - window
+            if admit is not None:
+                below = jnp.logical_or(below, admit)
+            run = jnp.logical_and(run, below)
+        if masked_pad:
+            run = jnp.logical_and(run, ki * bi < logical_stream)
+
+        @pl.when(run)
+        def _step():
+            k, qb = (refs[i][...].reshape(
+                tuple(opn.block[d] for d in keep))
+                for i, (opn, keep) in enumerate(zip(rs.ins[:2], scores_keep)))
+            s = jnp.einsum(scores_plan, k, qb,
+                           preferred_element_type=jnp.float32) * scale
+            need_mask = causal or masked_pad
+            if need_mask:
+                kpos = ji * bj + jax.lax.broadcasted_iota(
+                    jnp.int32, (bj, bi), 0)
+                qpos = ki * bi + jax.lax.broadcasted_iota(
+                    jnp.int32, (bj, bi), 1)
+                mask = jnp.ones((bj, bi), bool)
+                if causal:
+                    mask = kpos <= qpos
+                    if window:
+                        mask = jnp.logical_and(mask, kpos > qpos - window)
+                    if prefix_len:
+                        mask = jnp.logical_or(
+                            mask, jnp.logical_and(qpos < prefix_len,
+                                                  kpos < prefix_len))
+                if masked_pad:
+                    mask = jnp.logical_and(mask, qpos < logical_stream)
+                s = jnp.where(mask, s, NEG_INF)
+            mv = refs[5][...].reshape((bi,))
+            lv = refs[6][...].reshape((bi,))
+            dl = refs[7][...].reshape((bi,))
+            lse = mv + jnp.log(jnp.maximum(lv, 1e-30))
+            p = jnp.exp(s - lse[None, :])               # (bj, bi)
+            do = refs[3][...].reshape((bi, vd)).astype(jnp.float32)
+            vb = refs[4][...].reshape((bj, vd)).astype(jnp.float32)
+            dp = jnp.einsum("ad,bd->ba", do, vb,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - dl[None, :])
+            q2 = refs[2][...].reshape(
+                tuple(rs.ins[2].block[d] for d in out_keep[1])
+                ).astype(jnp.float32)
+            dk_ref[...] += jnp.einsum(
+                out_plan, ds, q2,
+                preferred_element_type=jnp.float32).reshape(acc_block)
+            dv_ref[...] += jnp.einsum(
+                "ab,bd->ad", p, do,
+                preferred_element_type=jnp.float32).reshape(dv_block)
+
+        @pl.when(ki == nk - 1)
+        def _flush():
+            o_ref[...] = (dk_ref[...] * scale).astype(out_dtype).reshape(
+                rs.out.block)
+            dv_out[...] = dv_ref[...].reshape(rs.state_outs[0].block)
+
+    scratch = [pltpu.VMEM(acc_block, jnp.float32),
+               pltpu.VMEM(dv_block, jnp.float32)]
+    return body, scratch
+
+
+def _ssd_backward_kind(rs: StreamingSchedule, *, scale, causal,
+                       logical_stream, out_dtype):
+    """The SSD backward monoid over *reversed* chunks (the ops layer flips
+    the chunk axis): the carried state is the inter-chunk cotangent ``dh``,
+    seeded from the final-state cotangent ``dHf`` at step 0.  Each streamed
+    step replays the forward chunk factoring — same einsums, same order —
+    from the saved state checkpoint ``Hin``, then chains every cotangent:
+    ``dX`` is the main output, ``dB``/``dC``/``ddA`` export per step,
+    ``dh`` steps backward and flushes as ``dh0``.  Operand order:
+    (C, B, dY, X, dA, Hin, dHf); outputs (dX, dh0, dB, dC, ddA)."""
+    ni = len(rs.ins)
+    stream_dim = rs.stream_grid_dim
+    nk = rs.grid[stream_dim].extent
+    scores_plan, _ = rs.stages[0].einsum_plan()         # "in,jn->ij"
+    ctx_plan, _ = rs.stages[1].einsum_plan()            # "hij,ihp->jhp"
+    c_cell = _cell_shape(rs.ins[0])                     # (q, n)
+    b_cell = _cell_shape(rs.ins[1])                     # (q, n)
+    dy_cell = _cell_shape(rs.ins[2])                    # (q, h, p)
+    x_cell = _cell_shape(rs.ins[3])                     # (q, h, p)
+    da_cell = _cell_shape(rs.ins[4])                    # (q, h)
+    h_cell = _cell_shape(rs.ins[5])                     # (h, p, n)
+    q, hdim = da_cell
+
+    def body(*refs):
+        dx_ref = refs[ni]
+        dh0_ref, db_ref, dc_ref, dda_ref = refs[ni + 1:ni + 5]
+        dh_ref = refs[ni + 5]
+        ki = pl.program_id(stream_dim)
+
+        @pl.when(ki == 0)
+        def _init():
+            dh_ref[...] = refs[6][...].reshape(h_cell)
+
+        Cb = refs[0][...].reshape(c_cell).astype(jnp.float32)
+        Bb = refs[1][...].reshape(b_cell).astype(jnp.float32)
+        dYb = refs[2][...].reshape(dy_cell).astype(jnp.float32)
+        Xb = refs[3][...].reshape(x_cell).astype(jnp.float32)
+        dAb = refs[4][...].reshape(da_cell).astype(jnp.float32)
+        Hc = refs[5][...].reshape(h_cell).astype(jnp.float32)
+        dh = dh_ref[...]
+
+        # replay the forward chunk factoring (identical order of ops)
+        csh = jnp.transpose(jnp.cumsum(dAb, axis=0))        # (h, i)
+        seg = csh[:, :, None] - csh[:, None, :]
+        tril = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
+            jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+        L = jnp.exp(jnp.where(tril[None], seg, NEG_INF))    # (h, i, j)
+        G = jnp.einsum(scores_plan, Cb, Bb,
+                       preferred_element_type=jnp.float32)
+        P = G[None] * L
+        in_decay = jnp.exp(csh)                             # (h, i)
+        t_off = jnp.einsum("in,hpn->ihp", Cb, Hc,
+                           preferred_element_type=jnp.float32)
+        total = csh[:, -1]                                  # (h,)
+        decay_states = jnp.exp(total[:, None] - csh)        # (h, j)
+        Xd = Xb * jnp.transpose(decay_states)[:, :, None]   # (j, h, p)
+
+        # chain the cotangents back through the factoring
+        dtotal = jnp.einsum("hpn,hpn->h", dh, Hc,
+                            preferred_element_type=jnp.float32) * \
+            jnp.exp(total)
+        dh_prev = jnp.exp(total)[:, None, None] * dh
+        dBb = jnp.einsum("hpn,jhp->jn", dh, Xd,
+                         preferred_element_type=jnp.float32)
+        dXd = jnp.einsum("jn,hpn->jhp", Bb, dh,
+                         preferred_element_type=jnp.float32)
+        dXb = dXd * jnp.transpose(decay_states)[:, :, None]
+        ddec = jnp.einsum("jhp,jhp->hj", dXd, Xb,
+                          preferred_element_type=jnp.float32)
+        dtotal = dtotal + jnp.sum(ddec * decay_states, axis=1)
+        dcsh = -(ddec * decay_states)                       # (h, j)
+        dt_off = dYb * jnp.transpose(in_decay)[:, :, None]  # (i, h, p)
+        din_decay = jnp.transpose(jnp.sum(dYb * t_off, axis=-1))  # (h, i)
+        dcsh = dcsh + din_decay * in_decay
+        dCb = jnp.einsum("ihp,hpn->in", dt_off, Hc,
+                         preferred_element_type=jnp.float32)
+        dh_prev = dh_prev + jnp.einsum("in,ihp->hpn", Cb, dt_off,
+                                       preferred_element_type=jnp.float32)
+        dP = jnp.einsum("ihp,jhp->hij", dYb, Xb,
+                        preferred_element_type=jnp.float32)
+        dXb = dXb + jnp.einsum(ctx_plan, P, dYb,
+                               preferred_element_type=jnp.float32)
+        dG = jnp.sum(dP * L, axis=0)                        # (i, j)
+        dL = dP * G[None]
+        dseg = jnp.where(tril[None], dL * L, 0.0)
+        dcsh = dcsh + dseg.sum(axis=2) - dseg.sum(axis=1)
+        dCb = dCb + jnp.einsum("ij,jn->in", dG, Bb,
+                               preferred_element_type=jnp.float32)
+        dBb = dBb + jnp.einsum("ij,in->jn", dG, Cb,
+                               preferred_element_type=jnp.float32)
+        last = jax.lax.broadcasted_iota(jnp.int32, (hdim, q), 1) == q - 1
+        dcsh = dcsh + jnp.where(last, dtotal[:, None], 0.0)
+        ddAb = jnp.transpose(jnp.flip(
+            jnp.cumsum(jnp.flip(dcsh, axis=1), axis=1), axis=1))   # (j, h)
+
+        dx_ref[...] = dXb.astype(out_dtype).reshape(rs.out.block)
+        db_ref[...] = dBb.reshape(rs.state_outs[1].block)
+        dc_ref[...] = dCb.reshape(rs.state_outs[2].block)
+        dda_ref[...] = ddAb.reshape(rs.state_outs[3].block)
+        dh_ref[...] = dh_prev
+
+        @pl.when(ki == nk - 1)
+        def _flush():
+            dh0_ref[...] = dh_ref[...].reshape(rs.state_outs[0].block)
+
+    scratch = [pltpu.VMEM(h_cell, jnp.float32)]
+    return body, scratch
+
+
 #: the carried-state monoid registry: ``expr.StateSpec.kind`` -> body
 #: builder.  New recurrences (flash backward, windowed streams) register
-#: here instead of growing their own emitters.
+#: here instead of growing their own emitters.  ``gated_backward`` IS the
+#: forward ``gated`` body — the reversed cotangent recurrence is itself a
+#: gated scan on flipped operands (the ops layer does the flip/shift).
 RECURRENCE_KINDS: dict[str, Callable] = {
     "online_softmax": _softmax_kind,
     "ssd": _ssd_kind,
     "gated": _gated_kind,
+    "flash_dq": _flash_dq_kind,
+    "flash_dkv": _flash_dkv_kind,
+    "ssd_backward": _ssd_backward_kind,
+    "gated_backward": _gated_kind,
 }
 
 
@@ -563,7 +911,8 @@ def emit_bundle(bundle: ScheduleBundle, *, out_dtype=None,
     is only raised when padding is actually required.
     """
     sch = bundle.schedule
-    kern = emit_pallas(sch, out_dtype=out_dtype, interpret=interpret)
+    kern = emit_pallas(sch, out_dtype=out_dtype, interpret=interpret,
+                       acc_dtype=getattr(bundle, "acc_dtype", "float32"))
 
     prep, needs_pad = [], False
     for spec, logical in zip(sch.ins, bundle.in_shapes):

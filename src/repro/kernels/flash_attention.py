@@ -67,6 +67,67 @@ def _executor(b: int, hkv: int, g: int, sq: int, sk: int, hd: int, vd: int,
                                          interpret=interpret))
 
 
+@functools.lru_cache(maxsize=256)
+def _stats_executor(b: int, hkv: int, g: int, sq: int, sk: int, hd: int,
+                    vd: int, dtype_s: str, out_dtype_s: str, hw_name: str,
+                    interpret: bool, causal: bool, scale: float, blocks,
+                    window: int = 0, prefix_len: int = 0):
+    """Forward executor that additionally exports the carried online-softmax
+    ``(m, l)`` statistics (the ``flash_attention_stats`` form) — the backward
+    residuals, so the derived dQ/dK/dV kernels can reconstruct ``p`` without
+    a jnp oracle recompute.  Same derivation, same ``(bq, bk)`` solve as the
+    plain forward (the state kind is still ``online_softmax``).  Returns
+    ``(out (b,hkv,g,sq,vd), m, l)`` with m/l f32 on the *padded* row axis."""
+    bundle = _sched.get_schedule(
+        E.attention_stats_form(b, hkv, g, sq, sk, hd, vd, window=window,
+                               prefix_len=prefix_len),
+        dtype=dtype_s, hardware=get_entry(hw_name), blocks=blocks)
+    return jax.jit(emit_streaming_bundle(bundle, scale=scale, causal=causal,
+                                         out_dtype=out_dtype_s,
+                                         interpret=interpret))
+
+
+@functools.lru_cache(maxsize=256)
+def _dq_executor(b: int, hkv: int, g: int, sq: int, sk: int, hd: int,
+                 vd: int, dtype_s: str, hw_name: str, interpret: bool,
+                 causal: bool, scale: float, blocks, window: int = 0,
+                 prefix_len: int = 0):
+    """Derived flash-backward dQ executor (``flash_dq`` kind): streams key
+    blocks with a carried f32 dq accumulator, binding
+    ``(q, k, k, do, v, m, l, delta)`` in stored layouts (k appears twice —
+    once per contraction stage of the lifted form).  ``blocks`` must be the
+    forward's ``(bq, bk)`` so the saved padded-row m/l line up.  Returns
+    ``dq (b, hkv, g, sq, hd)`` f32."""
+    bundle = _sched.get_schedule(
+        E.attention_dq_form(b, hkv, g, sq, sk, hd, vd, window=window,
+                            prefix_len=prefix_len),
+        dtype=dtype_s, hardware=get_entry(hw_name), blocks=blocks)
+    return jax.jit(emit_streaming_bundle(bundle, scale=scale, causal=causal,
+                                         out_dtype="float32",
+                                         interpret=interpret))
+
+
+@functools.lru_cache(maxsize=256)
+def _dkv_executor(b: int, hkv: int, g: int, sq: int, sk: int, hd: int,
+                  vd: int, dtype_s: str, hw_name: str, interpret: bool,
+                  causal: bool, scale: float, blocks, window: int = 0,
+                  prefix_len: int = 0):
+    """Derived flash-backward dK/dV executor (``flash_dkv`` kind): the
+    transposed weld — rows are *key* blocks, the streamed axis is the
+    query axis — with carried dk accumulator plus an exported dv state.
+    Binds ``(k, q, q, do, v, m, l, delta)``; ``blocks`` must be the
+    forward's ``(bk, bq)`` (row gets the key block, stream the query
+    block).  Returns ``(dk (b,hkv,g,sk,hd), dv (b,hkv,g,sk_pad,vd))``,
+    dv unsliced on the padded key axis (exports pass through padded)."""
+    bundle = _sched.get_schedule(
+        E.attention_dkv_form(b, hkv, g, sq, sk, hd, vd, window=window,
+                             prefix_len=prefix_len),
+        dtype=dtype_s, hardware=get_entry(hw_name), blocks=blocks)
+    return jax.jit(emit_streaming_bundle(bundle, scale=scale, causal=causal,
+                                         out_dtype="float32",
+                                         interpret=interpret))
+
+
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     scale: float, causal: bool = True,
                     block_q: Optional[int] = None,

@@ -96,18 +96,20 @@ def _cache_get(key):
 
 
 def _expr_callable(expr: "E.Expr", dtype_s: str, out_dtype_s: str,
-                   hw_name: str, interpret: bool, blocks=None):
+                   hw_name: str, interpret: bool, blocks=None,
+                   acc_dtype: str = "float32"):
     """The memoized executable for one normal form: pad operands to the
     schedule's storage shapes (with the semiring's inert element), run the
     emitted kernel, slice the logical result back out (``emit_bundle``)."""
     nf = expr if isinstance(expr, E.NormalForm) else E.normal_form(expr)
     key = (nf.key(), dtype_s, out_dtype_s, hw_name, interpret,
-           _block_key(blocks))
+           _block_key(blocks), acc_dtype)
     fn = _cache_get(key)
     if fn is not None:
         return fn
     bundle = _sched.get_schedule(nf, dtype=dtype_s,
-                                 hardware=get_entry(hw_name), blocks=blocks)
+                                 hardware=get_entry(hw_name), blocks=blocks,
+                                 acc_dtype=acc_dtype)
     call = jax.jit(emit_bundle(bundle, out_dtype=out_dtype_s,
                                interpret=interpret))
     return _cache_put(key, call)
@@ -145,7 +147,8 @@ def apply(expr: "E.Expr", *arrays: jax.Array, out_dtype=None,
           interpret: Optional[bool] = None,
           hardware: Optional[HardwareEntry] = None,
           blocks=None, mesh=None, shard: Optional[dict] = None,
-          replicate_out: bool = False) -> jax.Array:
+          replicate_out: bool = False,
+          acc_dtype: str = "float32") -> jax.Array:
     """Evaluate a composed MoA expression — the public derived-kernel entry.
 
     ``arrays`` bind the expression's leaves in composition order by their
@@ -182,13 +185,17 @@ def apply(expr: "E.Expr", *arrays: jax.Array, out_dtype=None,
             raise ValueError(
                 "apply(mesh=...) derives per-shard blocks from the plan; "
                 "pinning blocks= is not supported on the sharded path")
+        if acc_dtype != "float32":
+            raise ValueError("acc_dtype is not yet threaded through the "
+                             "sharded path; use the single-chip entry")
         fn = _sharded_callable(nf, str(jnp.dtype(arrays[0].dtype)),
                                str(out_dtype), hw.name, interp, use_kernel,
                                mesh, shard or {}, replicate_out)
         return fn(*arrays)
     if use_kernel:
         fn = _expr_callable(nf, str(jnp.dtype(arrays[0].dtype)),
-                            str(out_dtype), hw.name, interp, blocks)
+                            str(out_dtype), hw.name, interp, blocks,
+                            acc_dtype=acc_dtype)
         return fn(*arrays)
     return ref.eval_expr(expr, *arrays).astype(out_dtype)
 
@@ -539,20 +546,66 @@ def _flash_grouped(q, k, v, scale, causal, window, prefix_len, hw_name,
 
 def _flash_grouped_fwd(q, k, v, scale, causal, window, prefix_len, hw_name,
                        interpret, blocks):
-    return _flash_grouped(q, k, v, scale, causal, window, prefix_len,
-                          hw_name, interpret, blocks), (q, k, v)
+    """Forward rule under differentiation: the ``flash_attention_stats``
+    derivation — the same schedule as the primal (identical output, bit for
+    bit) but with the carried online-softmax ``(m, l)`` statistics exported
+    as extra state outputs.  Residuals are ``(q, k, v, out, m, l)``: the
+    flash-backward recurrences reconstruct the probabilities from the saved
+    statistics, so no jnp oracle recompute appears in the backward jaxpr."""
+    from repro.kernels import flash_attention as fa
+    b, sq, kv, g, hd = q.shape
+    sk, vd = k.shape[1], v.shape[-1]
+    fn = fa._stats_executor(b, kv, g, sq, sk, hd, vd, str(jnp.dtype(q.dtype)),
+                            str(jnp.dtype(q.dtype)), hw_name, interpret,
+                            causal, scale, blocks, window, prefix_len)
+    out5, m, l = fn(q, k, v)                        # out (b, kv, g, sq, vd)
+    out = out5.transpose(0, 3, 1, 2, 4).reshape(b, sq, kv * g, vd)
+    return out, (q, k, v, out5, m, l)
 
 
 def _flash_grouped_bwd(scale, causal, window, prefix_len, hw_name, interpret,
                        blocks, resid, g_out):
-    """Flash-style backward: recompute through the online-softmax oracle
-    (identical semantics, O(chunk) memory) instead of saving probabilities."""
-    q, k, v = resid
-    _, vjp = jax.vjp(
-        lambda qq, kk, vv: _oracle_attention(qq, kk, vv, scale, causal,
-                                             window, prefix_len),
-        q, k, v)
-    return vjp(g_out)
+    """Derived flash backward: two recurrence kinds from the same lifted
+    pipeline as the forward.  ``flash_dq`` streams key blocks with a carried
+    dq accumulator; ``flash_dkv`` is the transposed weld — key rows, query
+    stream — carrying dk with an exported dv state.  Both reuse the saved
+    ``(m, l)`` row statistics; ``delta = rowsum(dO * O)`` is the one jnp
+    reduction (a residual contraction, not a recompute).  Blocks are read
+    from the forward's cached derivation so the padded row axes line up."""
+    from repro.kernels import flash_attention as fa
+    q, k, v, out5, m, l = resid
+    b, sq, kv, g, hd = q.shape
+    sk, vd = k.shape[1], v.shape[-1]
+    dtype_s = str(jnp.dtype(q.dtype))
+    do = g_out.reshape(b, sq, kv, g, vd)            # stored dO layout
+    do5 = do.transpose(0, 2, 3, 1, 4)               # (b, kv, g, sq, vd)
+    delta = jnp.sum(do5.astype(jnp.float32) * out5.astype(jnp.float32),
+                    axis=-1)                        # (b, kv, g, sq)
+    fwd_blocks = fa.attention_bundle(
+        b, kv, g, sq, sk, hd, vd, dtype=dtype_s,
+        hardware=get_entry(hw_name), blocks=blocks, window=window,
+        prefix_len=prefix_len).blocks
+    bq, bk = fwd_blocks.as_tuple()
+    # pass StreamBlockChoice objects, not tuples: the forward's solved
+    # blocks may exceed the logical extents (tiny sequences), and the
+    # saved (m, l) ride the *forward's* padded row axis — the tuple path
+    # would clamp and disagree with the residual padding
+    from repro.core.blocking import StreamBlockChoice
+    dkv_blocks = StreamBlockChoice(bk, bq, 0, 0.0, 1.0)
+    dq_fn = fa._dq_executor(b, kv, g, sq, sk, hd, vd, dtype_s, hw_name,
+                            interpret, causal, scale, fwd_blocks, window,
+                            prefix_len)
+    dq5 = dq_fn(q, k, k, do, v, m, l, delta)        # (b, kv, g, sq, hd)
+    dkv_fn = fa._dkv_executor(b, kv, g, sq, sk, hd, vd, dtype_s, hw_name,
+                              interpret, causal, scale, dkv_blocks, window,
+                              prefix_len)
+    dk5, dv5 = dkv_fn(k, q, q, do, v, m, l, delta)  # dk (b,kv,g,sk,hd)
+    dq = dq5.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+    # per-group dk/dv; the GQA reduction over g is a residual sum (K/V's
+    # zero group coefficient in the forward becomes a sum in the cotangent)
+    dk = dk5.sum(axis=2).transpose(0, 2, 1, 3).astype(k.dtype)
+    dv = dv5[:, :, :, :sk].sum(axis=2).transpose(0, 2, 1, 3).astype(v.dtype)
+    return dq, dk, dv
 
 
 _flash_grouped.defvjp(_flash_grouped_fwd, _flash_grouped_bwd)
@@ -573,9 +626,12 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, scale: float,
     pad/slice contract: any sequence length works — operands are padded to
     the solver's ``(bq, bk)`` multiples, padded keys are masked inert by
     the kernel's ``kpos < sk`` guard, and the logical result is sliced
-    back.  Differentiable: the backward pass recomputes through the
-    chunked online-softmax oracle.  On "xla" entries the same oracle is
-    the forward path, so semantics are identical everywhere.
+    back.  Differentiable with a fully *derived* VJP: the forward saves
+    the (m, l) statistics (``attention_stats_form``) and the backward runs
+    the ``flash_dq``/``flash_dkv`` recurrence kinds — no oracle recompute
+    appears in a train step's jaxpr.  On "xla" entries the jnp oracle is
+    the forward path (and differentiates through itself), so semantics
+    are identical everywhere.
 
     ``window``/``prefix_len`` (causal only — the honor-or-raise contract of
     ``_chunk_mask``) derive windowed / prefix-LM schedules: the masking
@@ -600,8 +656,10 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, scale: float,
 # through the same derived-schedule pipeline (expr.RecurrentForm ->
 # derive_recurrent_schedule -> emit_recurrent), with the ops-level contract:
 # pad/reshape the sequence into the derived chunks (padded tokens are the
-# monoid's identity step), differentiable via the chunked-jnp oracle VJP,
-# "xla" entries dispatch to the oracle directly.
+# monoid's identity step), differentiable via derived backward kernels (the
+# ssd_backward / gated_backward recurrence kinds — the jnp oracles survive
+# only as bit-identity references), "xla" entries dispatch to the oracle
+# directly.
 # ---------------------------------------------------------------------------
 
 def default_ssd_chunk(s: int, h: int, p: int, n: int, dtype="float32",
@@ -683,18 +741,90 @@ def _ssd_kernel(xdt, dA, B, C, h0, chunk, hw_name, interpret):
     return y.reshape(b, sp, h, p)[:, :s], final
 
 
+@functools.lru_cache(maxsize=128)
+def _ssd_chk_executor(b, nc, q, h, p, n, dtype_s, hw_name, interpret):
+    """Forward executor under differentiation: the same ``ssd`` monoid with
+    the per-chunk *entering* states additionally exported (``h_in (b, nc,
+    h, p, n)``) — the O(S/chunk) checkpoints the backward scan replays
+    from.  Returns ``(y, final_state, h_in)``."""
+    from repro.kernels.emit import emit_recurrent_bundle
+    form = E.ssd_chk_form(b, nc, q, h, p, n)
+    bundle = _sched.get_schedule(form, dtype=dtype_s,
+                                 hardware=get_entry(hw_name), blocks=(q,))
+    return jax.jit(emit_recurrent_bundle(bundle, out_dtype="float32",
+                                         interpret=interpret))
+
+
+@functools.lru_cache(maxsize=128)
+def _ssd_bwd_executor(b, nc, q, h, p, n, dtype_s, hw_name, interpret):
+    """The ``ssd_backward`` recurrence: streams chunks in *reverse* (the
+    caller flips the chunk axis) carrying the state cotangent dh, replays
+    each chunk's forward factoring from the saved entering state, and emits
+    the full cotangent chain per chunk.  Operand order
+    ``(C, B, dY, X, dA, Hin, dHf)``; returns ``(dX, dh0, dB, dC, ddA)``."""
+    from repro.kernels.emit import emit_recurrent_bundle
+    form = E.ssd_bwd_form(b, nc, q, h, p, n)
+    bundle = _sched.get_schedule(form, dtype=dtype_s,
+                                 hardware=get_entry(hw_name), blocks=(q,))
+    return jax.jit(emit_recurrent_bundle(bundle, out_dtype="float32",
+                                         interpret=interpret))
+
+
 def _ssd_kernel_fwd(xdt, dA, B, C, h0, chunk, hw_name, interpret):
-    return _ssd_kernel(xdt, dA, B, C, h0, chunk, hw_name, interpret), \
-        (xdt, dA, B, C, h0)
+    b, s, h, p = xdt.shape
+    n = B.shape[-1]
+    pad = (-s) % chunk
+    sp = s + pad
+    nc = sp // chunk
+    xp = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else xdt
+    dp = jnp.pad(dA, ((0, 0), (0, pad), (0, 0))) if pad else dA
+    Bp = jnp.pad(B, ((0, 0), (0, pad), (0, 0))) if pad else B
+    Cp = jnp.pad(C, ((0, 0), (0, pad), (0, 0))) if pad else C
+    fn = _ssd_chk_executor(b, nc, chunk, h, p, n, str(jnp.dtype(xdt.dtype)),
+                           hw_name, interpret)
+    y, final, hin = fn(Cp.reshape(b, nc, chunk, n),
+                       Bp.reshape(b, nc, chunk, n),
+                       xp.reshape(b, nc, chunk, h, p),
+                       dp.reshape(b, nc, chunk, h), h0)
+    return (y.reshape(b, sp, h, p)[:, :s], final), (xdt, dA, B, C, hin)
 
 
 def _ssd_kernel_bwd(chunk, hw_name, interpret, resid, g):
-    """Scan-style backward: recompute through the chunked-jnp oracle —
-    identical semantics per chunk, O(chunk) live intermediates."""
-    xdt, dA, B, C, h0 = resid
-    _, vjp = jax.vjp(
-        lambda *a: _ssd_oracle(*a, chunk), xdt, dA, B, C, h0)
-    return vjp(g)
+    """Derived scan backward: the ``ssd_backward`` recurrence streamed over
+    *time-reversed* chunks, seeded with the final-state cotangent.  Each
+    step replays the chunk's forward factoring from the saved entering
+    state ``h_in`` (same O(chunk) live intermediates as the old oracle
+    recompute, but as a derived kernel) and chains the cotangents; the
+    carried dh after the last (earliest) chunk is dh0."""
+    xdt, dA, B, C, hin = resid
+    gy, gfinal = g
+    b, s, h, p = xdt.shape
+    n = B.shape[-1]
+    pad = (-s) % chunk
+    sp = s + pad
+    nc = sp // chunk
+    xp = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else xdt
+    dp = jnp.pad(dA, ((0, 0), (0, pad), (0, 0))) if pad else dA
+    Bp = jnp.pad(B, ((0, 0), (0, pad), (0, 0))) if pad else B
+    Cp = jnp.pad(C, ((0, 0), (0, pad), (0, 0))) if pad else C
+    gyp = jnp.pad(gy, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else gy
+
+    def rev(a):
+        return jnp.flip(a, axis=1)
+
+    fn = _ssd_bwd_executor(b, nc, chunk, h, p, n, str(jnp.dtype(xdt.dtype)),
+                           hw_name, interpret)
+    dX, dh0, dB, dC, ddA = fn(rev(Cp.reshape(b, nc, chunk, n)),
+                              rev(Bp.reshape(b, nc, chunk, n)),
+                              rev(gyp.reshape(b, nc, chunk, h, p)),
+                              rev(xp.reshape(b, nc, chunk, h, p)),
+                              rev(dp.reshape(b, nc, chunk, h)),
+                              rev(hin), gfinal)
+    dxdt = rev(dX).reshape(b, sp, h, p)[:, :s].astype(xdt.dtype)
+    dBv = rev(dB).reshape(b, sp, n)[:, :s].astype(B.dtype)
+    dCv = rev(dC).reshape(b, sp, n)[:, :s].astype(C.dtype)
+    ddAv = rev(ddA).reshape(b, sp, h)[:, :s].astype(dA.dtype)
+    return dxdt, ddAv, dBv, dCv, dh0
 
 
 _ssd_kernel.defvjp(_ssd_kernel_fwd, _ssd_kernel_bwd)
@@ -716,9 +846,12 @@ def scan_ssd(xdt: jax.Array, dA: jax.Array, B: jax.Array, C: jax.Array, *,
     from the *derived* recurrent schedule (``expr.ssd_form`` — the chunk
     from ``solve_recurrence_blocks`` unless pinned), with the ops-level
     pad/slice contract: any sequence length works, padded tokens are the
-    monoid's identity step.  Differentiable: the backward pass recomputes
-    through the chunked-jnp oracle.  On "xla" entries the same oracle is
-    the forward path, so semantics are identical everywhere.
+    monoid's identity step.  Differentiable with a fully *derived* VJP:
+    the forward checkpoints the per-chunk entering states
+    (``ssd_chk_form``) and the backward streams the chunks in reverse
+    through the ``ssd_backward`` recurrence kind — no oracle recompute.
+    On "xla" entries the jnp oracle is the forward path (and
+    differentiates through itself), so semantics are identical everywhere.
     """
     hw, interp = _resolve(hardware, interpret)
     b, s, h, p = xdt.shape
@@ -767,15 +900,59 @@ def _gated_kernel(log_a, b_in, h0, chunk, hw_name, interpret):
     return hs.reshape(b, sp, w)[:, :s], final
 
 
+@functools.lru_cache(maxsize=128)
+def _gated_bwd_executor(b, nc, q, w, hw_name, interpret):
+    """The degenerate backward kind: the gated-scan cotangent recurrence
+    ``dbar_t = dy_t + a_{t+1} dbar_{t+1}`` *is* a gated scan on
+    time-reversed operands with the gate shifted one step — so the
+    ``gated_backward`` kind reuses the forward kernel body verbatim on a
+    form of its own (its own schedule-cache entry)."""
+    from repro.kernels.emit import emit_recurrent_bundle
+    form = E.rglru_bwd_form(b, nc, q, w)
+    bundle = _sched.get_schedule(form, dtype="float32",
+                                 hardware=get_entry(hw_name), blocks=(q,))
+    return jax.jit(emit_recurrent_bundle(bundle, out_dtype="float32",
+                                         interpret=interpret))
+
+
 def _gated_kernel_fwd(log_a, b_in, h0, chunk, hw_name, interpret):
-    return _gated_kernel(log_a, b_in, h0, chunk, hw_name, interpret), \
-        (log_a, b_in, h0)
+    out = _gated_kernel(log_a, b_in, h0, chunk, hw_name, interpret)
+    return out, (log_a, b_in, h0, out[0])
 
 
 def _gated_kernel_bwd(chunk, hw_name, interpret, resid, g):
-    log_a, b_in, h0 = resid
-    _, vjp = jax.vjp(_gated_oracle, log_a, b_in, h0)
-    return vjp(g)
+    """Derived gated backward: run the ``gated_backward`` recurrence on the
+    flipped, gate-shifted operands to get dbar, then the per-token
+    cotangents are elementwise in the saved forward outputs (no oracle
+    recompute — ``h_{t-1}`` comes from the saved sequence, not a replay)."""
+    log_a, b_in, h0, hs = resid
+    gy, gfin = g
+    b, s, w = log_a.shape
+    la32 = log_a.astype(jnp.float32)
+    dy = gy.astype(jnp.float32).at[:, -1].add(gfin.astype(jnp.float32))
+    la_shift = jnp.concatenate(
+        [la32[:, 1:], jnp.zeros((b, 1, w), jnp.float32)], axis=1)
+    laf = jnp.flip(la_shift, axis=1)
+    dyf = jnp.flip(dy, axis=1)
+    pad = (-s) % chunk
+    sp = s + pad
+    nc = sp // chunk
+    # trailing pads sit *after* t=0 in reversed time: log_a=0 gates by 1,
+    # dy=0 adds nothing, and the padded outputs are sliced away
+    if pad:
+        laf = jnp.pad(laf, ((0, 0), (0, pad), (0, 0)))
+        dyf = jnp.pad(dyf, ((0, 0), (0, pad), (0, 0)))
+    fn = _gated_bwd_executor(b, nc, chunk, w, hw_name, interpret)
+    dbf, _ = fn(laf.reshape(b, nc, chunk, w), dyf.reshape(b, nc, chunk, w),
+                jnp.zeros((b, w), jnp.float32))
+    dbar = jnp.flip(dbf.reshape(b, sp, w)[:, :s], axis=1)
+    a = jnp.exp(la32)
+    h_prev = jnp.concatenate(
+        [h0.astype(jnp.float32)[:, None], hs[:, :-1]], axis=1)
+    dlog_a = (dbar * a * h_prev).astype(log_a.dtype)
+    db = dbar.astype(b_in.dtype)
+    dh0 = a[:, 0] * dbar[:, 0]
+    return dlog_a, db, dh0
 
 
 _gated_kernel.defvjp(_gated_kernel_fwd, _gated_kernel_bwd)
@@ -793,7 +970,9 @@ def gated_scan(log_a: jax.Array, b_in: jax.Array, *,
 
     Same contract as ``scan_ssd``: the derived chunked kernel on Pallas /
     interpret entries (chunk from ``solve_recurrence_blocks``), the
-    log-depth associative-scan oracle on "xla" entries and in the VJP.
+    log-depth associative-scan oracle on "xla" entries only.  The VJP is
+    derived too — the reversed cotangent scan is *itself* a gated scan on
+    flipped, gate-shifted operands (the ``gated_backward`` kind).
     """
     hw, interp = _resolve(hardware, interpret)
     b, s, w = log_a.shape

@@ -240,6 +240,231 @@ def gated_scan_ref(log_a: jax.Array, b_in: jax.Array,
     return hh, hh[:, -1]
 
 
+def gated_chunk_ref(log_a: jax.Array, b_in: jax.Array, h0: jax.Array,
+                    chunk: int) -> tuple[jax.Array, jax.Array]:
+    """Chunked gated-scan mirror of the ``gated`` / ``gated_backward``
+    kernel body (the bit-identity reference): per chunk the same
+    within-chunk associative scan followed by the carry re-base
+    ``hh + aa * h`` — the exact op order of the emitted kernel, so on the
+    same operands the outputs match it bit for bit.  ``s`` must be a
+    multiple of ``chunk``."""
+    b, s, w = log_a.shape
+    nc = s // chunk
+    a = jnp.exp(log_a.astype(jnp.float32)).reshape(b, nc, chunk, w)
+    bb = b_in.astype(jnp.float32).reshape(b, nc, chunk, w)
+
+    def comb(x, y):
+        return (x[0] * y[0], y[0] * x[1] + y[1])
+
+    def step(h, inp):
+        ac, bc = inp
+        aa, hh = jax.lax.associative_scan(comb, (ac, bc), axis=1)
+        hh = hh + aa * h[:, None]
+        return hh[:, -1], hh
+
+    hf, ys = jax.lax.scan(step, h0.astype(jnp.float32),
+                          (a.transpose(1, 0, 2, 3), bb.transpose(1, 0, 2, 3)))
+    return ys.transpose(1, 0, 2, 3).reshape(b, s, w), hf
+
+
+def flash_dq_ref(q: jax.Array, k: jax.Array, v: jax.Array, do: jax.Array,
+                 m: jax.Array, l: jax.Array, delta: jax.Array, *,
+                 scale: float, causal: bool, bq: int, bk: int,
+                 window: int = 0, prefix_len: int = 0,
+                 logical_k: int | None = None) -> jax.Array:
+    """Blocked flash-backward dQ oracle — the ``flash_dq`` monoid's jnp
+    semantics on *padded* grouped layouts ``q/do (b, sqp, kv, g, ·)``,
+    ``k/v (b, skp, kv, ·)``, ``m/l/delta (b, kv, g, sqp)``.
+
+    Mirrors the emitted kernel step for step: the streamed key axis is
+    walked sequentially in the kernel's exact ``bk`` blocks (summation
+    order over the stream is what bit-identity requires — ``p = exp(·)``
+    is irrational even on integer inputs), rows are vectorized (they are
+    grid-parallel cells), and the full positional mask is always applied
+    (a fully-masked block contributes exact zeros, matching the kernel's
+    block-skip).  Returns padded ``dq (b, kv, g, sqp, hd)`` f32."""
+    b, sqp, kv, g, hd = q.shape
+    skp = k.shape[1]
+    neg_inf = jnp.float32(semiring.MASK_NEG_INF)
+    qt = q.transpose(0, 2, 3, 1, 4).astype(jnp.float32)    # (b,h,g,i,c)
+    kt = k.transpose(0, 2, 1, 3).astype(jnp.float32)       # (b,h,j,c)
+    vt = v.transpose(0, 2, 1, 3).astype(jnp.float32)       # (b,h,j,d)
+    dot = do.transpose(0, 2, 3, 1, 4).astype(jnp.float32)  # (b,h,g,i,d)
+    lse = m.astype(jnp.float32) + \
+        jnp.log(jnp.maximum(l.astype(jnp.float32), 1e-30))
+    delta = delta.astype(jnp.float32)
+    lk = skp if logical_k is None else logical_k
+    qpos = jnp.arange(sqp)[:, None]
+    acc = jnp.zeros((b, kv, g, sqp, hd), jnp.float32)
+    for ki in range(skp // bk):
+        kb = kt[:, :, ki * bk:(ki + 1) * bk]
+        vb = vt[:, :, ki * bk:(ki + 1) * bk]
+        s = jnp.einsum("bhgic,bhjc->bhgij", qt, kb,
+                       preferred_element_type=jnp.float32) * scale
+        kpos = ki * bk + jnp.arange(bk)[None, :]
+        mask = jnp.ones((sqp, bk), bool)
+        if causal:
+            mask = kpos <= qpos
+            if window:
+                mask = jnp.logical_and(mask, kpos > qpos - window)
+            if prefix_len:
+                mask = jnp.logical_or(
+                    mask, jnp.logical_and(qpos < prefix_len,
+                                          kpos < prefix_len))
+        if lk < skp:
+            mask = jnp.logical_and(mask, kpos < lk)
+        if causal or lk < skp:
+            s = jnp.where(mask, s, neg_inf)
+        p = jnp.exp(s - lse[..., None])
+        dp = jnp.einsum("bhgid,bhjd->bhgij", dot, vb,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[..., None])
+        acc = acc + jnp.einsum("bhgij,bhjc->bhgic", ds, kb,
+                               preferred_element_type=jnp.float32)
+    return acc * scale
+
+
+def flash_dkv_ref(q: jax.Array, k: jax.Array, v: jax.Array, do: jax.Array,
+                  m: jax.Array, l: jax.Array, delta: jax.Array, *,
+                  scale: float, causal: bool, bj: int, bi: int,
+                  window: int = 0, prefix_len: int = 0,
+                  logical_q: int | None = None
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Blocked flash-backward dK/dV oracle — the transposed weld's jnp
+    semantics (rows = key positions, stream = query positions in ``bi``
+    blocks), mirroring the ``flash_dkv`` kernel's summation order and its
+    always-on padded-query mask.  Returns per-group padded
+    ``(dk (b, kv, g, skp, hd), dv (b, kv, g, skp, vd))`` f32 — the GQA
+    group reduction stays with the caller, as in the kernel path."""
+    b, sqp, kv, g, hd = q.shape
+    skp, vd = k.shape[1], v.shape[-1]
+    neg_inf = jnp.float32(semiring.MASK_NEG_INF)
+    qt = q.transpose(0, 2, 3, 1, 4).astype(jnp.float32)    # (b,h,g,i,c)
+    kt = k.transpose(0, 2, 1, 3).astype(jnp.float32)       # (b,h,j,c)
+    vt = v.transpose(0, 2, 1, 3).astype(jnp.float32)       # (b,h,j,d)
+    dot = do.transpose(0, 2, 3, 1, 4).astype(jnp.float32)  # (b,h,g,i,d)
+    lse = m.astype(jnp.float32) + \
+        jnp.log(jnp.maximum(l.astype(jnp.float32), 1e-30))
+    delta = delta.astype(jnp.float32)
+    lq = sqp if logical_q is None else logical_q
+    kpos = jnp.arange(skp)[:, None]
+    dk = jnp.zeros((b, kv, g, skp, hd), jnp.float32)
+    dv = jnp.zeros((b, kv, g, skp, vd), jnp.float32)
+    for ki in range(sqp // bi):
+        qb = qt[:, :, :, ki * bi:(ki + 1) * bi]
+        dob = dot[:, :, :, ki * bi:(ki + 1) * bi]
+        lseb = lse[..., ki * bi:(ki + 1) * bi]
+        db = delta[..., ki * bi:(ki + 1) * bi]
+        s = jnp.einsum("bhjc,bhgic->bhgji", kt, qb,
+                       preferred_element_type=jnp.float32) * scale
+        qpos = ki * bi + jnp.arange(bi)[None, :]
+        mask = jnp.ones((skp, bi), bool)
+        if causal:
+            mask = kpos <= qpos
+            if window:
+                mask = jnp.logical_and(mask, kpos > qpos - window)
+            if prefix_len:
+                mask = jnp.logical_or(
+                    mask, jnp.logical_and(qpos < prefix_len,
+                                          kpos < prefix_len))
+        if lq < sqp:
+            mask = jnp.logical_and(mask, qpos < lq)
+        if causal or lq < sqp:
+            s = jnp.where(mask, s, neg_inf)
+        p = jnp.exp(s - lseb[:, :, :, None, :])             # (b,h,g,j,bi)
+        dp = jnp.einsum("bhgid,bhjd->bhgji", dob, vt,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - db[:, :, :, None, :])
+        dk = dk + jnp.einsum("bhgji,bhgic->bhgjc", ds, qb,
+                             preferred_element_type=jnp.float32)
+        dv = dv + jnp.einsum("bhgji,bhgid->bhgjd", p, dob,
+                             preferred_element_type=jnp.float32)
+    return dk * scale, dv
+
+
+def ssd_bwd_ref(C: jax.Array, B: jax.Array, dY: jax.Array, X: jax.Array,
+                dA: jax.Array, Hin: jax.Array, dHf: jax.Array
+                ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array,
+                           jax.Array]:
+    """Chunked SSD backward oracle — the ``ssd_backward`` monoid's jnp
+    semantics over kernel-order, *already chunk-reversed* operands
+    ``C/B (b,nc,q,n)``, ``dY/X (b,nc,q,h,p)``, ``dA (b,nc,q,h)``,
+    ``Hin (b,nc,h,p,n)`` (the saved per-chunk state checkpoints, reversed
+    the same way) and ``dHf (b,h,p,n)``.  Mirrors the emitted kernel body
+    einsum for einsum (same replay of the forward factoring, same
+    cotangent chaining order), batched over the leading b.  Returns
+    ``(dX, dh0, dB, dC, ddA)`` f32 in the same reversed chunk order."""
+    b, nc, q, n = C.shape
+    tril = jnp.arange(q)[:, None] >= jnp.arange(q)[None, :]
+    neg_inf = jnp.float32(semiring.MASK_NEG_INF)
+    Cc = C.astype(jnp.float32)
+    Bc = B.astype(jnp.float32)
+    dYc = dY.astype(jnp.float32)
+    Xc = X.astype(jnp.float32)
+    dAc = dA.astype(jnp.float32)
+    Hc_all = Hin.astype(jnp.float32)
+    last = jnp.arange(q)[None, :] == q - 1
+
+    def step(dh, inp):
+        Cb, Bb, dYb, Xb, dAb, Hc = inp
+        csh = jnp.transpose(jnp.cumsum(dAb, axis=1), (0, 2, 1))   # (b,h,i)
+        seg = csh[..., :, None] - csh[..., None, :]
+        L = jnp.exp(jnp.where(tril, seg, neg_inf))
+        G = jnp.einsum("bin,bjn->bij", Cb, Bb,
+                       preferred_element_type=jnp.float32)
+        P = G[:, None] * L
+        in_decay = jnp.exp(csh)
+        t_off = jnp.einsum("bin,bhpn->bihp", Cb, Hc,
+                           preferred_element_type=jnp.float32)
+        total = csh[..., -1]
+        decay_states = jnp.exp(total[..., None] - csh)
+        Xd = Xb * jnp.transpose(decay_states, (0, 2, 1))[..., None]
+        dtotal = jnp.einsum("bhpn,bhpn->bh", dh, Hc,
+                            preferred_element_type=jnp.float32) * \
+            jnp.exp(total)
+        dh_prev = jnp.exp(total)[..., None, None] * dh
+        dBb = jnp.einsum("bhpn,bjhp->bjn", dh, Xd,
+                         preferred_element_type=jnp.float32)
+        dXd = jnp.einsum("bjn,bhpn->bjhp", Bb, dh,
+                         preferred_element_type=jnp.float32)
+        dXb = dXd * jnp.transpose(decay_states, (0, 2, 1))[..., None]
+        ddec = jnp.einsum("bjhp,bjhp->bhj", dXd, Xb,
+                          preferred_element_type=jnp.float32)
+        dtotal = dtotal + jnp.sum(ddec * decay_states, axis=2)
+        dcsh = -(ddec * decay_states)
+        dt_off = dYb * jnp.transpose(in_decay, (0, 2, 1))[..., None]
+        din_decay = jnp.transpose(jnp.sum(dYb * t_off, axis=-1), (0, 2, 1))
+        dcsh = dcsh + din_decay * in_decay
+        dCb = jnp.einsum("bihp,bhpn->bin", dt_off, Hc,
+                         preferred_element_type=jnp.float32)
+        dh_prev = dh_prev + jnp.einsum("bin,bihp->bhpn", Cb, dt_off,
+                                       preferred_element_type=jnp.float32)
+        dP = jnp.einsum("bihp,bjhp->bhij", dYb, Xb,
+                        preferred_element_type=jnp.float32)
+        dXb = dXb + jnp.einsum("bhij,bihp->bjhp", P, dYb,
+                               preferred_element_type=jnp.float32)
+        dG = jnp.sum(dP * L, axis=1)
+        dL = dP * G[:, None]
+        dseg = jnp.where(tril, dL * L, 0.0)
+        dcsh = dcsh + dseg.sum(axis=3) - dseg.sum(axis=2)
+        dCb = dCb + jnp.einsum("bij,bjn->bin", dG, Bb,
+                               preferred_element_type=jnp.float32)
+        dBb = dBb + jnp.einsum("bij,bin->bjn", dG, Cb,
+                               preferred_element_type=jnp.float32)
+        dcsh = dcsh + jnp.where(last, dtotal[..., None], 0.0)
+        ddAb = jnp.transpose(jnp.flip(
+            jnp.cumsum(jnp.flip(dcsh, axis=2), axis=2), axis=2), (0, 2, 1))
+        return dh_prev, (dXb, dBb, dCb, ddAb)
+
+    dh0, (dX, dB, dC, ddA) = jax.lax.scan(
+        step, dHf.astype(jnp.float32),
+        (Cc.transpose(1, 0, 2, 3), Bc.transpose(1, 0, 2, 3),
+         dYc.transpose(1, 0, 2, 3, 4), Xc.transpose(1, 0, 2, 3, 4),
+         dAc.transpose(1, 0, 2, 3), Hc_all.transpose(1, 0, 2, 3, 4)))
+    return (dX.transpose(1, 0, 2, 3, 4), dh0, dB.transpose(1, 0, 2, 3),
+            dC.transpose(1, 0, 2, 3), ddA.transpose(1, 0, 2, 3))
+
+
 def ipophp_ref(a: jax.Array, b: jax.Array, mode: str) -> jax.Array:
     """The unified inner/outer/hadamard/kron operator (paper appendix)."""
     if mode == "ip":

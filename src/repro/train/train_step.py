@@ -51,6 +51,27 @@ def state_logical_axes(state: TrainState, param_axes: dict):
         step=None)
 
 
+def trace_step_jaxpr(cfg: ArchConfig, batch_size: int = 2, seq: int = 32,
+                     microbatches: int = 1):
+    """Abstractly trace one full train step — forward, backward and the
+    optimizer update — and return its closed jaxpr without executing any
+    compute.
+
+    This is the acceptance pin for the fully-derived training path: on a
+    kernel-dispatch hardware entry every custom-VJP backward (flash dQ /
+    dK/dV, the SSD reverse scan, the gated cotangent scan, both GEMM
+    transposes) is itself a derived kernel, so the trace completes even
+    when the jnp oracles (``ops._oracle_attention``, ``_ssd_oracle``,
+    ``_gated_oracle``, ``ref.eval_expr``) are stubbed out to raise — which
+    is exactly what the jaxpr-pin tests do."""
+    from repro.data import PipelineConfig, SyntheticLM
+    state, _ = init_state(cfg, jax.random.PRNGKey(0))
+    data = SyntheticLM(PipelineConfig(cfg.vocab_size, seq, batch_size), cfg)
+    batch = jax.tree.map(jnp.asarray, data.global_batch(0))
+    step = make_train_step(cfg, microbatches=microbatches)
+    return jax.make_jaxpr(step)(state, batch)
+
+
 def make_train_step(cfg: ArchConfig,
                     opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig(),
                     comp: compression.CompressionConfig = compression.CompressionConfig(),

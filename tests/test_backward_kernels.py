@@ -1,0 +1,185 @@
+"""Derived backward passes (ISSUE 6): each backward recurrence kind is
+bit-identical to its mirrored jnp oracle on integer inputs in interpret
+mode, and a full train step's jaxpr contains no oracle recompute."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import hardware as hw
+from repro.kernels import flash_attention as fa
+from repro.kernels import ops, ref
+from repro.train import train_step as ts
+
+HW = hw.get_entry("tpu_v5e")
+MASKS = [(False, 0, 0), (True, 0, 0), (True, 8, 0), (True, 8, 4)]
+
+
+def _ints(rng, *shape):
+    return jnp.asarray(rng.integers(-2, 3, shape).astype(np.float32))
+
+
+def _flash_setup(rng, causal, window, prefix, bq=16, bk=16):
+    b, hkv, g, sq, sk, hd, vd = 1, 2, 2, 24, 40, 8, 8
+    scale = 0.5
+    q = _ints(rng, b, sq, hkv, g, hd)
+    k = _ints(rng, b, sk, hkv, hd)
+    v = _ints(rng, b, sk, hkv, vd)
+    do = _ints(rng, b, sq, hkv, g, vd)
+    fwd = fa._stats_executor(b, hkv, g, sq, sk, hd, vd, "float32", "float32",
+                             HW.name, True, causal, scale, (bq, bk), window,
+                             prefix)
+    out5, m, l = fwd(q, k, v)
+    do5 = do.transpose(0, 2, 3, 1, 4)
+    delta = jnp.sum(do5.astype(jnp.float32) * out5.astype(jnp.float32),
+                    axis=-1)
+    sqp, skp = -(-sq // bq) * bq, -(-sk // bk) * bk
+    pad5 = lambda a, t: jnp.pad(a, ((0, 0), (0, t - a.shape[1])) +
+                                ((0, 0),) * (a.ndim - 2))
+    padded = (pad5(q, sqp), pad5(k, skp), pad5(v, skp), pad5(do, sqp),
+              jnp.pad(delta, ((0, 0), (0, 0), (0, 0), (0, sqp - sq))))
+    dims = (b, hkv, g, sq, sk, hd, vd)
+    return dims, scale, (q, k, v, do, m, l, delta), padded
+
+
+@pytest.mark.parametrize("causal,window,prefix", MASKS)
+def test_flash_dq_bit_identical_to_ref(causal, window, prefix):
+    """The ``flash_dq`` kind (streamed keys, carried dq, saved (m, l)
+    statistics) against the blocked jnp mirror — exact equality: both walk
+    the key blocks in the same order with the same f32 ops."""
+    rng = np.random.default_rng(0)
+    bq = bk = 16
+    (b, hkv, g, sq, sk, hd, vd), scale, (q, k, v, do, m, l, delta), \
+        (qp, kp, vp, dop, dp) = _flash_setup(rng, causal, window, prefix)
+    fn = fa._dq_executor(b, hkv, g, sq, sk, hd, vd, "float32", HW.name,
+                         True, causal, scale, (bq, bk), window, prefix)
+    dq_k = fn(q, k, k, do, v, m, l, delta)
+    dq_r = ref.flash_dq_ref(qp, kp, vp, dop, m, l, dp, scale=scale,
+                            causal=causal, bq=bq, bk=bk, window=window,
+                            prefix_len=prefix, logical_k=sk)
+    np.testing.assert_array_equal(np.asarray(dq_k),
+                                  np.asarray(dq_r[:, :, :, :sq]))
+
+
+@pytest.mark.parametrize("causal,window,prefix", MASKS)
+def test_flash_dkv_bit_identical_to_ref(causal, window, prefix):
+    """The ``flash_dkv`` kind (the transposed weld: key rows, streamed
+    queries, carried dk + exported dv) against the blocked jnp mirror —
+    including the always-on padded-query mask that keeps the degenerate
+    padded-row statistics from contaminating real key gradients."""
+    rng = np.random.default_rng(1)
+    bq = bk = 16
+    (b, hkv, g, sq, sk, hd, vd), scale, (q, k, v, do, m, l, delta), \
+        (qp, kp, vp, dop, dp) = _flash_setup(rng, causal, window, prefix)
+    fn = fa._dkv_executor(b, hkv, g, sq, sk, hd, vd, "float32", HW.name,
+                          True, causal, scale, (bk, bq), window, prefix)
+    dk_k, dv_k = fn(k, q, q, do, v, m, l, delta)
+    dk_r, dv_r = ref.flash_dkv_ref(qp, kp, vp, dop, m, l, dp, scale=scale,
+                                   causal=causal, bj=bk, bi=bq,
+                                   window=window, prefix_len=prefix,
+                                   logical_q=sq)
+    np.testing.assert_array_equal(np.asarray(dk_k),
+                                  np.asarray(dk_r[:, :, :, :sk]))
+    np.testing.assert_array_equal(np.asarray(dv_k), np.asarray(dv_r))
+
+
+def test_ssd_backward_bit_identical_to_ref():
+    """The ``ssd_backward`` kind (reverse-streamed chunks, carried dh,
+    forward factoring replayed from the saved entering states) against the
+    lax.scan mirror — exact equality on integer inputs."""
+    rng = np.random.default_rng(2)
+    b, s, h, p, n, chunk = 2, 14, 2, 4, 4, 4
+    nc = -(-s // chunk)
+    sp = nc * chunk
+    xi = _ints(rng, b, s, h, p)
+    di = -jnp.abs(_ints(rng, b, s, h))
+    Bi = _ints(rng, b, s, n)
+    Ci = _ints(rng, b, s, n)
+    gy = _ints(rng, b, s, h, p)
+    gf = _ints(rng, b, h, p, n)
+    h0 = _ints(rng, b, h, p, n)
+    _, resid = ops._ssd_kernel_fwd(xi, di, Bi, Ci, h0, chunk, HW.name, True)
+    hin = resid[4]
+    np.testing.assert_array_equal(np.asarray(hin[:, 0]), np.asarray(h0))
+
+    def prep(a):
+        a = jnp.pad(a, ((0, 0), (0, sp - s)) + ((0, 0),) * (a.ndim - 2))
+        return jnp.flip(a.reshape(b, nc, chunk, *a.shape[2:]), axis=1)
+
+    args = (prep(Ci), prep(Bi), prep(gy), prep(xi), prep(di),
+            jnp.flip(hin, axis=1), gf)
+    fn = ops._ssd_bwd_executor(b, nc, chunk, h, p, n, "float32", HW.name,
+                               True)
+    for a, bb, name in zip(fn(*args), ref.ssd_bwd_ref(*args),
+                           ["dX", "dh0", "dB", "dC", "ddA"]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(bb),
+                                      err_msg=name)
+
+
+def test_gated_backward_bit_identical_to_ref():
+    """The degenerate ``gated_backward`` kind — the cotangent recurrence
+    run through the forward kernel body on flipped, gate-shifted operands —
+    against the chunked associative-scan mirror."""
+    rng = np.random.default_rng(3)
+    b, s, w, chunk = 2, 16, 8, 4
+    nc = s // chunk
+    la = -jnp.abs(_ints(rng, b, s, w))
+    dy = _ints(rng, b, s, w)
+    la_shift = jnp.concatenate([la[:, 1:], jnp.zeros((b, 1, w), jnp.float32)],
+                               axis=1)
+    laf = jnp.flip(la_shift, axis=1)
+    dyf = jnp.flip(dy, axis=1)
+    z = jnp.zeros((b, w), jnp.float32)
+    fn = ops._gated_bwd_executor(b, nc, chunk, w, HW.name, True)
+    hk, fk = fn(laf.reshape(b, nc, chunk, w), dyf.reshape(b, nc, chunk, w), z)
+    # bit-identity: the backward derivation must reproduce the proven
+    # forward kernel exactly (same monoid, its own schedule-cache entry)
+    fwd = ops._gated_executor(b, nc, chunk, w, "float32", HW.name, True)
+    hf, ff = fwd(laf.reshape(b, nc, chunk, w), dyf.reshape(b, nc, chunk, w),
+                 z)
+    np.testing.assert_array_equal(np.asarray(hk), np.asarray(hf))
+    np.testing.assert_array_equal(np.asarray(fk), np.asarray(ff))
+    # semantics vs the chunked jnp mirror — XLA's FMA fusion differs
+    # between the pallas body and the open-coded scan, so 1-ulp tolerance
+    hr, fr = ref.gated_chunk_ref(laf, dyf, z, chunk)
+    np.testing.assert_allclose(np.asarray(hk).reshape(b, s, w),
+                               np.asarray(hr), rtol=0, atol=5e-7)
+    np.testing.assert_allclose(np.asarray(fk), np.asarray(fr), rtol=0,
+                               atol=5e-7)
+
+
+@pytest.mark.parametrize("arch", ["gemma-2b", "mamba2-780m"])
+def test_train_step_jaxpr_has_no_oracle_recompute(arch, monkeypatch):
+    """Acceptance pin: tracing a full train step (forward + backward +
+    update) on a kernel-dispatch entry never reaches a jnp oracle — every
+    custom-VJP backward is a derived kernel.  The oracles are stubbed to
+    raise, so any recompute path fails the trace loudly."""
+    def boom(name):
+        def f(*a, **k):
+            raise AssertionError(f"oracle recompute reached: {name}")
+        return f
+
+    monkeypatch.setattr(ops, "_oracle_attention", boom("attention"))
+    monkeypatch.setattr(ops, "_ssd_oracle", boom("ssd"))
+    monkeypatch.setattr(ops, "_gated_oracle", boom("gated"))
+    monkeypatch.setattr(ref, "eval_expr", boom("eval_expr"))
+    cfg = get_config(arch, reduced=True).with_(attn_impl="pallas")
+    with hw.use_hardware("cpu"):
+        jaxpr = ts.trace_step_jaxpr(cfg, batch_size=2, seq=32)
+
+    def prims(jx, seen):
+        for eqn in jx.eqns:
+            seen.add(eqn.primitive.name)
+            for p in eqn.params.values():
+                for sub in jax.tree.leaves(
+                        p, is_leaf=lambda x: isinstance(
+                            x, (jax.core.Jaxpr, jax.core.ClosedJaxpr))):
+                    if isinstance(sub, jax.core.ClosedJaxpr):
+                        prims(sub.jaxpr, seen)
+                    elif isinstance(sub, jax.core.Jaxpr):
+                        prims(sub, seen)
+        return seen
+
+    assert "pallas_call" in prims(jaxpr.jaxpr, set())

@@ -236,11 +236,27 @@ def test_plan_byte_model():
         (8 * 48 + 48 * 32 + 64 * 32) * esize
 
 
-def test_plan_rejects_psi_view_leaves():
-    e = E.inner("add", "mul", E.psi((1,), E.arr("X", (2, 8, 8))),
-                E.arr("B", (8, 8)))
-    with pytest.raises(ValueError, match="psi"):
-        dplan.derive_plan(e, MS8, shard={"i": "x"}, hardware=CPU)
+def test_plan_psi_view_nonzero_offset_lowered_to_index_map():
+    """A psi view with a non-zero slab offset plans like any other leaf:
+    the fixed slab dim is replicated, the sharded axis lands on the right
+    stored dim, and the per-shard bundle re-derives the constant Access
+    term at local extents as a BlockSpec index-map offset
+    (``OperandSpec.offsets``) — no materializing copy."""
+    e = E.inner("add", "mul", E.psi((1,), E.arr("X", (2, 16, 16))),
+                E.arr("B", (16, 8)))
+    plan = dplan.derive_plan(e, MS8, shard={"i": "x"}, hardware=CPU)
+    assert plan.in_entries[0] == (None, "x", None)
+    assert plan.in_entries[1] == (None, None)
+    assert plan.out_entries == ("x", None)
+    assert plan.collective == "none"
+    assert plan.local_extent("i") == 2
+    x_spec = plan.bundle.schedule.ins[0]
+    assert x_spec.is_psi_view
+    assert x_spec.offsets[0] == 1 and x_spec.block[0] == 1
+    # sigma sharding through the viewed contraction still derives the psum
+    psum = dplan.derive_plan(e, MS8, shard={"k": "x"}, hardware=CPU)
+    assert psum.collective == "psum"
+    assert psum.in_entries[0] == (None, None, "x")
 
 
 def test_plan_psi_view_at_index_zero_places_specs_structurally():
@@ -431,6 +447,66 @@ def test_sharded_matmul_matrix_subprocess():
         pytest.skip("covered by the in-process matrix test")
     prog = ("import sys; sys.path.insert(0, r'%s'); "
             "from test_distributed_plan import _run_matrix; _run_matrix(); "
+            "print('SUBPROCESS_OK')" % os.path.join(ROOT, "tests"))
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"),
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    r = subprocess.run([sys.executable, "-c", prog], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert "SUBPROCESS_OK" in r.stdout, r.stdout + r.stderr
+
+
+def _run_psi_offset_matrix():
+    """Psi views with non-zero slab offsets through ``emit_shard_map``:
+    every sharding kind, both the per-shard oracle and the derived
+    interpret-mode kernel, exact against the sliced single-device matmul."""
+    from repro.kernels import ops
+    from repro.kernels.emit import emit_shard_map
+
+    assert jax.device_count() >= 8, jax.device_count()
+    s, m, k, n = 3, 16, 16, 8
+    X = jax.random.randint(jax.random.PRNGKey(0), (s, m, k), -3, 4) \
+        .astype(jnp.float32)
+    B = jax.random.randint(jax.random.PRNGKey(1), (k, n), -3, 4) \
+        .astype(jnp.float32)
+    e = E.inner("add", "mul", E.psi((2,), E.arr("X", (s, m, k))),
+                E.arr("B", (k, n)))
+    want = np.asarray(X[2] @ B)
+    mesh8 = jax.make_mesh((8,), ("x",))
+    for shard, coll in [({"i": "x"}, "none"), ({"j": "x"}, "none"),
+                        ({"k": "x"}, "psum")]:
+        plan = dplan.derive_plan(e, mesh8, shard=shard)
+        assert plan.collective == coll, (shard, plan.collective)
+        oracle = emit_shard_map(plan, mesh8, use_kernel=False,
+                                out_dtype=jnp.float32)
+        np.testing.assert_array_equal(np.asarray(oracle(X, B)), want,
+                                      err_msg=f"oracle {shard}")
+        _assert_planned_collectives_only(oracle, (X, B), coll)
+        got = ops.apply(e, X, B, interpret=True, mesh=mesh8, shard=shard,
+                        out_dtype=jnp.float32)
+        np.testing.assert_array_equal(np.asarray(got), want,
+                                      err_msg=f"kernel {shard}")
+    plan = dplan.derive_plan(e, mesh8, shard={"i": "x"}, replicate_out=True)
+    assert plan.collective == "all_gather"
+    fn = emit_shard_map(plan, mesh8, use_kernel=False, out_dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(fn(X, B)), want)
+
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs 8 devices (CI multi-device job sets "
+                           "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+def test_psi_offset_matrix_in_process():
+    _run_psi_offset_matrix()
+
+
+@pytest.mark.slow
+def test_psi_offset_matrix_subprocess():
+    """The psi-offset matrix under 8 forced host devices, so the
+    single-device tier-1 run covers it end to end."""
+    if jax.device_count() >= 8:
+        pytest.skip("covered by the in-process psi-offset matrix test")
+    prog = ("import sys; sys.path.insert(0, r'%s'); "
+            "from test_distributed_plan import _run_psi_offset_matrix; "
+            "_run_psi_offset_matrix(); "
             "print('SUBPROCESS_OK')" % os.path.join(ROOT, "tests"))
     env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"),
                XLA_FLAGS="--xla_force_host_platform_device_count=8")
