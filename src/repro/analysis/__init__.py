@@ -1,0 +1,51 @@
+"""Static verification of derived schedules, plans and emitted jaxprs.
+
+The paper's claim is that static information — types, shapes, the lifted
+psi-calculus indexing — fully determines a correct layout.  This package
+makes "derived => correct" a *checkable* property without executing any
+kernel:
+
+* ``verify_schedule`` / ``verify_bundle`` / ``verify_plan``
+  (``analysis.verify``): symbolic coverage/disjointness proofs over the
+  grid x BlockSpec index maps, grid write-write race detection, pad-guard
+  and pad-value (semiring inertness) checks, psi offset bounds, and the
+  VMEM resource certificate recomputed at the real accumulation width.
+* ``lint`` / ``lint_jaxpr`` (``analysis.jaxpr_lint``): a named-rule
+  registry over traced jaxprs — ``no-transpose-copy``,
+  ``no-oracle-recompute``, ``only-planned-collectives``,
+  ``no-silent-fallback`` — replacing the ad-hoc scanners that used to be
+  copy-pasted across the test files.
+* ``python -m repro.analysis.verify_all``: the registry sweep over every
+  form x hardware entry x dtype x semiring.
+
+``kernels.ops.apply(..., verify=True)`` runs the schedule checks inline;
+results are LRU-cached on the same normal-form keys as the schedules, so
+``verify=False`` paths pay nothing.
+"""
+from repro.analysis.verify import (Finding, VerificationError,
+                                   reset_verification_cache, verify_bundle,
+                                   verify_expr, verify_plan, verify_schedule,
+                                   verify_sharded,
+                                   verification_cache_stats)
+from repro.analysis.jaxpr_lint import (COLLECTIVE_PRIMS, LintError,
+                                       PLANNED_PRIMS, jaxpr_primitives, lint,
+                                       lint_jaxpr, lint_rules)
+
+__all__ = [
+    "COLLECTIVE_PRIMS",
+    "Finding",
+    "LintError",
+    "PLANNED_PRIMS",
+    "VerificationError",
+    "jaxpr_primitives",
+    "lint",
+    "lint_jaxpr",
+    "lint_rules",
+    "reset_verification_cache",
+    "verification_cache_stats",
+    "verify_bundle",
+    "verify_expr",
+    "verify_plan",
+    "verify_schedule",
+    "verify_sharded",
+]

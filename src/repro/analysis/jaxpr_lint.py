@@ -1,0 +1,210 @@
+"""A named-rule lint framework over traced jaxprs.
+
+PRs 2-6 earned jaxpr-level guarantees — no transpose relayout before a
+derived kernel, no oracle recompute in a train step, exactly the planned
+collectives in a shard_map program — and each guarantee lived as an ad-hoc
+scanner copy-pasted into a test file.  This module is the one traversal
+and the one registry those pins now share:
+
+==========================  ================================================
+rule                        what it proves
+==========================  ================================================
+``no-transpose-copy``       no ``transpose`` primitive anywhere in the
+                            traced program: transposed operands flow into
+                            kernels through index maps, never a relayout
+                            copy.
+``no-oracle-recompute``     a differentiated trace binds derived kernels
+                            (``pallas_call`` present, >= ``min_calls``);
+                            combine with oracle stubs that raise to prove
+                            no fallback path was traced.
+``only-planned-collectives``  the collectives in the program are exactly
+                            the plan's (``collective=`` names the planned
+                            summary, e.g. ``"psum"`` or
+                            ``"reduce_scatter+all_gather"``; or pass
+                            ``allowed=`` a set of primitive names).
+``no-silent-fallback``      a kernel-dispatch entry really reached
+                            ``pallas_call`` (>= ``min_calls``) instead of
+                            silently falling back to a jnp oracle.
+==========================  ================================================
+
+``lint(fn, *args, rules=...)`` traces ``fn`` and runs the rules;
+``lint_jaxpr`` runs them on an already-traced (Closed)Jaxpr.  Both return
+``Finding`` tuples (empty == clean) so test pins read
+``assert not analysis.lint(fn, x, w, rules=("no-transpose-copy",))``.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from dataclasses import dataclass
+from typing import Callable, Iterable, Optional
+
+from repro.analysis.verify import Finding
+
+#: every cross-device transfer primitive jax may emit
+COLLECTIVE_PRIMS = frozenset({"psum", "all_gather", "reduce_scatter",
+                              "all_to_all", "ppermute", "psum_scatter"})
+
+#: planned-collective summary (``DistributedPlan.collective``) -> the
+#: primitives that summary is allowed to lower to
+PLANNED_PRIMS = {"none": frozenset(),
+                 "psum": frozenset({"psum"}),
+                 "all_gather": frozenset({"all_gather"}),
+                 "reduce_scatter": frozenset({"reduce_scatter",
+                                              "psum_scatter"})}
+
+
+class LintError(ValueError):
+    """Raised by ``lint(..., strict=True)`` when findings exist."""
+
+    def __init__(self, findings):
+        self.findings = tuple(findings)
+        super().__init__("jaxpr lint failed:\n  " +
+                         "\n  ".join(str(f) for f in self.findings))
+
+
+def jaxpr_primitives(jaxpr) -> Counter:
+    """Count every primitive in a jaxpr, recursing into sub-jaxpr params —
+    raw ``Jaxpr`` params (shard_map), ``ClosedJaxpr`` params (pjit,
+    custom_vjp), and lists/tuples of either."""
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)      # unwrap ClosedJaxpr
+    prims: Counter = Counter()
+    todo = [jaxpr]
+    while todo:
+        j = todo.pop()
+        for eqn in j.eqns:
+            prims[eqn.primitive.name] += 1
+            for v in eqn.params.values():
+                for x in (v if isinstance(v, (list, tuple)) else [v]):
+                    if hasattr(x, "eqns"):
+                        todo.append(x)
+                    elif hasattr(x, "jaxpr"):
+                        todo.append(x.jaxpr)
+    return prims
+
+
+# ---------------------------------------------------------------------------
+# the rule registry
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LintRule:
+    name: str
+    description: str
+    check: Callable  # (prims: Counter, ctx: dict) -> list[str]
+
+
+_RULES: dict[str, LintRule] = {}
+
+
+def register_rule(rule: LintRule) -> LintRule:
+    _RULES[rule.name] = rule
+    return rule
+
+
+def lint_rules() -> tuple[LintRule, ...]:
+    """Every registered rule, sorted by name (the README table source)."""
+    return tuple(_RULES[n] for n in sorted(_RULES))
+
+
+def _no_transpose(prims: Counter, ctx: dict) -> list:
+    if prims.get("transpose"):
+        return [f"{prims['transpose']} transpose primitive(s) in the "
+                f"traced program — a relayout copy the psi-calculus "
+                f"derivation is supposed to absorb into index maps"]
+    return []
+
+
+def _kernel_reached(prims: Counter, ctx: dict, what: str) -> list:
+    want = int(ctx.get("min_calls", 1))
+    got = prims.get("pallas_call", 0)
+    if got < want:
+        return [f"{got} pallas_call(s) traced, expected >= {want} — "
+                f"{what}"]
+    return []
+
+
+def _no_oracle_recompute(prims: Counter, ctx: dict) -> list:
+    return _kernel_reached(
+        prims, ctx, "a differentiated path recomputes through a jnp "
+        "oracle instead of a derived backward kernel")
+
+
+def _no_silent_fallback(prims: Counter, ctx: dict) -> list:
+    return _kernel_reached(
+        prims, ctx, "the dispatch entry silently fell back to the jnp "
+        "oracle instead of the derived kernel")
+
+
+def _only_planned_collectives(prims: Counter, ctx: dict) -> list:
+    if "allowed" in ctx:
+        want = frozenset(ctx["allowed"])
+    else:
+        summary = ctx.get("collective", "none")
+        want = frozenset()
+        for kind in str(summary).split("+"):
+            if kind not in PLANNED_PRIMS:
+                return [f"unknown planned-collective summary {kind!r} "
+                        f"(known: {sorted(PLANNED_PRIMS)})"]
+            want |= PLANNED_PRIMS[kind]
+    got = frozenset(p for p in prims if p in COLLECTIVE_PRIMS)
+    out = []
+    if got - want:
+        out.append(f"unplanned collective(s) {sorted(got - want)} in the "
+                   f"traced program (planned: {sorted(want) or 'none'})")
+    if want and not got:
+        out.append(f"planned collective ({sorted(want)}) never appears in "
+                   f"the traced program")
+    return out
+
+
+register_rule(LintRule(
+    "no-transpose-copy",
+    "no transpose primitive anywhere — transposed operands ride index "
+    "maps, not relayout copies", _no_transpose))
+register_rule(LintRule(
+    "no-oracle-recompute",
+    "differentiated traces bind derived kernels (pallas_call), never a "
+    "jnp oracle recompute", _no_oracle_recompute))
+register_rule(LintRule(
+    "only-planned-collectives",
+    "exactly the plan's collectives appear — no unplanned resharding "
+    "transfer", _only_planned_collectives))
+register_rule(LintRule(
+    "no-silent-fallback",
+    "kernel-dispatch entries really reach pallas_call instead of silently "
+    "falling back", _no_silent_fallback))
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def lint_jaxpr(jaxpr, rules: Optional[Iterable[str]] = None,
+               strict: bool = False, **ctx) -> tuple[Finding, ...]:
+    """Run named rules against an already-traced (Closed)Jaxpr."""
+    names = tuple(rules) if rules is not None else tuple(sorted(_RULES))
+    prims = jaxpr_primitives(jaxpr)
+    findings = []
+    for name in names:
+        try:
+            rule = _RULES[name]
+        except KeyError:
+            raise KeyError(f"unknown lint rule {name!r}; registered: "
+                           f"{sorted(_RULES)}") from None
+        for msg in rule.check(prims, ctx):
+            findings.append(Finding(name, "error", "jaxpr", msg))
+    findings = tuple(findings)
+    if strict and findings:
+        raise LintError(findings)
+    return findings
+
+
+def lint(fn: Callable, *args, rules: Optional[Iterable[str]] = None,
+         strict: bool = False, **ctx) -> tuple[Finding, ...]:
+    """Trace ``fn(*args)`` (abstractly — nothing executes) and run the
+    named rules; ``rules=None`` runs all registered rules.  Rule context
+    rides as keyword arguments (``collective=``, ``allowed=``,
+    ``min_calls=``)."""
+    import jax
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    return lint_jaxpr(jaxpr, rules=rules, strict=strict, **ctx)

@@ -1,0 +1,139 @@
+"""``python -m repro.analysis.verify_all`` — the registry sweep.
+
+Derives and statically verifies every registered form x hardware entry x
+dtype x accumulation semiring, plus a distributed-plan matrix (sharded
+rows/cols/sigma, reduce-scatter, replication fallbacks) on a 2-device
+``MeshShape``.  Pure derivation + verification: no kernel executes, no jax
+device state is touched (plans derive on bare ``MeshShape``), so the sweep
+is CI-cheap and runs anywhere.
+
+A combination the registries refuse to derive — a semiring/acc-width pair
+the hardware table has no path for, or blocks that cannot fit a small
+memory (the V100's 32 KiB L1 with a materialized tropical combine) — is
+*correct* static behavior and counts as ``refused``, not a failure.  Any
+error finding on a derivation that succeeded fails the sweep (exit 1).
+"""
+from __future__ import annotations
+
+import sys
+
+from repro import analysis
+from repro.core import expr as E
+from repro.core import hardware as hwr
+from repro.core.mesh import MeshShape
+
+
+def _forms():
+    """(label, form) for every registered schedule shape, at sizes that
+    exercise padding on both output and reduce axes."""
+    yield "matmul", E.matmul_expr(300, 200, 160)
+    yield "matmul_tb", E.matmul_expr(300, 200, 160, transpose_b=True)
+    yield "expert_gemm", E.expert_gemm_expr(4, 60, 96, 72)
+    yield "hadamard", E.hadamard_expr(200, 300)
+    yield "head_gemm", E.head_gemm_expr(4, 48, 32, 40)
+    yield "head_gemm_tb", E.head_gemm_expr(4, 48, 32, 40, transpose_b=True)
+    yield "max_plus", E.inner("max", "add", E.arr("A", (100, 60)),
+                              E.arr("B", (60, 80)))
+    yield "min_plus", E.inner("min", "add", E.arr("A", (100, 60)),
+                              E.arr("B", (60, 80)))
+    yield "attention", E.attention_form(1, 2, 2, 300, 300, 64)
+    yield "attention_stats", E.attention_stats_form(1, 2, 2, 300, 300, 64)
+    yield "attention_windowed", E.attention_form(1, 1, 1, 256, 256, 64,
+                                                 window=128)
+    yield "flash_dq", E.attention_dq_form(1, 1, 1, 300, 300, 64)
+    yield "flash_dkv", E.attention_dkv_form(1, 1, 1, 300, 300, 64)
+    yield "ssd", E.ssd_form(1, 4, 64, 2, 16, 16)
+    yield "ssd_chk", E.ssd_chk_form(1, 4, 64, 2, 16, 16)
+    yield "ssd_bwd", E.ssd_bwd_form(1, 4, 64, 2, 16, 16)
+    yield "rglru", E.rglru_form(1, 4, 64, 32)
+    yield "rglru_bwd", E.rglru_bwd_form(1, 4, 64, 32)
+
+
+#: (input dtype, accumulation dtype) — legality is decided per hardware
+#: entry by the semiring registry + hardware table at derivation time
+_DTYPE_MATRIX = (("float32", "float32"),
+                 ("bfloat16", "float32"),
+                 ("bfloat16", "bfloat16"),
+                 ("int8", "int32"))
+
+
+def _plan_cases():
+    mesh = MeshShape((("x", 2),))
+    mesh2 = MeshShape((("dx", 2), ("dy", 2)))
+    m, k, n = 64, 96, 32
+    f = E.matmul_expr(m, k, n)
+    yield "plan_row", f, mesh, {"i": "x"}, {}
+    yield "plan_col", f, mesh, {"j": "x"}, {}
+    yield "plan_sigma", f, mesh, {"k": "x"}, {}
+    yield "plan_both", f, mesh2, {"i": "dx", "j": "dy"}, {}
+    yield "plan_gather", f, mesh, {"i": "x"}, {"replicate_out": True}
+    yield "plan_scatter", f, mesh, {"k": "x"}, {"scatter_axis": "i"}
+    yield ("plan_fallback", E.matmul_expr(31, 96, 32), mesh, {"i": "x"}, {})
+    yield ("plan_expert", E.expert_gemm_expr(4, 60, 96, 72), mesh,
+           {"i": "x"}, {})
+    yield ("plan_bf16_acc", f, mesh, {"k": "x"},
+           {"dtype": "bfloat16", "acc_dtype": "bfloat16"})
+
+
+def main(argv=None) -> int:
+    verbose = "-v" in (argv or sys.argv[1:])
+    checked = refused = warned = 0
+    failures: list[str] = []
+
+    for hw_name in hwr.registered_hardware():
+        entry = hwr.get_entry(hw_name)
+        for label, form in _forms():
+            for dtype, acc in _DTYPE_MATRIX:
+                case = f"{hw_name}/{label}/{dtype}+{acc}"
+                try:
+                    findings = analysis.verify_expr(
+                        form, dtype=dtype, hardware=entry, acc_dtype=acc,
+                        strict=False)
+                except (ValueError, AssertionError) as exc:
+                    # the registries refusing an illegal/infeasible combo
+                    # IS the derivation-time failure the certifier wants
+                    refused += 1
+                    if verbose:
+                        print(f"  refused {case}: {exc}")
+                    continue
+                checked += 1
+                errs = analysis.verify.errors(findings)
+                warned += len(findings) - len(errs)
+                if errs:
+                    failures.append(case)
+                    for f in errs:
+                        print(f"FAIL {case}: {f}")
+                elif verbose:
+                    print(f"  ok {case}")
+
+        for label, form, mesh, shard, kw in _plan_cases():
+            kw = dict(kw)
+            dtype = kw.pop("dtype", "float32")
+            case = f"{hw_name}/{label}/{dtype}"
+            try:
+                findings = analysis.verify_sharded(
+                    form, mesh, shard, hardware=entry, dtype=dtype,
+                    strict=False, **kw)
+            except (ValueError, AssertionError) as exc:
+                refused += 1
+                if verbose:
+                    print(f"  refused {case}: {exc}")
+                continue
+            checked += 1
+            errs = analysis.verify.errors(findings)
+            warned += len(findings) - len(errs)
+            if errs:
+                failures.append(case)
+                for f in errs:
+                    print(f"FAIL {case}: {f}")
+            elif verbose:
+                print(f"  ok {case}")
+
+    print(f"verify_all: {checked} combinations verified, {refused} refused "
+          f"at derivation, {warned} warnings, {len(failures)} failures "
+          f"across {len(hwr.registered_hardware())} hardware entries")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

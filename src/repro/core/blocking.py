@@ -83,6 +83,47 @@ class BlockChoice:
         return (self.bm, self.bk, self.bn)
 
 
+# ---------------------------------------------------------------------------
+# working-set models — module-level so the solvers and the static resource
+# certifier (repro.analysis) compute the SAME certificate from the same
+# formula, not two drifting copies
+# ---------------------------------------------------------------------------
+
+def gemm_working_set(bm: int, bk: int, bn: int, esize: int, acc_size: int,
+                     buffering: int = 2,
+                     materialized_combine: bool = False) -> int:
+    """Resident bytes of one (bm, bk, bn) GEMM grid step: double-buffered
+    input blocks, the acc-width accumulator, and (non-(mul, add) semirings)
+    the materialized f32 combine intermediate."""
+    ws = (bm * bk + bk * bn) * esize * buffering + bm * bn * acc_size
+    if materialized_combine:
+        ws += bm * bn * bk * acc_size
+    return ws
+
+
+def stream_working_set(bq: int, bk: int, hd: int, vd: int, esize: int,
+                       acc_size: int, buffering: int = 2,
+                       q_extra: int = 0, k_extra: int = 0,
+                       n_inter: int = 2, n_row_state: int = 2) -> int:
+    """Resident bytes of one streamed (bq, bk) step: inputs, output block,
+    carried accumulator + per-row state, and the in-block intermediates."""
+    ws = (bq * (hd + q_extra) + bk * (hd + vd + k_extra)) * esize * buffering
+    ws += bq * vd * esize                           # output block
+    ws += (bq * vd + n_row_state * bq) * acc_size   # acc + row state
+    ws += n_inter * bq * bk * acc_size              # scores/probs/grads
+    return ws
+
+
+def recurrence_working_set(bs: int, token_elems: int, state_elems: int,
+                           quad_elems: int, lin_elems: int, esize: int,
+                           acc_size: int, buffering: int = 2) -> int:
+    """Resident bytes of one chunk step of a carried-state scan."""
+    ws = token_elems * bs * esize * buffering
+    ws += state_elems * acc_size
+    ws += (quad_elems * bs * bs + lin_elems * bs) * acc_size
+    return ws
+
+
 def solve_blocks(m: int, k: int, n: int, dtype="bfloat16",
                  hardware: HardwareShape = TPU_V5E,
                  vmem_budget_frac: float = 0.5,
@@ -122,9 +163,9 @@ def solve_blocks(m: int, k: int, n: int, dtype="bfloat16",
     for bm in cand_m:
         for bn in cand_n:
             for bk in cand_k:
-                ws = (bm * bk + bk * bn) * esize * buffering + bm * bn * acc_size
-                if materialized_combine:
-                    ws += bm * bn * bk * acc_size
+                ws = gemm_working_set(bm, bk, bn, esize, acc_size,
+                                      buffering=buffering,
+                                      materialized_combine=materialized_combine)
                 if ws > budget:
                     continue
                 flops = 2.0 * bm * bn * bk
@@ -197,11 +238,10 @@ def solve_stream_blocks(sq: int, sk: int, hd: int, vd: Optional[int] = None,
     cand_k = _candidates(max(min(sk, 4096), align_k), align_k)
     for bq in cand_q:
         for bk in cand_k:
-            ws = (bq * (hd + q_extra)
-                  + bk * (hd + vd + k_extra)) * esize * buffering
-            ws += bq * vd * esize                       # output block
-            ws += (bq * vd + n_row_state * bq) * acc_size   # acc + row state
-            ws += n_inter * bq * bk * acc_size          # scores/probs/grads
+            ws = stream_working_set(bq, bk, hd, vd, esize, acc_size,
+                                    buffering=buffering, q_extra=q_extra,
+                                    k_extra=k_extra, n_inter=n_inter,
+                                    n_row_state=n_row_state)
             if ws > budget:
                 continue
             flops = 2.0 * bq * bk * (hd + vd)
@@ -267,9 +307,9 @@ def solve_recurrence_blocks(s: int, *, token_elems: int, state_elems: int,
     best: RecurrenceBlockChoice | None = None
     smallest: RecurrenceBlockChoice | None = None
     for bs in _candidates(max(min(s, max_block), align), align):
-        ws = token_elems * bs * esize * buffering
-        ws += state_elems * acc_size
-        ws += (quad_elems * bs * bs + lin_elems * bs) * acc_size
+        ws = recurrence_working_set(bs, token_elems, state_elems,
+                                    quad_elems, lin_elems, esize, acc_size,
+                                    buffering=buffering)
         flops = (flops_per_step(bs) if callable(flops_per_step)
                  else 2.0 * bs * bs * max(quad_elems, 1))
         moved = token_elems * bs * esize

@@ -150,9 +150,29 @@ class Schedule:
             ws += pi(self.out.block) * acc_bytes
         return ws
 
+    def working_set_bytes(self, dtype, acc_dtype: str = "float32",
+                          buffering: int = 2) -> int:
+        """The certified resident working set: ``vmem_bytes`` with the
+        accumulator at its real ``acc_dtype`` width, plus the materialized
+        in-block combine intermediate a non-(mul, add) semiring needs
+        (``_general_combine`` pairs in f32 over the joint out x contracted
+        block).  This is what derivation checks against the hardware table
+        and what ``repro.analysis`` re-certifies."""
+        ws = self.vmem_bytes(dtype, buffering,
+                             acc_bytes=_dtype_size(acc_dtype))
+        if (self.combine, self.reduce_op) != ("mul", "add"):
+            inter = pi(self.out.block)
+            for ax in self.contracted:
+                for opn in self.ins:
+                    if ax in opn.axes:
+                        inter *= opn.block[opn.axes.index(ax)]
+                        break
+            ws += inter * 4
+        return ws
+
 
 def derive_schedule(o: "onf_mod.Onf", hardware: Optional[HardwareShape] = None,
-                    dtype="float32") -> Schedule:
+                    dtype="float32", acc_dtype: str = "float32") -> Schedule:
     """Derive the full Pallas schedule from a lifted ONF.
 
     Raises ``ValueError`` if the nest is not lifted, if an access is not a
@@ -278,7 +298,7 @@ def derive_schedule(o: "onf_mod.Onf", hardware: Optional[HardwareShape] = None,
     sched = Schedule(o.name, grid, in_specs, out_spec, contracted,
                      reduce_grid_dim, o.combine, o.reduce_op)
     if hardware is not None:
-        ws = sched.vmem_bytes(dtype)
+        ws = sched.working_set_bytes(dtype, acc_dtype)
         if ws > hardware.vmem.capacity_bytes:
             raise ValueError(
                 f"derived blocks need {ws} B VMEM, over {hardware.name}'s "
@@ -410,6 +430,14 @@ class RecurrentSchedule:
             ws += 2 * pi(inter.block) * acc_bytes
         return ws
 
+    def working_set_bytes(self, dtype, acc_dtype: str = "float32",
+                          buffering: int = 2) -> int:
+        """``vmem_bytes`` with the carried state and accumulators at their
+        real ``acc_dtype`` width — the certified working set derivation
+        checks and ``repro.analysis`` re-certifies."""
+        return self.vmem_bytes(dtype, buffering,
+                               acc_bytes=_dtype_size(acc_dtype))
+
 
 #: one-release alias: the streaming (online-softmax) schedule is the
 #: two-stage instance of the recurrence subsystem
@@ -440,7 +468,8 @@ def derive_recurrent_schedule(stages: Sequence["onf_mod.Onf"],
                               aux: Sequence["expr_mod.LeafSpec"] = (),
                               window: int = 0, prefix_len: int = 0,
                               hardware: Optional[HardwareShape] = None,
-                              dtype="float32") -> RecurrentSchedule:
+                              dtype="float32",
+                              acc_dtype: str = "float32") -> RecurrentSchedule:
     """Derive a ``RecurrentSchedule`` from the lifted ONFs of a recurrence
     chain (``expr.RecurrentForm`` lifted per axis).
 
@@ -570,7 +599,7 @@ def derive_recurrent_schedule(stages: Sequence["onf_mod.Onf"],
         tuple(state_outs), tuple(plans), scheds[0].contracted, stream_dim,
         row_axis, stream_axis, state, int(window), int(prefix_len))
     if hardware is not None:
-        ws = sched.vmem_bytes(dtype)
+        ws = sched.working_set_bytes(dtype, acc_dtype)
         if ws > hardware.vmem.capacity_bytes:
             raise ValueError(
                 f"derived recurrent blocks need {ws} B VMEM, over "
@@ -646,6 +675,33 @@ class ScheduleBundle:
     out_shape: tuple[int, ...] = ()
     in_shapes: tuple[tuple[int, ...], ...] = ()
     acc_dtype: str = "float32"       # accumulation dtype the emitter honors
+
+
+def bundle_needs_padding(bundle: ScheduleBundle) -> bool:
+    """Whether any logical operand must be padded to reach its schedule's
+    (padded) storage shape — the single detection both ``emit_bundle`` and
+    the static verifier apply."""
+    sch = bundle.schedule
+    for spec, logical in zip(sch.ins, bundle.in_shapes):
+        sym_rank = len(spec.shape) - (1 if spec.is_psi_view else 0)
+        tail = tuple(logical[len(logical) - sym_rank:])
+        if tail != (spec.shape[1:] if spec.is_psi_view else spec.shape):
+            return True
+    return False
+
+
+def bundle_pad_value(bundle: ScheduleBundle) -> float:
+    """The inert element padding regions are filled with — the one policy
+    shared by ``emit_bundle`` and ``repro.analysis.verify_bundle``: nothing
+    padded -> 0.0; a single operand pads with the reduce identity (no
+    pairing happens); multi-operand pads with the semiring's registered
+    inert element (raises ``ValueError`` when the table has none)."""
+    sch = bundle.schedule
+    if not bundle_needs_padding(bundle):
+        return 0.0
+    if len(sch.ins) == 1:
+        return semiring.reduce_def(sch.reduce_op).identity
+    return semiring.pad_value(sch.combine, sch.reduce_op)
 
 
 SCHEDULE_CACHE_SIZE = 256
@@ -739,7 +795,8 @@ def _build_bundle(nf: "expr_mod.NormalForm", dtype, hw_shape,
     order = out_syms + red_syms
     logical = tuple(ext[s] for s in order)
     padded = tuple(pads.get(s, ext[s]) for s in order)
-    return ScheduleBundle(nf.name, derive_schedule(lifted, hw_shape, dtype),
+    return ScheduleBundle(nf.name,
+                          derive_schedule(lifted, hw_shape, dtype, acc_dtype),
                           blocks, logical, padded,
                           nf.out_shape(), nf.leaf_storage_shapes(),
                           acc_dtype=acc_dtype)
@@ -859,7 +916,7 @@ def _build_recurrent_bundle(rf: "expr_mod.RecurrentForm", dtype, hw_shape,
         for l in rf.aux)
     sched = derive_recurrent_schedule(
         tuple(lift_stage(nf) for nf in rf.stages), stream_sym, rf.state,
-        aux, rf.window, rf.prefix_len, hw_shape, dtype)
+        aux, rf.window, rf.prefix_len, hw_shape, dtype, acc_dtype)
     logical = tuple(ext[s] for s in order)
     padded = tuple(pads.get(s, ext[s]) for s in order)
     in_shapes = rf.stages[0].leaf_storage_shapes()

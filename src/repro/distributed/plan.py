@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import contextlib
 import threading
+import warnings
 from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Optional, Union
@@ -47,6 +48,12 @@ from repro.core.blocking import _dtype_size
 from repro.core.mesh import MeshShape, from_jax_mesh, mesh_resource
 from repro.core.moa import pi
 from repro.core.schedule import ScheduleBundle, _base
+
+
+class ReplicationFallbackWarning(UserWarning):
+    """A requested shard axis was not divisible by its mesh axis; the
+    operand was replicated instead.  Silent before PR 7 — now warned at
+    derivation and reported by ``repro.analysis.verify_plan``."""
 
 
 @dataclass(frozen=True)
@@ -224,16 +231,21 @@ def derive_plan(expr: Union["expr_mod.Expr", "expr_mod.NormalForm"],
                 hardware=None, dtype="float32",
                 replicate_out: bool = False,
                 scatter_axis: Optional[str] = None,
+                acc_dtype: str = "float32",
                 name: Optional[str] = None) -> DistributedPlan:
     """Derive the full multi-device plan for a normalizable expression.
 
     ``shard`` maps normal-form axis symbols to mesh axis names (use
     ``matmul_plan``/``expert_plan`` for role-named fronts).  A requested
     axis whose extent the mesh axis does not divide falls back to
-    replication (recorded in ``plan.dropped``).  ``replicate_out`` asks for
-    a replicated result (mesh-lifted output axes then emit all-gathers);
-    ``scatter_axis`` names an output axis to scatter a sigma reduction over
-    (reduce-scatter instead of psum).
+    replication (recorded in ``plan.dropped`` and surfaced as a
+    ``ReplicationFallbackWarning`` naming the axis).  ``replicate_out``
+    asks for a replicated result (mesh-lifted output axes then emit
+    all-gathers); ``scatter_axis`` names an output axis to scatter a sigma
+    reduction over (reduce-scatter instead of psum).  ``acc_dtype``
+    threads through to the per-shard schedule — the local accumulator is
+    widened exactly as on the single-chip path, and legality against the
+    hardware table is checked at derivation.
     """
     nf = expr if isinstance(expr, expr_mod.NormalForm) else \
         expr_mod.normal_form(expr, name=name or getattr(expr, "name", None)
@@ -243,7 +255,8 @@ def derive_plan(expr: Union["expr_mod.Expr", "expr_mod.NormalForm"],
     hw = hardware or current_hardware()
     hw_name = getattr(hw, "name", None) or hw.shape.name
     key = (nf.key(), mesh.axes, tuple(sorted(shard.items())),
-           bool(replicate_out), scatter_axis, str(dtype), hw_name)
+           bool(replicate_out), scatter_axis, str(dtype), hw_name,
+           str(acc_dtype))
     with _lock:
         hit = _cache.get(key)
         if hit is not None:
@@ -264,6 +277,11 @@ def derive_plan(expr: Union["expr_mod.Expr", "expr_mod.NormalForm"],
             raise ValueError(f"mesh axis {axis!r} assigned to two axes")
         if ext[sym] % p:
             dropped.append((sym, axis))          # replication fallback
+            warnings.warn(
+                f"{nf.name}: axis {sym!r} (extent {ext[sym]}) is not "
+                f"divisible by mesh axis {axis!r} (size {p}) — operand "
+                f"replicated instead of sharded",
+                ReplicationFallbackWarning, stacklevel=2)
             continue
         used_axes.add(axis)
         applied.append((sym, axis))
@@ -323,7 +341,8 @@ def derive_plan(expr: Union["expr_mod.Expr", "expr_mod.NormalForm"],
     local_ext = {sym: ext[sym] // mesh.axis_size(axis)
                  for sym, axis in applied}
     local_nf = _local_normal_form(nf, local_ext)
-    bundle = sched.get_schedule(local_nf, dtype=dtype, hardware=hw)
+    bundle = sched.get_schedule(local_nf, dtype=dtype, hardware=hw,
+                                acc_dtype=acc_dtype)
 
     plan = DistributedPlan(
         name=nf.name, mesh=mesh, applied=applied, dropped=dropped,

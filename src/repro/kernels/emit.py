@@ -38,6 +38,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import semiring
+from repro.core import schedule as sched_mod
 from repro.core.schedule import Schedule, ScheduleBundle, StreamingSchedule
 from repro.core.semiring import MASK_NEG_INF as NEG_INF
 
@@ -914,22 +915,13 @@ def emit_bundle(bundle: ScheduleBundle, *, out_dtype=None,
     kern = emit_pallas(sch, out_dtype=out_dtype, interpret=interpret,
                        acc_dtype=getattr(bundle, "acc_dtype", "float32"))
 
-    prep, needs_pad = [], False
+    prep = []
     for spec, logical in zip(sch.ins, bundle.in_shapes):
         sym_rank = len(spec.shape) - (1 if spec.is_psi_view else 0)
-        lead = len(logical) - sym_rank
-        tail = tuple(logical[lead:])
-        needs_pad |= tail != (spec.shape[1:] if spec.is_psi_view
-                              else spec.shape)
-        prep.append((lead, spec))
-    if not needs_pad:
-        pad_val = 0.0                        # nothing is ever padded
-    elif len(sch.ins) == 1:
-        # single operand: no pairing happens, so the inert pad is just the
-        # reduce identity (e.g. -inf for a lone max-reduce)
-        pad_val = semiring.reduce_def(sch.reduce_op).identity
-    else:
-        pad_val = semiring.pad_value(sch.combine, sch.reduce_op)
+        prep.append((len(logical) - sym_rank, spec))
+    # the pad-value policy lives beside the bundle (schedule.py) so the
+    # static verifier certifies the exact element this executor pads with
+    pad_val = sched_mod.bundle_pad_value(bundle)
     out_slices = tuple(slice(0, d) for d in bundle.out_shape)
 
     def call(*arrays):

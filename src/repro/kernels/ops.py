@@ -119,7 +119,7 @@ def _sharded_callable(nf: "E.NormalForm", dtype_s: str, out_dtype_s: str,
                       hw_name: str, interpret: bool, use_kernel: bool,
                       mesh, shard: dict, replicate_out: bool,
                       local_fn=None, local_tag: Optional[str] = None,
-                      scatter_axis=None):
+                      scatter_axis=None, acc_dtype: str = "float32"):
     """Memoized shard_map executable for one (normal form, mesh, sharding)
     triple: derives (or re-reads from the plan cache) the DistributedPlan,
     then wraps its collectives around the per-shard kernel/oracle."""
@@ -128,14 +128,14 @@ def _sharded_callable(nf: "E.NormalForm", dtype_s: str, out_dtype_s: str,
     shard_key = tuple(sorted(shard.items()))
     key = ("shard", nf.key(), dtype_s, out_dtype_s, hw_name, interpret,
            use_kernel, mesh, shard_key, replicate_out, local_tag,
-           scatter_axis)
+           scatter_axis, acc_dtype)
     fn = _cache_get(key)
     if fn is not None:
         return fn
     plan = dplan.derive_plan(nf, mesh, shard=shard,
                              hardware=get_entry(hw_name), dtype=dtype_s,
                              replicate_out=replicate_out,
-                             scatter_axis=scatter_axis)
+                             scatter_axis=scatter_axis, acc_dtype=acc_dtype)
     call = jax.jit(emit_shard_map(plan, mesh, local_fn,
                                   out_dtype=out_dtype_s,
                                   interpret=interpret,
@@ -148,7 +148,8 @@ def apply(expr: "E.Expr", *arrays: jax.Array, out_dtype=None,
           hardware: Optional[HardwareEntry] = None,
           blocks=None, mesh=None, shard: Optional[dict] = None,
           replicate_out: bool = False,
-          acc_dtype: str = "float32") -> jax.Array:
+          acc_dtype: str = "float32",
+          verify: bool = False) -> jax.Array:
     """Evaluate a composed MoA expression — the public derived-kernel entry.
 
     ``arrays`` bind the expression's leaves in composition order by their
@@ -164,6 +165,12 @@ def apply(expr: "E.Expr", *arrays: jax.Array, out_dtype=None,
     one level further: ``shard`` maps its axis symbols to mesh axes, and the
     derived ``DistributedPlan`` runs the per-shard kernel (or oracle) inside
     ``shard_map`` with the plan's collectives.
+
+    ``verify=True`` runs the static soundness checks (``repro.analysis``)
+    on the derived schedule/plan before executing, raising
+    ``VerificationError`` on any unsound derivation.  Results are cached on
+    the same normal-form keys as the schedules, so repeated calls — and
+    every ``verify=False`` call — pay nothing.
     """
     nf = E.normal_form(expr)
     shapes = nf.leaf_storage_shapes()
@@ -180,22 +187,29 @@ def apply(expr: "E.Expr", *arrays: jax.Array, out_dtype=None,
     # "interpret"/"xla" entries otherwise use the jnp oracle (interpret-mode
     # Pallas is the validation path, not the default execution path)
     use_kernel = hw.backend == "pallas" or bool(interpret)
+    dtype_s = str(jnp.dtype(arrays[0].dtype))
     if mesh is not None:
         if blocks is not None:
             raise ValueError(
                 "apply(mesh=...) derives per-shard blocks from the plan; "
                 "pinning blocks= is not supported on the sharded path")
-        if acc_dtype != "float32":
-            raise ValueError("acc_dtype is not yet threaded through the "
-                             "sharded path; use the single-chip entry")
-        fn = _sharded_callable(nf, str(jnp.dtype(arrays[0].dtype)),
-                               str(out_dtype), hw.name, interp, use_kernel,
-                               mesh, shard or {}, replicate_out)
+        if verify:
+            from repro import analysis
+            analysis.verify_sharded(nf, mesh, shard or {}, hardware=hw,
+                                    dtype=dtype_s,
+                                    replicate_out=replicate_out,
+                                    acc_dtype=acc_dtype)
+        fn = _sharded_callable(nf, dtype_s, str(out_dtype), hw.name, interp,
+                               use_kernel, mesh, shard or {}, replicate_out,
+                               acc_dtype=acc_dtype)
         return fn(*arrays)
+    if verify:
+        from repro import analysis
+        analysis.verify_expr(nf, dtype=dtype_s, hardware=hw, blocks=blocks,
+                             acc_dtype=acc_dtype)
     if use_kernel:
-        fn = _expr_callable(nf, str(jnp.dtype(arrays[0].dtype)),
-                            str(out_dtype), hw.name, interp, blocks,
-                            acc_dtype=acc_dtype)
+        fn = _expr_callable(nf, dtype_s, str(out_dtype), hw.name, interp,
+                            blocks, acc_dtype=acc_dtype)
         return fn(*arrays)
     return ref.eval_expr(expr, *arrays).astype(out_dtype)
 

@@ -7,6 +7,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+from repro import analysis
 from repro.configs import get_config
 from repro.core import hardware as hw
 from repro.kernels import flash_attention as fa
@@ -168,18 +169,4 @@ def test_train_step_jaxpr_has_no_oracle_recompute(arch, monkeypatch):
     cfg = get_config(arch, reduced=True).with_(attn_impl="pallas")
     with hw.use_hardware("cpu"):
         jaxpr = ts.trace_step_jaxpr(cfg, batch_size=2, seq=32)
-
-    def prims(jx, seen):
-        for eqn in jx.eqns:
-            seen.add(eqn.primitive.name)
-            for p in eqn.params.values():
-                for sub in jax.tree.leaves(
-                        p, is_leaf=lambda x: isinstance(
-                            x, (jax.core.Jaxpr, jax.core.ClosedJaxpr))):
-                    if isinstance(sub, jax.core.ClosedJaxpr):
-                        prims(sub.jaxpr, seen)
-                    elif isinstance(sub, jax.core.Jaxpr):
-                        prims(sub, seen)
-        return seen
-
-    assert "pallas_call" in prims(jaxpr.jaxpr, set())
+    assert not analysis.lint_jaxpr(jaxpr, rules=("no-oracle-recompute",))

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import analysis
 from repro.core import expr as E
 from repro.core import hardware as hw
 from repro.core import mesh as mesh_mod
@@ -291,43 +292,11 @@ def test_plan_psi_view_at_index_zero_places_specs_structurally():
 # jaxpr contains exactly the planned collectives
 # ---------------------------------------------------------------------------
 
-_COLLECTIVE_PRIMS = frozenset({"psum", "all_gather", "reduce_scatter",
-                               "all_to_all", "ppermute", "psum_scatter"})
-_PLANNED_PRIMS = {"none": frozenset(),
-                  "psum": frozenset({"psum"}),
-                  "all_gather": frozenset({"all_gather"}),
-                  "reduce_scatter": frozenset({"reduce_scatter",
-                                               "psum_scatter"})}
-
-
-def _all_primitives(jaxpr) -> set:
-    """Every primitive in the jaxpr, recursing into sub-jaxpr params —
-    both ClosedJaxpr params (pjit) and raw Jaxpr params (shard_map)."""
-    prims = set()
-    todo = [jaxpr]
-    while todo:
-        j = todo.pop()
-        for eqn in j.eqns:
-            prims.add(eqn.primitive.name)
-            for v in eqn.params.values():
-                for x in (v if isinstance(v, (list, tuple)) else [v]):
-                    if hasattr(x, "eqns"):
-                        todo.append(x)
-                    elif hasattr(x, "jaxpr"):
-                        todo.append(x.jaxpr)
-    return prims
-
-
 def _assert_planned_collectives_only(fn, args, collective):
     """The jaxpr pin: exactly the plan's collectives appear — no unplanned
     resharding transfer anywhere in the traced program."""
-    prims = _all_primitives(jax.make_jaxpr(fn)(*args).jaxpr)
-    got = frozenset(prims) & _COLLECTIVE_PRIMS
-    want = _PLANNED_PRIMS[collective]
-    assert got <= want, (collective, sorted(got))
-    # the planned collective really is in the program (unless none/size-1)
-    if want:
-        assert got, (collective, sorted(prims))
+    assert not analysis.lint(fn, *args, rules=("only-planned-collectives",),
+                             collective=collective), collective
 
 
 def _run_matrix():

@@ -13,6 +13,7 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
+from repro import analysis
 from repro.core import expr as E
 from repro.core import hardware as hw
 from repro.core import onf as onf_mod
@@ -322,9 +323,8 @@ def test_transpose_b_jaxpr_has_no_relayout():
                             "float32", "float32", "cpu", True)
     x = jnp.zeros((m, k), jnp.float32)
     w = jnp.zeros((n, k), jnp.float32)
-    jaxpr = jax.make_jaxpr(fn)(x, w)
-    prims = {eqn.primitive.name for eqn in jaxpr.jaxpr.eqns}
-    assert "transpose" not in prims, sorted(prims)
+    assert not analysis.lint(fn, x, w, rules=("no-transpose-copy",
+                                              "no-silent-fallback"))
 
 
 def test_matmul_transpose_b_matches_xT_and_collapses_dims():
@@ -342,23 +342,6 @@ def test_matmul_transpose_b_matches_xT_and_collapses_dims():
                                out_dtype=jnp.float32), want) < 1e-4
 
 
-def _all_primitives(jaxpr) -> set:
-    prims = set()
-    todo = [jaxpr]
-    while todo:
-        j = todo.pop()
-        for eqn in j.eqns:
-            prims.add(eqn.primitive.name)
-            for v in eqn.params.values():
-                inner = getattr(v, "jaxpr", None)
-                if inner is not None:
-                    todo.append(inner)
-                elif isinstance(v, (list, tuple)):
-                    todo.extend(getattr(x, "jaxpr", None) for x in v
-                                if getattr(x, "jaxpr", None) is not None)
-    return prims
-
-
 def test_matmul_backward_has_no_relayout_either():
     """Both VJP gradients are derived transposed-operand GEMMs: no
     transpose primitive in the whole grad jaxpr, forward or backward,
@@ -369,9 +352,8 @@ def test_matmul_backward_has_no_relayout_either():
 
         x = jnp.zeros((8, 16), jnp.float32)
         w = jnp.zeros((4, 16) if tb else (16, 4), jnp.float32)
-        jaxpr = jax.make_jaxpr(jax.grad(loss, argnums=(0, 1)))(x, w)
-        prims = _all_primitives(jaxpr.jaxpr)
-        assert "transpose" not in prims, (tb, sorted(prims))
+        assert not analysis.lint(jax.grad(loss, argnums=(0, 1)), x, w,
+                                 rules=("no-transpose-copy",)), tb
 
 
 def test_onf_key_is_axis_name_independent():
