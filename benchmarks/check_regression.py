@@ -1,5 +1,5 @@
-"""CI bench-regression gate: re-run ``bench_schedule`` and diff against the
-committed ``BENCH_schedule.json`` baseline.
+"""CI bench-regression gate: re-run the benched suites and diff against
+their committed baselines (``BENCH_schedule.json``, ``BENCH_serve.json``).
 
 The paper's energy claims only stay honest if every PR's numbers are
 enforced ("Racing to Idle"): the modeled quantities — block choices, grids,
@@ -10,10 +10,15 @@ real signal, so they only fail when a fresh timing exceeds ``TIME_TOL``x
 its baseline — catching an accidental oracle fallback or a schedule-cache
 regression (order-of-magnitude slowdowns), not CI jitter.
 
+Serving rows add throughput (``tok_s_`` prefix): a rate, so the
+tolerance runs the other way — fresh may drop to ``1/TIME_TOL`` of
+baseline before failing.
+
 A PR that intentionally changes a modeled number (new solver, new rows)
-regenerates the baseline in the same commit::
+regenerates the affected baseline in the same commit::
 
     PYTHONPATH=src python -m benchmarks.bench_schedule
+    PYTHONPATH=src python -m benchmarks.bench_serve
 
 and this gate then pins the new trajectory.  Exit status: 0 clean,
 1 on any regression (each violation printed).
@@ -25,8 +30,10 @@ import math
 import os
 import sys
 
-BASELINE_PATH = os.path.join(os.path.dirname(__file__), "..",
-                             "BENCH_schedule.json")
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+#: (baseline json, module whose run() regenerates it)
+BASELINES = (("BENCH_schedule.json", "bench_schedule"),
+             ("BENCH_serve.json", "bench_serve"))
 #: interpret-mode timings: fresh may be up to this factor over baseline
 TIME_TOL = 3.0
 #: modeled quantities are deterministic — exact-ish only absorbs float repr
@@ -35,6 +42,10 @@ MODEL_RTOL = 1e-6
 
 def _is_timing(key: str) -> bool:
     return key.startswith("us_")
+
+
+def _is_throughput(key: str) -> bool:
+    return key.startswith("tok_s_")
 
 
 def _compare(path: str, base, fresh, errors: list[str]) -> None:
@@ -68,6 +79,11 @@ def _compare(path: str, base, fresh, errors: list[str]) -> None:
                 errors.append(f"{path}: timing regressed "
                               f"{base:.1f}us -> {fresh:.1f}us "
                               f"(> {TIME_TOL}x)")
+        elif _is_throughput(key):
+            if base > 0 and fresh < base / TIME_TOL:
+                errors.append(f"{path}: throughput regressed "
+                              f"{base:.1f} -> {fresh:.1f} tok/s "
+                              f"(< 1/{TIME_TOL}x)")
         elif not math.isclose(base, fresh, rel_tol=MODEL_RTOL,
                               abs_tol=1e-12):
             errors.append(f"{path}: modeled value drifted {base!r} -> "
@@ -77,24 +93,25 @@ def _compare(path: str, base, fresh, errors: list[str]) -> None:
         errors.append(f"{path}: {base!r} -> {fresh!r}")
 
 
-def main() -> int:
-    if not os.path.exists(BASELINE_PATH):
-        print("no committed BENCH_schedule.json baseline — run "
-              "`PYTHONPATH=src python -m benchmarks.bench_schedule` and "
+def _gate(json_name: str, module: str) -> int:
+    import importlib
+    path = os.path.join(_ROOT, json_name)
+    if not os.path.exists(path):
+        print(f"no committed {json_name} baseline — run "
+              f"`PYTHONPATH=src python -m benchmarks.{module}` and "
               "commit it", file=sys.stderr)
         return 1
-    with open(BASELINE_PATH) as f:
+    with open(path) as f:
         baseline = json.load(f)
 
-    from benchmarks import bench_schedule
-    bench_schedule.run()                 # rewrites BENCH_schedule.json
-    with open(BASELINE_PATH) as f:
+    importlib.import_module(f"benchmarks.{module}").run()  # rewrites json
+    with open(path) as f:
         fresh = json.load(f)
 
     errors: list[str] = []
-    _compare("bench", baseline, fresh, errors)
+    _compare(module, baseline, fresh, errors)
     if errors:
-        print(f"bench regression: {len(errors)} violation(s) vs committed "
+        print(f"{json_name}: {len(errors)} violation(s) vs committed "
               "baseline", file=sys.stderr)
         for e in errors:
             print(f"  {e}", file=sys.stderr)
@@ -103,10 +120,14 @@ def main() -> int:
         1 for section in baseline.values() if isinstance(section, (list, dict))
         for rec in (section if isinstance(section, list) else [section])
         if isinstance(rec, dict)
-        for k in rec if _is_timing(k))
-    print(f"bench regression gate clean: modeled values exact, "
+        for k in rec if _is_timing(k) or _is_throughput(k))
+    print(f"{json_name} gate clean: modeled values exact, "
           f"{n_timings} timings within {TIME_TOL}x of baseline")
     return 0
+
+
+def main() -> int:
+    return max(_gate(name, mod) for name, mod in BASELINES)
 
 
 if __name__ == "__main__":

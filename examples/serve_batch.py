@@ -1,5 +1,7 @@
-"""Batched serving example: prefill + greedy decode over a request batch,
-with per-request positions (ragged prompts via left-padding).
+"""Batched serving example: ragged prompts through the continuous-batching
+engine — admission, paged KV allocation, prefill/decode interleaving and
+eviction all live in ``repro.serving.ServeEngine``; this example only
+submits requests and reads tokens back.
 
     PYTHONPATH=src python examples/serve_batch.py [--arch gemma-2b]
 """
@@ -7,10 +9,10 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models import registry
+from repro.serving import ServeEngine
 
 
 def main():
@@ -23,41 +25,30 @@ def main():
     cfg = get_config(args.arch, reduced=True)
     params, _ = registry.init(cfg, jax.random.PRNGKey(0))
 
-    # ragged prompts, right-aligned into a common cache
+    # ragged prompts: each request keeps its own length and page table
     rng = jax.random.PRNGKey(1)
     lens = [3, 7, 5, 9][:args.batch]
-    cache_len = max(lens) + args.new_tokens
-    cache = registry.init_cache(cfg, args.batch, cache_len,
-                                dtype=jnp.dtype(cfg.dtype))
-    step = jax.jit(lambda p, t, pos, c: registry.decode_step(p, cfg, t, pos, c))
+    max_len = max(lens) + args.new_tokens
+    engine = ServeEngine(cfg, params, max_slots=args.batch,
+                         max_len=max_len, page=8)
+    toks = jax.random.randint(rng, (args.batch, max(lens)), 0,
+                              cfg.vocab_size)
 
-    # feed each prompt token (per-row positions differ -> true batched ragged)
-    toks = jax.random.randint(rng, (args.batch, max(lens)), 0, cfg.vocab_size)
-    pos = jnp.zeros((args.batch,), jnp.int32)
-    logits = None
-    active = jnp.asarray(lens, jnp.int32)
-    for t in range(max(lens)):
-        cur = toks[:, t]
-        logits_t, cache = step(params, cur, pos, cache)
-        # rows whose prompt is exhausted keep their last logits
-        logits = logits_t if logits is None else jnp.where(
-            (t < active)[:, None], logits_t, logits)
-        pos = pos + (t < active).astype(jnp.int32)
-
-    out = []
     t0 = time.time()
-    for i in range(args.new_tokens):
-        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
-        out.append(nxt)
-        logits, cache = step(params, nxt, pos, cache)
-        pos = pos + 1
+    rids = [engine.submit(toks[i, :lens[i]].tolist(), args.new_tokens,
+                          now=0.0)
+            for i in range(args.batch)]
+    results = engine.run(clock=lambda: time.time() - t0)
     dt = time.time() - t0
-    gen = jnp.stack(out, 1)
-    print(f"arch={cfg.name} batch={args.batch} ragged lens={lens}")
-    print(f"decode: {args.new_tokens} steps in {dt:.2f}s "
-          f"({args.batch * args.new_tokens / dt:.0f} tok/s incl. dispatch)")
-    for i in range(args.batch):
-        print(f"req{i} len{lens[i]} ->", gen[i, :10].tolist())
+
+    n_tok = sum(len(results[r]["tokens"]) for r in rids)
+    print(f"arch={cfg.name} batch={args.batch} ragged lens={lens} "
+          f"paged={engine.paged} page={engine.page}")
+    print(f"{n_tok} tokens in {dt:.2f}s "
+          f"({n_tok / dt:.0f} tok/s incl. compile + dispatch)")
+    for i, rid in enumerate(rids):
+        print(f"req{rid} len{lens[i]} ->",
+              results[rid]["tokens"][:10])
 
 
 if __name__ == "__main__":

@@ -117,6 +117,38 @@ def _spec_findings(spec: OperandSpec, grid, axis_extent: dict,
                     f"{spec.array} dim {i} ({ax!r}) driven by grid dim "
                     f"{gd}, but the grid has {len(grid)} axes"))
                 continue
+            table = getattr(spec, "page_table", None)
+            if table is not None and i == 0:
+                # a paged psi view: dim 0's stored extent is the slab pool,
+                # its logical extent is len(table) pages of ``b``.  The
+                # per-page slab offsets must stay inside the pool (the
+                # paged analogue of psi-bounds) and the table must name one
+                # slab per streamed grid step.
+                if len(table) != grid[gd].extent:
+                    out.append(Finding(
+                        "page-bounds", "error", subject,
+                        f"{spec.array}: page table names {len(table)} "
+                        f"slabs but the streamed grid dim {gd} runs "
+                        f"{grid[gd].extent} steps"))
+                for pno, slab in enumerate(table):
+                    if slab < 0 or (slab + 1) * b > s:
+                        out.append(Finding(
+                            "page-bounds", "error", subject,
+                            f"{spec.array}: view page {pno} maps to slab "
+                            f"{slab}, whose block of {b} ends at "
+                            f"{(slab + 1) * b} — outside the {s}-element "
+                            f"pool"))
+                full = len(table) * b
+                prev = axis_extent.get(ax)
+                if prev is None:
+                    axis_extent[ax] = full
+                elif prev != full:
+                    out.append(Finding(
+                        "coverage", "error", subject,
+                        f"axis {ax!r} presents extent {full} on "
+                        f"{spec.array} but {prev} elsewhere — operands "
+                        f"disagree on the logical iteration space"))
+                continue
             covered = b * grid[gd].extent
             if covered != s:
                 out.append(Finding(

@@ -47,6 +47,10 @@ def _forms():
     yield "ssd_bwd", E.ssd_bwd_form(1, 4, 64, 2, 16, 16)
     yield "rglru", E.rglru_form(1, 4, 64, 32)
     yield "rglru_bwd", E.rglru_bwd_form(1, 4, 64, 32)
+    # the paged decode step: a scrambled page table into a larger slab pool
+    yield "windowed_decode", E.windowed_decode_form(
+        2, 4, 64, page=16, view_pages=4, pool_pages=6,
+        page_table=(0, 3, 1, 5), window=32)
 
 
 #: (input dtype, accumulation dtype) — legality is decided per hardware

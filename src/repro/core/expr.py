@@ -374,6 +374,15 @@ class RecurrentForm:
     in-block masks from them, so windowed / prefix-LM attention schedules
     are derived rather than falling back to the chunked jnp path.
 
+    ``page_table``/``paged``/``pool_pages`` make the streamed axis a *psi
+    view over paged storage*: each leaf named in ``paged`` binds one pool
+    buffer of ``pool_pages`` fixed-size slabs (slab length = the streamed
+    block), and streamed step ``k`` reads slab ``page_table[k]`` — the
+    per-page ``Access.const`` offsets of an index-0 psi view, lowered as a
+    static table lookup in the operand's BlockSpec index map instead of a
+    gather-copy.  The table is static metadata (it changes only when the
+    serving engine allocates a page, never per token) and rides ``key()``.
+
     This is the artifact ``core.schedule.get_schedule`` accepts alongside a
     plain ``NormalForm``; its ``key()`` keys the same LRU cache.
     """
@@ -384,6 +393,9 @@ class RecurrentForm:
     aux: Tuple[LeafSpec, ...] = ()
     window: int = 0
     prefix_len: int = 0
+    page_table: Tuple[int, ...] = ()
+    paged: Tuple[str, ...] = ()
+    pool_pages: int = 0
 
     def __post_init__(self):
         if not self.stages:
@@ -431,6 +443,30 @@ class RecurrentForm:
                         f"with the stage extent ({ext[s]})")
         if (self.window or self.prefix_len) and self.window < 0:
             raise ValueError(f"negative window {self.window}")
+        if self.page_table or self.paged or self.pool_pages:
+            if not (self.page_table and self.paged and self.pool_pages > 0):
+                raise ValueError(
+                    "paged streaming needs all three of page_table / paged "
+                    "leaf names / pool_pages")
+            bad = [t for t in self.page_table
+                   if not 0 <= int(t) < self.pool_pages]
+            if bad:
+                raise ValueError(
+                    f"page-table entries {bad} outside the pool "
+                    f"[0, {self.pool_pages})")
+            leaf_names = {l.array for nf in self.stages for l in nf.leaves}
+            missing = [a for a in self.paged if a not in leaf_names]
+            if missing:
+                raise ValueError(
+                    f"paged leaves {missing} are not stage leaves")
+            for nf in self.stages:
+                for l in nf.leaves:
+                    if l.array in self.paged and (
+                            not l.dims or l.dims[0][0] != self.stream_axis):
+                        raise ValueError(
+                            f"paged leaf {l.array!r} must store the streamed "
+                            f"axis {self.stream_axis!r} as its leading dim, "
+                            f"got {l.dims}")
 
     @property
     def folding(self) -> bool:
@@ -464,7 +500,8 @@ class RecurrentForm:
                 self.stages[0].out_axes.index(self.stream_axis),
                 self.state.key(),
                 tuple((l.array, l.dims, l.layout) for l in self.aux),
-                self.window, self.prefix_len)
+                self.window, self.prefix_len,
+                self.page_table, self.paged, self.pool_pages)
 
 
 def StreamingForm(name: str, scores: NormalForm, context: NormalForm,
@@ -771,6 +808,69 @@ def rglru_form(b: int, nc: int, q: int, w: int) -> RecurrentForm:
         leaves=(A, Bv), combine="mul", reduce_op="add")
     H0 = LeafSpec("H0", (("b", b), ("w", w)), "row")
     return RecurrentForm("rglru_scan", (stage,), "c", GATED_STATE, aux=(H0,))
+
+
+#: the windowed-decode monoid: the online-softmax carried state over the
+#: *query-group* row axis (decode has one query token; the GQA group axis
+#: is the blocked per-row axis), masked dynamically from the runtime
+#: position aux instead of statically from the grid step
+DECODE_STATE = StateSpec("windowed_decode",
+                         (("m", ("g",)), ("l", ("g",)),
+                          ("acc", ("g", "d"))))
+
+
+def windowed_decode_form(hkv: int, g: int, hd: int,
+                         vd: Optional[int] = None, *, page: int,
+                         view_pages: int, pool_pages: int,
+                         page_table: Tuple[int, ...],
+                         window: int = 0) -> RecurrentForm:
+    """One decode step over a *paged* KV cache as a folding recurrence.
+
+    The single query token's GQA group axis ``g`` is the blocked row axis
+    (it must be >= 2 — pure-MHA decode has no blocked per-row axis to fold
+    over and the derivation refuses); key positions ``j`` stream with block
+    = ``page``, so each streamed step is exactly one page and the K/V
+    BlockSpec index maps read ``page_table[k]`` — the per-page psi slab
+    offsets — straight from pool storage:
+
+    * ``decode_scores``:  s[h,g,j] = sum_c Q[h,g,c] * K[j,h,c]
+    * ``decode_context``: o[h,g,d] = sum_j P[h,g,j] * V[j,h,d]
+
+    K/V carry no ``g`` dim (the GQA zero-coefficient recovery) and store
+    the streamed axis leading, as the pools do.  The aux ``POS`` operand
+    carries the runtime view-relative query position — masking is dynamic
+    (position is data, the table is static), which is what keeps one
+    executor per table instead of one per token.  ``window`` > 0 masks
+    keys older than ``window`` positions; the engine then only binds the
+    ceil(window/page)+1 live pages, making decode O(window) regardless of
+    sequence length.
+    """
+    if g < 2:
+        raise ValueError(
+            f"windowed_decode folds over the GQA group axis; g={g} leaves "
+            "no blocked per-row axis (use the dense decode path)")
+    if len(page_table) != view_pages:
+        raise ValueError(
+            f"page table length {len(page_table)} != view_pages {view_pages}")
+    vd = vd or hd
+    sk = view_pages * page
+    Q = LeafSpec("Q", (("h", hkv), ("g", g), ("c", hd)), "row")
+    K = LeafSpec("K", (("j", sk), ("h", hkv), ("c", hd)), "row")
+    scores = NormalForm(
+        name="decode_scores", out_axes=("h", "g", "j"), reduce_axes=("c",),
+        extents=(("h", hkv), ("g", g), ("j", sk), ("c", hd)),
+        leaves=(Q, K), combine="mul", reduce_op="add")
+    P = LeafSpec("P", (("h", hkv), ("g", g), ("j", sk)), "row")
+    V = LeafSpec("V", (("j", sk), ("h", hkv), ("d", vd)), "row")
+    context = NormalForm(
+        name="decode_context", out_axes=("h", "g", "d"), reduce_axes=("j",),
+        extents=(("h", hkv), ("g", g), ("d", vd), ("j", sk)),
+        leaves=(P, V), combine="mul", reduce_op="add")
+    POS = LeafSpec("POS", (("_pr", 1), ("_pc", 2)), "row")
+    return RecurrentForm("windowed_decode", (scores, context), "j",
+                         DECODE_STATE, aux=(POS,), window=int(window),
+                         page_table=tuple(int(t) for t in page_table),
+                         paged=("K", "V"), pool_pages=int(pool_pages))
 
 
 # ---------------------------------------------------------------------------

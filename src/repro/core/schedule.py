@@ -32,7 +32,7 @@ import string
 import threading
 import warnings
 from collections import OrderedDict
-from dataclasses import dataclass
+from dataclasses import dataclass, replace as _dc_replace
 from typing import Optional, Sequence, Union
 
 from repro.core import expr as expr_mod
@@ -78,13 +78,22 @@ class OperandSpec:
     BlockSpec lowering of a psi view's constant Access term.  A non-psi
     operand has all-zero offsets; a psi operand carries one leading
     ``PSI_AXIS`` dimension (block extent 1) whose offset pins it at the
-    viewed slab."""
+    viewed slab.
+
+    ``page_table`` generalizes the single constant offset to *one constant
+    per grid step* of the leading dimension: block index ``k`` of dim 0
+    reads block ``page_table[k]`` of the stored pool instead of ``k`` — the
+    BlockSpec lowering of a paged psi view whose per-page slab offsets are
+    ``Access.const`` terms.  ``shape[0]`` is then the pool extent
+    (pool_pages * block), not the logical view extent
+    (len(page_table) * block)."""
     array: str
     axes: tuple[str, ...]
     shape: tuple[int, ...]
     block: tuple[int, ...]
     grid_dims: tuple[Optional[int], ...]
     offsets: tuple[int, ...] = ()
+    page_table: Optional[tuple[int, ...]] = None
 
     @property
     def is_psi_view(self) -> bool:
@@ -917,6 +926,8 @@ def _build_recurrent_bundle(rf: "expr_mod.RecurrentForm", dtype, hw_shape,
     sched = derive_recurrent_schedule(
         tuple(lift_stage(nf) for nf in rf.stages), stream_sym, rf.state,
         aux, rf.window, rf.prefix_len, hw_shape, dtype, acc_dtype)
+    if rf.page_table:
+        sched = _page_schedule(sched, rf, ext, pads, stream_sym)
     logical = tuple(ext[s] for s in order)
     padded = tuple(pads.get(s, ext[s]) for s in order)
     in_shapes = rf.stages[0].leaf_storage_shapes()
@@ -926,6 +937,52 @@ def _build_recurrent_bundle(rf: "expr_mod.RecurrentForm", dtype, hw_shape,
     return ScheduleBundle(rf.name, sched, blocks, logical, padded,
                           rf.stages[-1].out_shape(), in_shapes,
                           acc_dtype=acc_dtype)
+
+
+def _page_schedule(sched: RecurrentSchedule, rf: "expr_mod.RecurrentForm",
+                   ext: dict, pads: dict, stream_sym: str
+                   ) -> RecurrentSchedule:
+    """Rewrite the paged leaves' operands to read pool storage through the
+    page table: the streamed leading dimension's block index becomes a
+    static table lookup (block ``k`` -> pool slab ``page_table[k]``), and
+    the operand's declared shape[0] becomes the *pool* extent.  Derivation
+    refuses any weld the table cannot drive: a padded stream axis (the
+    table would run past its last entry), a non-leading or non-streamed
+    leading dim, or a block that is not exactly the page size."""
+    if pads.get(stream_sym, ext[stream_sym]) != ext[stream_sym]:
+        raise ValueError(
+            f"paged stream axis {stream_sym!r} must not pad — the view "
+            f"extent {ext[stream_sym]} is not a multiple of the derived "
+            "stream block; choose page-aligned blocks")
+    page = sched.stream_block
+    n_steps = sched.grid[sched.stream_grid_dim].extent
+    if len(rf.page_table) != n_steps:
+        raise ValueError(
+            f"page table has {len(rf.page_table)} entries but the streamed "
+            f"grid axis takes {n_steps} steps (block {page})")
+    new_ins = []
+    for spec in sched.ins:
+        if spec.array not in rf.paged:
+            new_ins.append(spec)
+            continue
+        if not spec.axes or spec.axes[0] != stream_sym:
+            raise ValueError(
+                f"paged operand {spec.array!r} does not keep the streamed "
+                f"axis leading ({spec.axes}) — no table-driven index map")
+        if spec.grid_dims[0] != sched.stream_grid_dim \
+                or spec.block[0] != page:
+            raise ValueError(
+                f"paged operand {spec.array!r} dim 0 is not the streamed "
+                f"page block (block {spec.block[0]}, grid dim "
+                f"{spec.grid_dims[0]})")
+        if spec.offsets[0]:
+            raise ValueError(
+                f"paged operand {spec.array!r} mixes a constant psi offset "
+                "with a page table")
+        pool = rf.pool_pages * page
+        new_ins.append(_dc_replace(spec, shape=(pool,) + spec.shape[1:],
+                                   page_table=rf.page_table))
+    return _dc_replace(sched, ins=tuple(new_ins))
 
 
 #: the deprecated string ops, as the expressions they always were

@@ -53,12 +53,33 @@ def compiler_params(*, dimension_semantics) -> object:
 
 
 def _index_map(grid_dims: tuple[Optional[int], ...],
-               offsets: tuple[int, ...] = ()) -> Callable:
+               offsets: tuple[int, ...] = (),
+               page_table: Optional[tuple[int, ...]] = None) -> Callable:
+    """BlockSpec index map from the operand's grid bindings.
+
+    ``offsets`` add a constant block offset per dimension (a psi view's
+    slab).  ``page_table`` generalizes the constant to one-per-grid-step on
+    the *leading* dimension: streamed block ``k`` reads stored block
+    ``page_table[k]`` — the static lookup that lowers a paged psi view's
+    per-page slab offsets without a gather-copy.  The lookup is unrolled
+    as a ``jnp.where`` fold over integer literals because Pallas index
+    maps may not capture constant arrays."""
     offs = offsets or (0,) * len(grid_dims)
 
+    def _lookup(i):
+        slab = jnp.int32(page_table[0])
+        for k, t in enumerate(page_table[1:], start=1):
+            slab = jnp.where(i == k, jnp.int32(t), slab)
+        return slab
+
     def imap(*gids):
-        return tuple((gids[d] if d is not None else 0) + off
-                     for d, off in zip(grid_dims, offs))
+        idx = []
+        for dim, (d, off) in enumerate(zip(grid_dims, offs)):
+            i = (gids[d] if d is not None else 0) + off
+            if dim == 0 and page_table is not None:
+                i = _lookup(i)
+            idx.append(i)
+        return tuple(idx)
     return imap
 
 
@@ -767,6 +788,91 @@ def _ssd_backward_kind(rs: StreamingSchedule, *, scale, causal,
     return body, scratch
 
 
+def _windowed_decode_kind(rs: StreamingSchedule, *, scale, causal,
+                          logical_stream, out_dtype):
+    """The windowed-decode monoid: online softmax over one query token's
+    GQA group rows, streamed one KV page per step through the page-table
+    index maps.  Operand order (Q, K, V, POS); the carried (m, l, acc)
+    state is O(row x value) — with a window, the engine binds only the
+    live pages, so a decode step is O(window) work and state no matter how
+    long the sequence is.
+
+    Masking is *dynamic*, from the runtime view-relative query position in
+    the POS aux (``POS[0, 0]``): the page table is static per executor but
+    the position is data, so one compiled kernel serves every token between
+    page allocations.  Both the per-key mask and the whole-page block-skip
+    derive from it — pages entirely after the query (or entirely behind
+    the window) never run, which also keeps stale ring slabs inert."""
+    ni = len(rs.ins)
+    bq, bk = rs.row_block, rs.stream_block
+    stream_dim = rs.stream_grid_dim
+    nk = rs.grid[stream_dim].extent
+    window = rs.window
+    if rs.prefix_len:
+        raise ValueError("windowed_decode does not take a prefix_len — "
+                         "prefix tokens are all at or before the query")
+    scores_plan, scores_keep = rs.stages[0].einsum_plan()
+    ctx_plan, ctx_keep = rs.stages[1].einsum_plan()
+    acc_block = rs.acc_block
+
+    def body(*refs):
+        o_ref = refs[ni]
+        m_ref, l_ref, acc_ref = refs[ni + 1:ni + 4]
+        ki = pl.program_id(stream_dim)
+        vpos = refs[ni - 1][0, 0]          # view-relative query position
+
+        @pl.when(ki == 0)
+        def _init():
+            m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        # dynamic block-skip: the page is after the query, or (windowed)
+        # its newest key is already out of the window
+        run = ki * bk <= vpos
+        if window:
+            run = jnp.logical_and(run, ki * bk + bk - 1 > vpos - window)
+
+        @pl.when(run)
+        def _step():
+            q, k = (refs[i][...].reshape(
+                tuple(opn.block[d] for d in keep))
+                for i, (opn, keep) in enumerate(zip(rs.ins[:2], scores_keep)))
+            s = jnp.einsum(scores_plan, q, k,
+                           preferred_element_type=jnp.float32) * scale
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            mask = kpos <= vpos
+            if window:
+                mask = jnp.logical_and(mask, kpos > vpos - window)
+            s = jnp.where(mask, s, NEG_INF)
+            m_prev = m_ref[:, 0]
+            m_new = jnp.maximum(m_prev, s.max(axis=-1))
+            p = jnp.exp(s - m_new[:, None])
+            corr = jnp.exp(m_prev - m_new)
+            l_ref[:, 0] = l_ref[:, 0] * corr + p.sum(axis=-1)
+            m_ref[:, 0] = m_new
+            v = refs[2][...].reshape(
+                tuple(rs.ins[2].block[d] for d in ctx_keep[1]))
+            acc_ref[...] = (
+                acc_ref[...] * corr[:, None]
+                + jnp.einsum(ctx_plan, p.astype(v.dtype), v,
+                             preferred_element_type=jnp.float32
+                             ).reshape(acc_block))
+
+        @pl.when(ki == nk - 1)
+        def _flush():
+            o_ref[...] = (acc_ref[...] /
+                          jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
+                          ).astype(out_dtype).reshape(rs.out.block)
+
+    scratch = [
+        pltpu.VMEM((bq, 1), jnp.float32),            # running max m
+        pltpu.VMEM((bq, 1), jnp.float32),            # denominator l
+        pltpu.VMEM(acc_block, jnp.float32),          # rescaled acc
+    ]
+    return body, scratch
+
+
 #: the carried-state monoid registry: ``expr.StateSpec.kind`` -> body
 #: builder.  New recurrences (flash backward, windowed streams) register
 #: here instead of growing their own emitters.  ``gated_backward`` IS the
@@ -780,6 +886,7 @@ RECURRENCE_KINDS: dict[str, Callable] = {
     "flash_dkv": _flash_dkv_kind,
     "ssd_backward": _ssd_backward_kind,
     "gated_backward": _gated_kind,
+    "windowed_decode": _windowed_decode_kind,
 }
 
 
@@ -821,7 +928,8 @@ def emit_recurrent(rs: StreamingSchedule, *, scale: float = 1.0,
         body,
         grid=rs.grid_extents,
         in_specs=[pl.BlockSpec(opn.block, _index_map(opn.grid_dims,
-                                                     opn.offsets))
+                                                     opn.offsets,
+                                                     opn.page_table))
                   for opn in rs.ins],
         out_specs=[pl.BlockSpec(o.block, _index_map(o.grid_dims, o.offsets))
                    for o in outs],

@@ -1003,6 +1003,115 @@ def gated_scan(log_a: jax.Array, b_in: jax.Array, *,
 
 
 # ---------------------------------------------------------------------------
+# paged decode: one query token against a paged KV cache.  The page table is
+# STATIC schedule metadata (it rides RecurrentForm.key(), so the executor
+# cache re-keys only when pages are allocated, never per token); the query's
+# view-relative position is RUNTIME data in the POS aux operand, so one
+# compiled kernel serves every token between allocations.  "xla" entries use
+# the gather-pages jnp oracle — also the bit-identity reference for tests.
+# ---------------------------------------------------------------------------
+
+def default_decode_page(view_tokens: int, hkv: int, g: int, hd: int,
+                        vd: int = 0, dtype="float32",
+                        hardware: Optional[HardwareEntry] = None) -> int:
+    """The derived KV page size: ``solve_recurrence_blocks`` over the
+    streamed key axis with the O(window) carried (m, l, acc) state, the
+    per-page K/V slabs as the token operands and the (g, page) score block
+    as the quadratic intermediate.  The solved stream block IS the page —
+    pages exist so BlockSpecs can address them, so their size is a property
+    of the memory hierarchy, not a tuning knob."""
+    from repro.core.blocking import solve_recurrence_blocks
+    vd = vd or hd
+    hw = hardware or current_hardware()
+    choice = solve_recurrence_blocks(
+        view_tokens,
+        token_elems=hkv * (hd + vd),            # one K + one V row per key
+        state_elems=g * (vd + 2),               # carried acc + (m, l)
+        quad_elems=g,                           # the (g, page) score block
+        lin_elems=g * hd,                       # the resident query rows
+        dtype=dtype, hardware=getattr(hw, "shape", hw))
+    return choice.bs
+
+
+@functools.lru_cache(maxsize=512)
+def _decode_executor(hkv, g, hd, vd, page, view_pages, pool_pages, table,
+                     window, scale, dtype_s, hw_name, interpret):
+    """Jitted executable for one paged-decode shape + page table: the
+    cached derivation of ``expr.windowed_decode_form`` through
+    ``emit_recurrent``.  Binds (q, k_pool, v_pool, pos); returns the
+    (hkv, g, vd) f32 context.  A LIFO page allocator makes tables recur
+    across sequences, so this cache stays hot in steady-state serving."""
+    from repro.kernels.emit import emit_recurrent_bundle
+    form = E.windowed_decode_form(hkv, g, hd, vd, page=page,
+                                  view_pages=view_pages,
+                                  pool_pages=pool_pages, page_table=table,
+                                  window=window)
+    bundle = _sched.get_schedule(form, dtype=dtype_s,
+                                 hardware=get_entry(hw_name),
+                                 blocks=(g, page))
+    return jax.jit(emit_recurrent_bundle(bundle, scale=scale, causal=True,
+                                         out_dtype="float32",
+                                         interpret=interpret))
+
+
+def _paged_oracle(q, k_pool, v_pool, pos, table, page, scale, window):
+    """Gather the view pages into a contiguous cache, then run the masked
+    softmax — the reference the kernel must match bit-for-bit on integer
+    inputs (both paths do the same float ops in the same order per key)."""
+    idx = jnp.concatenate(
+        [jnp.arange(t * page, (t + 1) * page) for t in table])
+    k = k_pool[idx]                              # (sk, hkv, hd)
+    v = v_pool[idx]
+    s = jnp.einsum("hgc,jhc->hgj", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    j = jnp.arange(k.shape[0])[None, None, :]
+    vpos = pos[0, 0]
+    mask = j <= vpos
+    if window:
+        mask = jnp.logical_and(mask, j > vpos - window)
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return jnp.einsum("hgj,jhd->hgd", p, v.astype(jnp.float32))
+
+
+def paged_decode(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                 pos: jax.Array, *, page_table: tuple, page: int,
+                 scale: float, window: int = 0,
+                 interpret: Optional[bool] = None,
+                 hardware: Optional[HardwareEntry] = None) -> jax.Array:
+    """One decode step of grouped-query attention against a paged KV cache.
+
+    ``q`` is (hkv, g, hd) — one token's query heads grouped under their KV
+    head; ``k_pool``/``v_pool`` are the (pool_tokens, hkv, hd) slab pools;
+    ``pos`` is the (1, 2) int32 POS aux whose ``[0, 0]`` entry is the
+    query's VIEW-RELATIVE position (absolute position minus the view's
+    start token).  ``page_table`` maps view page -> pool slab; masking is
+    entirely in view coordinates, so unallocated trailing view pages may
+    point at any slab — the causal mask keeps them inert.
+    """
+    hw, interp = _resolve(hardware, interpret)
+    table = tuple(int(t) for t in page_table)
+    if not table:
+        raise ValueError("paged_decode requires a non-empty page table")
+    hkv, g, hd = q.shape
+    vd = v_pool.shape[-1]
+    if k_pool.shape[0] % page or k_pool.shape[0] != v_pool.shape[0]:
+        raise ValueError(
+            f"pool token extents {k_pool.shape[0]}/{v_pool.shape[0]} must "
+            f"be equal and a multiple of page={page}")
+    pool_pages = k_pool.shape[0] // page
+    use_kernel = _use_kernel(hw, interp, interpret)
+    if not use_kernel:
+        return _paged_oracle(q, k_pool, v_pool, pos, table, page,
+                             float(scale), int(window))
+    fn = _decode_executor(hkv, g, hd, vd, int(page), len(table),
+                          pool_pages, table, int(window), float(scale),
+                          str(jnp.dtype(q.dtype)), hw.name, bool(interp))
+    return fn(q, k_pool, v_pool, pos)
+
+
+# ---------------------------------------------------------------------------
 # the unified operator (paper appendix: "one algorithm/circuit (ipophp)")
 # ---------------------------------------------------------------------------
 

@@ -1,7 +1,11 @@
-"""Batched serving driver: prefill a batch of prompts, then decode greedily.
+"""Serving driver: a thin CLI over the continuous-batching engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
-        --batch 4 --prompt-len 16 --new-tokens 32
+        --requests 8 --prompt-len 16 --new-tokens 32
+
+Requests with random prompts stream into ``serving.ServeEngine`` —
+admission, page allocation and prefill/decode interleaving happen inside
+the engine; this file only builds the model, submits, and reports.
 """
 from __future__ import annotations
 
@@ -9,46 +13,48 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models import registry
-from repro.train.serve_step import greedy_generate
+from repro.serving import ServeEngine
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--max-slots", type=int, default=4)
+    ap.add_argument("--page", type=int, default=None,
+                    help="KV page size (default: solve_recurrence_blocks)")
+    ap.add_argument("--pool-pages", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
-    key = jax.random.PRNGKey(args.seed)
-    params, _ = registry.init(cfg, key)
-    prompt = jax.random.randint(jax.random.PRNGKey(1),
-                                (args.batch, args.prompt_len), 0,
-                                cfg.vocab_size)
-    cache_len = args.prompt_len + args.new_tokens
-    gen = jax.jit(lambda p, pr: greedy_generate(p, cfg, pr, args.new_tokens,
-                                                cache_len))
-    t0 = time.time()
-    out = gen(params, prompt)
-    out.block_until_ready()
-    compile_and_first = time.time() - t0
-    t0 = time.time()
-    out = gen(params, prompt)
-    out.block_until_ready()
-    steady = time.time() - t0
-    tok_s = args.batch * args.new_tokens / steady
-    print(f"arch={cfg.name} batch={args.batch} new={args.new_tokens}")
-    print(f"first call (incl. compile): {compile_and_first:.2f}s; "
-          f"steady: {steady:.3f}s = {tok_s:.1f} tok/s")
-    print("sample output ids:", out[0, args.prompt_len:][:16].tolist())
-    return out
+    params, _ = registry.init(cfg, jax.random.PRNGKey(args.seed))
+    max_len = args.prompt_len + args.new_tokens
+    engine = ServeEngine(cfg, params, max_slots=args.max_slots,
+                         max_len=max_len, page=args.page,
+                         pool_pages=args.pool_pages)
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(args.seed + 1),
+        (args.requests, args.prompt_len), 0, cfg.vocab_size)
+    t0 = time.perf_counter()
+    rids = [engine.submit(row.tolist(), args.new_tokens,
+                          now=time.perf_counter() - t0)
+            for row in prompts]
+    results = engine.run(clock=lambda: time.perf_counter() - t0)
+    wall = time.perf_counter() - t0
+    n_tok = sum(len(results[r]["tokens"]) for r in rids)
+    print(f"arch={cfg.name} paged={engine.paged} page={engine.page} "
+          f"slots={engine.max_slots}")
+    print(f"{args.requests} requests, {n_tok} tokens in {wall:.2f}s "
+          f"(incl. compile) = {n_tok / wall:.1f} tok/s")
+    print("sample output ids:", results[rids[0]]["tokens"][:16])
+    return results
 
 
 if __name__ == "__main__":

@@ -295,6 +295,62 @@ def attention_decode_ring(p: dict, x: jax.Array, cache: KV, pos: jax.Array,
     return o, KV(ck, cv)
 
 
+def attention_decode_paged(p: dict, x: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, pos: jax.Array,
+                           cfg: ArchConfig, *, page_table: tuple, page: int,
+                           window: int = 0, interpret=None
+                           ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode against a PAGED KV cache (one sequence).
+
+    x: (1, 1, d); k_pool/v_pool: (pool_tokens, KV, hd) slab pools; pos: (1,)
+    absolute position.  ``page_table`` (static) maps view page -> pool slab;
+    the logical cache is the psi view the table describes and the kernel's
+    BlockSpec index maps read through it — no gather-copy.  The view starts
+    at token 0, so the view-relative position equals ``pos``; with a
+    ``window`` the engine may retarget expired view pages at a recycled
+    slab, because masking keeps everything outside the window inert.
+
+    The new token's K/V land in the pool by slab arithmetic (a dynamic
+    two-step psi index: table[pos // page] picks the slab, pos % page the
+    row) — position is runtime data, so this stays one compiled program
+    across tokens.  Returns ``(out (1, 1, d), k_pool, v_pool)``.
+    """
+    hd = p["wq"].shape[-1]
+    scale = hd ** -0.5
+    q = _proj(x, p["wq"])
+    k = _proj(x, p["wk"])
+    v = _proj(x, p["wv"])
+    if cfg.use_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if cfg.rope_pct > 0:
+        sin, cos = rope_tables(pos[:, None], int(hd * cfg.rope_pct),
+                               cfg.rope_theta)
+        pct = 1.0 if cfg.rope_pct == 1.0 else (hd * cfg.rope_pct) / hd
+        q = apply_rope(q, sin, cos, pct)
+        k = apply_rope(k, sin, cos, pct)
+    table_arr = jnp.asarray(page_table, jnp.int32)
+    vpos = pos[0]
+    row = table_arr[vpos // page] * page + vpos % page
+    k_pool = jax.lax.dynamic_update_slice(
+        k_pool, k[0].astype(k_pool.dtype), (row, 0, 0))
+    v_pool = jax.lax.dynamic_update_slice(
+        v_pool, v[0].astype(v_pool.dtype), (row, 0, 0))
+    kvh = k_pool.shape[1]
+    h = q.shape[2]
+    qg = q[0, 0].reshape(kvh, h // kvh, hd)
+    pos_aux = jnp.stack([vpos.astype(jnp.int32), jnp.int32(0)])[None]
+    ctx = ops.paged_decode(qg, k_pool, v_pool, pos_aux,
+                           page_table=page_table, page=page, scale=scale,
+                           window=window, interpret=interpret)
+    out = ctx.reshape(1, 1, h, hd).astype(x.dtype)
+    o = _out_proj(out, p["wo"], x.dtype)
+    if cfg.use_bias:
+        o = o + p["bo"].astype(x.dtype)
+    return o, k_pool, v_pool
+
+
 def _cache_write(cache: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
     """Write new (B,1,...) into cache (B,S,...) at per-row pos (B,)."""
     b, s = cache.shape[:2]

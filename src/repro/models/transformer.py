@@ -531,6 +531,85 @@ def prefill(params: dict, cfg: ArchConfig, tokens: jax.Array,
     return logits, cache
 
 
+def has_prefill_decode_relayout(cfg: ArchConfig) -> bool:
+    """True when ``prefill_cache_to_decode`` can re-lay this family's
+    forward cache (the policy is config-only, so callers can decide
+    before paying for the prefill pass)."""
+    return ((cfg.family == "dense" and not cfg.local_window)
+            or cfg.family == "ssm")
+
+
+def prefill_cache_to_decode(cfg: ArchConfig, cache, cache_len: int):
+    """Re-lay a forward-layout prefill cache as a decode cache.
+
+    Returns None for families whose decode cache has no direct forward
+    equivalent — ring caches (windowed dense), grouped layer patterns,
+    hybrid stacks, vlm (prefill takes patches) — which must keep the
+    token-by-token ingestion scan.  Dense full-attention KV/MLA caches pad
+    the sequence axis out to ``cache_len`` (later positions are masked
+    until written); ssm caches carry forward unchanged — the final state
+    IS the decode state."""
+    if cfg.family == "dense" and not cfg.local_window:
+        def pad(t):
+            return jnp.pad(t, [(0, 0), (0, 0),
+                               (0, cache_len - t.shape[2])] +
+                           [(0, 0)] * (t.ndim - 3))
+        return {"layers": jax.tree.map(pad, cache)}
+    if cfg.family == "ssm":
+        return {"layers": cache}
+    return None
+
+
+def init_paged_pools(cfg: ArchConfig, pool_tokens: int,
+                     dtype=jnp.float32) -> dict:
+    """Per-layer stacked K/V slab pools for paged decode: one sequence's
+    logical cache is a psi view over these, described by its page table
+    (shared across layers — every layer writes the same positions)."""
+    if cfg.family not in ("dense", "vlm") or cfg.attention == "mla":
+        raise ValueError(
+            f"paged pools cover dense/vlm GQA decode, not "
+            f"family={cfg.family!r} attention={cfg.attention!r}")
+    shape = (cfg.n_layers, pool_tokens, cfg.n_kv_heads, cfg.head_dim_)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_step_paged(params: dict, cfg: ArchConfig, tokens: jax.Array,
+                      pos: jax.Array, pools: dict, *, page_table: tuple,
+                      page: int, interpret=None) -> tuple[jax.Array, dict]:
+    """One decode step for ONE sequence through its paged KV view.
+
+    tokens/pos: (1,) int32 (position is runtime data — one compiled program
+    per page table, not per token).  ``page_table`` is static: it re-keys
+    the derived decode kernel only when the engine allocates a page.
+    Returns (logits (1, vocab), updated pools).
+    """
+    if cfg.family not in ("dense", "vlm") or cfg.attention == "mla":
+        raise ValueError(f"decode_step_paged does not handle "
+                         f"family={cfg.family!r}/{cfg.attention!r}")
+    x = embed_tokens(params, tokens[:, None], cfg)
+
+    def body(xc, scan_in):
+        lp, kp, vp = scan_in
+        h = apply_norm(lp["ln1"], xc, cfg)
+        a_out, kp, vp = attn.attention_decode_paged(
+            lp["attn"], h, kp, vp, pos, cfg, page_table=page_table,
+            page=page, window=cfg.local_window, interpret=interpret)
+        if cfg.parallel_block:
+            m_out = apply_mlp(lp["mlp"], h, cfg)
+            xc = xc + a_out + m_out
+        else:
+            xc = xc + a_out
+            h2 = apply_norm(lp["ln2"], xc, cfg)
+            xc = xc + apply_mlp(lp["mlp"], h2, cfg)
+        return xc, (kp, vp)
+
+    x, (nk, nv) = _scan(cfg, body, x, (params["layers"],
+                                       pools["k"], pools["v"]))
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = logits_from_hidden(params, x, cfg)[:, 0]
+    return logits, {"k": nk, "v": nv}
+
+
 def lm_loss(params: dict, cfg: ArchConfig, tokens: jax.Array,
             targets: jax.Array, patches: Optional[jax.Array] = None,
             aux_weight: float = 0.01, z_weight: float = 1e-3

@@ -1,0 +1,14 @@
+"""Serving: continuous batching over a paged KV cache.
+
+The page table is the psi view: a sequence's logical KV cache is an
+index-0 view over fixed-size slabs in one shared pool, and the decode
+kernel's BlockSpec index maps are derived from the table
+(``kernels/emit._index_map``) instead of gather-copying pages.  The
+engine (``engine.ServeEngine``) interleaves derived flash prefill with
+paged ``windowed_decode`` steps under admission, slot and page pressure.
+"""
+from repro.serving.cache import OutOfPages, PagePool, pages_needed
+from repro.serving.engine import Request, ServeEngine
+
+__all__ = ["OutOfPages", "PagePool", "pages_needed", "Request",
+           "ServeEngine"]

@@ -1,0 +1,102 @@
+"""The paged KV pool: slab storage + the LIFO page allocator.
+
+One pool serves every sequence; a sequence owns a *page table* — the
+tuple of slab ids its psi view reads through.  Slab ``t`` is rows
+``[t * page, (t + 1) * page)`` of the per-layer ``(L, pool_tokens, KV,
+hd)`` storage, so the table is exactly the per-page ``Access.const``
+offset list the derived decode kernel lowers into its BlockSpec index
+map (``RecurrentForm.page_table``).
+
+The free list is LIFO on purpose: freed slabs are reissued
+most-recent-first, so short-lived sequences tend to see the *same*
+tables again and the lru-cached decode executors
+(``ops._decode_executor``) stay hot in steady-state serving.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.common import ArchConfig
+
+
+class OutOfPages(RuntimeError):
+    """The pool cannot satisfy an allocation — the engine's cue to evict."""
+
+
+def pages_needed(tokens: int, page: int) -> int:
+    """Pages covering ``tokens`` cache rows."""
+    return -(-tokens // page)
+
+
+class PagePool:
+    """Slab storage for one model + the free-slab stack.
+
+    ``pools`` holds the jnp arrays (``{"k", "v"}``, each ``(L,
+    pool_pages * page, KV, hd)``); the engine threads the functionally
+    updated arrays back through :meth:`update` after every decode step.
+    Allocation is pure bookkeeping over slab ids — no array traffic.
+    """
+
+    def __init__(self, cfg: ArchConfig, pool_pages: int, page: int,
+                 dtype=jnp.float32):
+        if pool_pages < 1 or page < 1:
+            raise ValueError(f"need pool_pages >= 1 and page >= 1, got "
+                             f"{pool_pages}/{page}")
+        self.page = int(page)
+        self.pool_pages = int(pool_pages)
+        self.pools = transformer.init_paged_pools(
+            cfg, self.pool_pages * self.page, dtype)
+        # LIFO stack; initialized descending so the first allocations walk
+        # the pool front-to-back
+        self._free = list(range(self.pool_pages - 1, -1, -1))
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.pool_pages - len(self._free)
+
+    def alloc(self, n: int) -> list[int]:
+        """Take ``n`` slabs off the free stack, newest-freed first."""
+        if n < 0:
+            raise ValueError(f"cannot allocate {n} pages")
+        if n > len(self._free):
+            raise OutOfPages(
+                f"need {n} page(s), {len(self._free)} free of "
+                f"{self.pool_pages}")
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, slabs) -> None:
+        """Return slabs to the stack (they reissue LIFO)."""
+        for s in slabs:
+            if not 0 <= s < self.pool_pages:
+                raise ValueError(f"slab {s} outside pool "
+                                 f"[0, {self.pool_pages})")
+            if s in self._free:
+                raise ValueError(f"double free of slab {s}")
+            self._free.append(s)
+
+    def update(self, pools: dict) -> None:
+        """Install the functionally-updated arrays after a decode step."""
+        self.pools = pools
+
+    def write_prefill(self, cache_kv, slabs: list[int], s0: int) -> None:
+        """Scatter a prefill cache (forward layout ``(L, 1, s0, KV, hd)``
+        per leaf) into the allocated slabs — the one copy at the
+        prefill -> paged-decode layout transition."""
+        page = self.page
+        k, v = self.pools["k"], self.pools["v"]
+        for vpg, slab in enumerate(slabs):
+            lo = vpg * page
+            if lo >= s0:
+                break
+            hi = min(s0, lo + page)
+            row = slab * page
+            k = k.at[:, row:row + (hi - lo)].set(
+                cache_kv.k[:, 0, lo:hi].astype(k.dtype))
+            v = v.at[:, row:row + (hi - lo)].set(
+                cache_kv.v[:, 0, lo:hi].astype(v.dtype))
+        self.pools = {"k": k, "v": v}

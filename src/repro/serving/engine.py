@@ -1,0 +1,299 @@
+"""Continuous batching over the paged KV cache.
+
+One engine iteration (:meth:`ServeEngine.step`) admits waiting requests
+into free slots (derived flash prefill — ONE kernel sweep per prompt,
+scattered into freshly allocated slabs), then runs one paged decode step
+per active slot.  The decode executable is keyed by the slot's page
+*table*, never by its position: position is runtime data in the POS aux
+operand, so the engine re-jits only when it allocates a page, and the
+LIFO allocator makes tables recur across requests so those executables
+stay cached.
+
+Under page pressure the engine preempts: the youngest other running
+sequence is evicted (slabs freed, request re-queued with its tokens so
+far) and re-prefills when re-admitted — recompute preemption, the
+standard continuous-batching fallback.
+
+Families without a paged KV view (ssm, hybrid, moe, mla, vlm) serve
+through per-slot contiguous caches and ``registry.decode_step`` under
+the same admission/slot scheduler, so one engine fronts every
+architecture in the registry.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import registry, transformer
+from repro.models.common import ArchConfig
+from repro.serving.cache import OutOfPages, PagePool, pages_needed
+
+
+@dataclass
+class Request:
+    """One generation request and its lifecycle metrics (caller clock)."""
+    rid: int
+    prompt: tuple
+    max_new: int
+    submit_t: float = 0.0
+    admit_t: Optional[float] = None
+    first_tok_t: Optional[float] = None
+    done_t: Optional[float] = None
+    evictions: int = 0
+
+
+@dataclass
+class _Slot:
+    req: Request
+    tokens: list            # prompt + emitted tokens, in order
+    n_emitted: int = 0
+    slabs: list = field(default_factory=list)     # the page table
+    cache: Optional[dict] = None                  # contiguous fallback only
+
+
+def _paged_capable(cfg: ArchConfig) -> bool:
+    """The derived paged path covers dense GQA/MQA-grouped decode: the
+    folding weld needs a blocked group-row axis (g >= 2) and a plain KV
+    cache (not MLA's latent, not vlm's patch-prefixed prefill)."""
+    return (cfg.family == "dense" and cfg.attention != "mla"
+            and cfg.n_heads // cfg.n_kv_heads >= 2)
+
+
+class ServeEngine:
+    """Continuous-batching scheduler over one model.
+
+    ``max_len`` bounds any sequence (prompt + generated); ``pool_pages``
+    sizes the shared slab pool; ``page=None`` takes the page size from
+    ``ops.default_decode_page`` — the solved stream block IS the page.
+    ``interpret`` rides through to the kernels (interpret-mode Pallas on
+    CPU).  The caller supplies timestamps (``now``) so latency metrics
+    use one clock.
+    """
+
+    def __init__(self, cfg: ArchConfig, params: Optional[dict] = None, *,
+                 key=None, max_slots: int = 2, max_len: int = 256,
+                 pool_pages: Optional[int] = None,
+                 page: Optional[int] = None, dtype=jnp.float32,
+                 interpret: Optional[bool] = None,
+                 eos_id: Optional[int] = None):
+        self.cfg = cfg
+        if params is None:
+            params, _ = registry.init(cfg, key if key is not None
+                                      else jax.random.PRNGKey(0))
+        self.params = params
+        self.max_slots = int(max_slots)
+        self.max_len = int(max_len)
+        self.interpret = interpret
+        self.eos_id = eos_id
+        self.paged = _paged_capable(cfg)
+        if page is None:
+            g = cfg.n_heads // max(1, cfg.n_kv_heads)
+            page = min(ops.default_decode_page(
+                self.max_len, cfg.n_kv_heads, max(2, g), cfg.head_dim_,
+                dtype=str(jnp.dtype(dtype))), self.max_len)
+        self.page = int(page)
+        if pool_pages is None:
+            pool_pages = self.max_slots * pages_needed(self.max_len,
+                                                       self.page)
+        self.pool: Optional[PagePool] = (
+            PagePool(cfg, pool_pages, self.page, dtype) if self.paged
+            else None)
+        self.dtype = dtype
+        self._waiting: list[Request] = []
+        self._slots: list[_Slot] = []
+        self._done: dict[int, Request] = {}
+        self._out: dict[int, list] = {}
+        self._next_rid = 0
+        self._decode_fns: dict[tuple, callable] = {}
+        self._prefill_fns: dict[int, callable] = {}
+
+    # -- public API --------------------------------------------------------
+
+    def submit(self, prompt, max_new: int, now: float = 0.0) -> int:
+        """Queue a request; returns its id."""
+        prompt = tuple(int(t) for t in prompt)
+        if not prompt:
+            raise ValueError("empty prompt")
+        if len(prompt) + max_new > self.max_len:
+            raise ValueError(
+                f"prompt {len(prompt)} + max_new {max_new} exceeds "
+                f"max_len {self.max_len}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._waiting.append(Request(rid, prompt, int(max_new),
+                                     submit_t=now))
+        self._out[rid] = []
+        return rid
+
+    def step(self, now: float = 0.0) -> list[tuple[int, int]]:
+        """One engine iteration: admit, then one decode step per active
+        slot.  Returns the ``(rid, token)`` pairs emitted."""
+        emitted = self._admit(now)
+        for slot in list(self._slots):
+            emitted.extend(self._decode_one(slot, now))
+        return emitted
+
+    @property
+    def idle(self) -> bool:
+        return not self._waiting and not self._slots
+
+    def run(self, now: float = 0.0, clock=None) -> dict:
+        """Step until idle; returns ``{rid: {"tokens", "request"}}``.
+        ``clock`` (e.g. ``time.perf_counter``) refreshes ``now`` between
+        iterations for latency metrics."""
+        while not self.idle:
+            self.step(now if clock is None else clock())
+        return self.results()
+
+    def results(self) -> dict:
+        return {rid: {"tokens": list(self._out[rid]), "request": req}
+                for rid, req in self._done.items()}
+
+    # -- scheduling --------------------------------------------------------
+
+    def _admit(self, now: float) -> list[tuple[int, int]]:
+        emitted = []
+        while self._waiting and len(self._slots) < self.max_slots:
+            req = self._waiting[0]
+            try:
+                slot = self._start(req, now)
+            except OutOfPages:
+                if not self._evict(protect=None):
+                    break               # nothing evictable; wait
+                continue
+            self._waiting.pop(0)
+            self._slots.append(slot)
+            tok = self._first_token(slot, now)
+            if tok is not None:
+                emitted.append((req.rid, tok))
+            self._retire_if_done(slot, now)
+        return emitted
+
+    def _start(self, req: Request, now: float) -> _Slot:
+        """Prefill the request's tokens-so-far into a fresh slot."""
+        tokens = list(req.prompt) + list(self._out[req.rid])
+        slot = _Slot(req=req, tokens=tokens,
+                     n_emitted=len(self._out[req.rid]))
+        s0 = len(tokens)
+        if self.paged:
+            slot.slabs = self.pool.alloc(pages_needed(s0, self.page))
+        logits, cache = self._prefill(tokens)
+        if self.paged:
+            self.pool.write_prefill(cache, slot.slabs, s0)
+        else:
+            slot.cache = transformer.prefill_cache_to_decode(
+                self.cfg, cache, self.max_len)
+            if slot.cache is None:
+                raise NotImplementedError(
+                    f"family {self.cfg.family!r} has no forward->decode "
+                    f"cache re-layout; the engine cannot serve it")
+        slot._logits = logits
+        if req.admit_t is None:
+            req.admit_t = now
+        return slot
+
+    def _first_token(self, slot: _Slot, now: float) -> Optional[int]:
+        tok = int(jnp.argmax(slot._logits[0]))
+        del slot._logits
+        return self._emit(slot, tok, now)
+
+    def _decode_one(self, slot: _Slot, now: float) -> list[tuple[int, int]]:
+        if slot not in self._slots:
+            return []
+        pos = len(slot.tokens) - 1        # feed the newest token here
+        if self.paged:
+            try:
+                self._ensure_pages(slot, pos + 1)
+            except OutOfPages:
+                return []                 # pool saturated; retry next step
+            fn = self._paged_decode_fn(tuple(slot.slabs))
+            logits, pools = fn(
+                jnp.asarray([slot.tokens[-1]], jnp.int32),
+                jnp.asarray([pos], jnp.int32), self.pool.pools)
+            self.pool.update(pools)
+        else:
+            logits, slot.cache = self._contig_decode_fn()(
+                jnp.asarray([slot.tokens[-1]], jnp.int32),
+                jnp.asarray([pos], jnp.int32), slot.cache)
+        tok = self._emit(slot, int(jnp.argmax(logits[0])), now)
+        self._retire_if_done(slot, now)
+        return [(slot.req.rid, tok)] if tok is not None else []
+
+    def _emit(self, slot: _Slot, tok: int, now: float) -> Optional[int]:
+        if slot.req.first_tok_t is None:
+            slot.req.first_tok_t = now
+        slot.tokens.append(tok)
+        slot.n_emitted += 1
+        self._out[slot.req.rid].append(tok)
+        return tok
+
+    def _retire_if_done(self, slot: _Slot, now: float) -> None:
+        done = (slot.n_emitted >= slot.req.max_new or
+                (self.eos_id is not None and
+                 slot.tokens[-1] == self.eos_id) or
+                len(slot.tokens) >= self.max_len)
+        if done and slot in self._slots:
+            slot.req.done_t = now
+            if self.paged:
+                self.pool.free(slot.slabs)
+            self._slots.remove(slot)
+            self._done[slot.req.rid] = slot.req
+
+    def _ensure_pages(self, slot: _Slot, tokens_needed: int) -> None:
+        """Grow the slot's page table to cover ``tokens_needed`` rows,
+        evicting other slots under pressure."""
+        while len(slot.slabs) < pages_needed(tokens_needed, self.page):
+            try:
+                slot.slabs.extend(self.pool.alloc(1))
+            except OutOfPages:
+                if not self._evict(protect=slot):
+                    raise
+
+    def _evict(self, protect: Optional[_Slot]) -> bool:
+        """Preempt the youngest running paged slot (recompute on
+        re-admission).  Returns False when nothing is evictable."""
+        victims = [s for s in self._slots if s is not protect and s.slabs]
+        if not victims:
+            return False
+        victim = victims[-1]              # youngest admitted
+        self.pool.free(victim.slabs)
+        victim.slabs = []
+        self._slots.remove(victim)
+        victim.req.evictions += 1
+        self._waiting.insert(0, victim.req)
+        return True
+
+    # -- executables (cached on static keys only) --------------------------
+
+    def _prefill(self, tokens: list):
+        fn = self._prefill_fns.get(len(tokens))
+        if fn is None:
+            fn = jax.jit(lambda t: registry.prefill(
+                self.params, self.cfg, {"tokens": t}))
+            self._prefill_fns[len(tokens)] = fn
+        return fn(jnp.asarray([tokens], jnp.int32))
+
+    def _paged_decode_fn(self, table: tuple):
+        """The jitted paged decode step for one page table — THE derived
+        ``windowed_decode`` kernel reading through the table's psi view."""
+        fn = self._decode_fns.get(table)
+        if fn is None:
+            fn = jax.jit(functools.partial(
+                transformer.decode_step_paged, self.params, self.cfg,
+                page_table=table, page=self.page,
+                interpret=self.interpret))
+            self._decode_fns[table] = fn
+        return fn
+
+    def _contig_decode_fn(self):
+        fn = self._decode_fns.get(())
+        if fn is None:
+            fn = jax.jit(functools.partial(registry.decode_step,
+                                           self.params, self.cfg))
+            self._decode_fns[()] = fn
+        return fn

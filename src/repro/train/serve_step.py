@@ -1,11 +1,11 @@
 """Serving steps: prefill + decode, plus a batched greedy generation loop
-(used by examples/serve.py and the serving benchmarks)."""
+(used by examples/serve_batch.py and the serving benchmarks)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.models import registry
+from repro.models import registry, transformer
 from repro.models.common import ArchConfig
 
 
@@ -23,22 +23,35 @@ def make_decode(cfg: ArchConfig):
 
 def greedy_generate(params, cfg: ArchConfig, prompt: jax.Array, n_new: int,
                     cache_len: int):
-    """prompt: (B, S0) -> (B, S0+n_new).  Prefill then scan decode steps."""
-    b, s0 = prompt.shape
-    cache = registry.init_cache(cfg, b, cache_len,
-                                dtype=jnp.dtype(cfg.dtype))
-    # prefill by decoding the prompt token-by-token (keeps one code path for
-    # every family incl. ring caches; examples use short prompts)
-    def feed(carry, t):
-        cache, _ = carry
-        tok = prompt[:, t]
-        logits, cache = registry.decode_step(params, cfg, tok,
-                                             jnp.full((b,), t, jnp.int32),
-                                             cache)
-        return (cache, logits), None
+    """prompt: (B, S0) -> (B, S0+n_new).
 
-    (cache, logits), _ = jax.lax.scan(feed, (cache, jnp.zeros((b, cfg.vocab_size))),
-                                      jnp.arange(s0))
+    Prompt ingestion goes through the derived flash prefill
+    (``registry.prefill``) — ONE kernel sweep over the prompt, with the
+    forward-layout cache re-laid as the decode cache — for every family
+    ``transformer.prefill_cache_to_decode`` covers.  Families whose decode
+    cache has no forward equivalent (ring caches, grouped patterns,
+    hybrid, vlm) fall back to the token-by-token decode scan.
+    """
+    b, s0 = prompt.shape
+    if transformer.has_prefill_decode_relayout(cfg):
+        logits, fwd_cache = registry.prefill(params, cfg,
+                                             {"tokens": prompt})
+        cache = transformer.prefill_cache_to_decode(cfg, fwd_cache,
+                                                    cache_len)
+    else:
+        cache = registry.init_cache(cfg, b, cache_len,
+                                    dtype=jnp.dtype(cfg.dtype))
+
+        def feed(carry, t):
+            cache, _ = carry
+            tok = prompt[:, t]
+            logits, cache = registry.decode_step(
+                params, cfg, tok, jnp.full((b,), t, jnp.int32), cache)
+            return (cache, logits), None
+
+        (cache, logits), _ = jax.lax.scan(
+            feed, (cache, jnp.zeros((b, cfg.vocab_size))),
+            jnp.arange(s0))
 
     def gen(carry, i):
         cache, logits = carry

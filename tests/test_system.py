@@ -49,9 +49,11 @@ def test_train_resume_from_checkpoint_is_bitwise_consistent(tmp_path):
 
 def test_serve_driver_end_to_end():
     from repro.launch.serve import main
-    out = main(["--arch", "gemma-2b", "--reduced", "--batch", "2",
-                "--prompt-len", "4", "--new-tokens", "4"])
-    assert out.shape == (2, 8)
+    results = main(["--arch", "gemma-2b", "--reduced", "--requests", "2",
+                    "--prompt-len", "4", "--new-tokens", "4",
+                    "--max-slots", "2", "--page", "4"])
+    assert len(results) == 2
+    assert all(len(r["tokens"]) == 4 for r in results.values())
 
 
 def test_greedy_generation_is_deterministic():
