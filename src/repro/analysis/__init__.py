@@ -15,12 +15,22 @@ kernel:
   ``no-oracle-recompute``, ``only-planned-collectives``,
   ``no-silent-fallback`` — replacing the ad-hoc scanners that used to be
   copy-pasted across the test files.
+* ``summarize_kernel`` / ``kernel_findings`` (``analysis.conformance``):
+  trace each *emitted Pallas kernel body* to a jaxpr and abstractly
+  interpret it into a per-ref effect summary, checked against the
+  schedule contract — rule classes ``effect``, ``acc-dtype``,
+  ``guard-dominance``, ``state-discipline``.  This is the one analysis
+  path that imports jax (tracing only; nothing executes), so it loads
+  lazily and ``verify_bundle(..., kernel=True)`` opts in explicitly.
 * ``python -m repro.analysis.verify_all``: the registry sweep over every
-  form x hardware entry x dtype x semiring.
+  form x hardware entry x dtype x semiring (schedule layer, jax-free).
+* ``python -m repro.analysis.conformance_all``: the same registry swept
+  through the emitter — every kernel body traced and checked.
 
-``kernels.ops.apply(..., verify=True)`` runs the schedule checks inline;
-results are LRU-cached on the same normal-form keys as the schedules, so
-``verify=False`` paths pay nothing.
+``kernels.ops.apply(..., verify=True)`` runs the schedule checks inline
+(``verify="kernel"`` adds the body checks); results are LRU-cached on the
+same normal-form keys as the schedules, so ``verify=False`` paths pay
+nothing.
 """
 from repro.analysis.verify import (Finding, VerificationError,
                                    reset_verification_cache, verify_bundle,
@@ -31,17 +41,32 @@ from repro.analysis.jaxpr_lint import (COLLECTIVE_PRIMS, LintError,
                                        PLANNED_PRIMS, jaxpr_primitives, lint,
                                        lint_jaxpr, lint_rules)
 
+#: conformance names resolved lazily — importing them pulls in jax, and the
+#: schedule-layer verifier must stay importable without it
+_CONFORMANCE_NAMES = ("KernelSummary", "kernel_findings", "summarize_kernel")
+
+
+def __getattr__(name):
+    if name in _CONFORMANCE_NAMES:
+        from repro.analysis import conformance
+        return getattr(conformance, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 __all__ = [
     "COLLECTIVE_PRIMS",
     "Finding",
+    "KernelSummary",
     "LintError",
     "PLANNED_PRIMS",
     "VerificationError",
     "jaxpr_primitives",
+    "kernel_findings",
     "lint",
     "lint_jaxpr",
     "lint_rules",
     "reset_verification_cache",
+    "summarize_kernel",
     "verification_cache_stats",
     "verify_bundle",
     "verify_expr",

@@ -1,0 +1,620 @@
+"""Kernel-body conformance: prove the emitted jaxpr obeys the schedule.
+
+``analysis/verify.py`` proves claims about the *schedule dataclasses* and
+``analysis/jaxpr_lint.py`` checks *top-level traced programs*; the emitter
+between them (``kernels/emit.py`` — the generic sigma driver plus every
+registered recurrence kind) was proven only by bit-identity sampling.  This
+module closes that layer: it traces an emitted Pallas kernel body to its
+jaxpr (``jax.make_jaxpr`` over ``ShapeDtypeStruct`` refs — jax is imported
+only on this path, so the schedule-layer verifier stays jax-free) and
+abstractly interprets it into a per-ref **effect summary**:
+
+* which refs are loaded and stored, and the static slice windows touched;
+* the dtype lattice of every accumulation chain (scratch dtypes + the
+  ``preferred_element_type`` of every ``dot_general`` whose result flows
+  into a store, with loads resetting the dataflow);
+* which loads/stores are dominated by a ``@pl.when`` guard or a
+  ``select_n`` mask, with each guard *classified* against the schedule:
+  ``("first", d)`` / ``("last", d)`` for ``pid(d) == 0 / extent-1``,
+  ``"stream"`` for comparisons against the logical streamed extent,
+  ``"dynamic"`` for comparisons against the kind's declared position
+  operand, ``"other"`` for everything else (causal/window masks).
+
+The summary is checked against the ``ScheduleBundle`` contract (and, for
+recurrent kinds, the ``KindContract`` the emitter declares in
+``kernels.emit.KIND_CONTRACTS``) with typed ``Finding``s in four rule
+classes:
+
+* ``effect`` — an input ref is stored; an output/``state_outs`` ref is
+  never stored; a store's static slice escapes the BlockSpec block shape.
+* ``acc-dtype`` — a carried-state/sigma scratch ref is allocated at a
+  different width than the bundle's solved ``acc_dtype`` (both the
+  "folds narrower" and the "silently widens to f32 when bf16 was
+  solved" defects), or a reduction ``dot_general`` reaching a store folds
+  at a different ``preferred_element_type``.
+* ``guard-dominance`` — the stream-bound pad guard the kind's contract
+  declares (``stream-mask`` / ``dynamic-pos``) does not dominate a fold
+  into carried state, so the pad-value inertness proof does not apply.
+* ``state-discipline`` — carried state is read before its ``_init`` store
+  on step 0, or flushed state is stored off the ``stream_grid_dim``
+  final step.
+
+``kernel_findings(bundle)`` is the entry ``verify_bundle(...,
+kernel=True)`` calls; ``summarize_kernel(bundle)`` returns the raw
+``KernelSummary`` for inspection (the README's worked example).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.analysis.verify import Finding
+from repro.core.schedule import RecurrentSchedule, ScheduleBundle
+
+# taint tag kinds
+_PID = "pid"        # ("pid", grid_dim) — a program_id
+_LOAD = "load"      # ("load", ref_index) — value read from a ref
+_IOTA = "iota"      # ("iota",) — a position lattice
+_DOT = "dot"        # ("dot", order, pref_dtype_str) — a contraction result
+
+
+@dataclasses.dataclass(frozen=True)
+class AbsVal:
+    """Abstract value: taint provenance, guard tags (for booleans), mask
+    tags already applied via ``select_n``, and a static scalar when one is
+    known."""
+    taints: frozenset = frozenset()
+    guards: frozenset = frozenset()
+    masked: frozenset = frozenset()
+    const: object = None
+
+
+_BOTTOM = AbsVal()
+
+
+@dataclasses.dataclass(frozen=True)
+class Access:
+    """One load or store event on a ref."""
+    ref: int
+    order: int
+    guards: frozenset          # guard tags dominating the access
+    masked: frozenset = frozenset()   # mask tags on the stored value
+    taints: frozenset = frozenset()   # taints of the stored value
+    oob: tuple = ()            # bounds-violation messages (stores)
+
+
+@dataclasses.dataclass(frozen=True)
+class RefEffect:
+    """Per-ref slice of the effect summary."""
+    index: int
+    name: str
+    role: str                  # "input" | "output" | "state_out" | "scratch"
+    block: tuple
+    dtype: str
+    loads: tuple               # tuple[Access, ...]
+    stores: tuple              # tuple[Access, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSummary:
+    """The whole-kernel effect summary the rules consume."""
+    name: str
+    grid: tuple
+    stream_dim: Optional[int]
+    logical_stream: Optional[int]
+    guard_contract: Optional[str]     # KindContract.guard, if declared
+    acc_dtype: str                    # the bundle's solved accumulator
+    refs: tuple                       # tuple[RefEffect, ...]
+
+    def describe(self) -> str:
+        """Human-readable rendering (the README worked example)."""
+        lines = [f"{self.name}: grid={self.grid} stream_dim="
+                 f"{self.stream_dim} logical_stream={self.logical_stream} "
+                 f"guard={self.guard_contract!r} acc={self.acc_dtype}"]
+        for r in self.refs:
+            lines.append(f"  [{r.index}] {r.role} {r.name} "
+                         f"block={r.block} {r.dtype}: "
+                         f"{len(r.loads)} loads, {len(r.stores)} stores")
+            for s in r.stores:
+                tags = sorted(map(str, s.guards | s.masked))
+                lines.append(f"      store@{s.order} under {tags}")
+        return "\n".join(lines)
+
+
+def _fmt_tag(t) -> str:
+    return f"{t[0]}:{t[1]}" if isinstance(t, tuple) else str(t)
+
+
+class _Interp:
+    """Abstract interpreter over one Pallas kernel jaxpr."""
+
+    def __init__(self, kernel_jaxpr, grid, ref_splits, *, stream_dim,
+                 logical_stream, pos_input):
+        self.grid = tuple(grid)
+        self.stream_dim = stream_dim
+        self.logical_stream = logical_stream
+        self.pos_input = pos_input
+        self.order = 0
+        self.loads: list = []
+        self.stores: list = []
+        ni, no, nscr = ref_splits
+        self.ref_vars = {v: i for i, v in enumerate(kernel_jaxpr.invars)}
+        self.ref_shapes = [tuple(v.aval.shape) for v in kernel_jaxpr.invars]
+        self.ref_dtypes = [str(v.aval.dtype) for v in kernel_jaxpr.invars]
+        self.n_inputs, self.n_outputs, self.n_scratch = ni, no, nscr
+        env = {v: AbsVal(taints=frozenset({(_LOAD, i)}))
+               for v, i in self.ref_vars.items()}
+        self.walk(kernel_jaxpr, env, frozenset())
+
+    # -- environment ------------------------------------------------------
+    def read(self, env, atom) -> AbsVal:
+        val = getattr(atom, "val", None)
+        if val is not None or type(atom).__name__ == "Literal":
+            try:
+                c = val.item() if hasattr(val, "item") else val
+            except (ValueError, TypeError):
+                c = None
+            return AbsVal(const=c)
+        return env.get(atom, _BOTTOM)
+
+    # -- guard classification --------------------------------------------
+    def _classify_cmp(self, prim: str, lhs: AbsVal, rhs: AbsVal) -> frozenset:
+        tags = set()
+        union = lhs.taints | rhs.taints
+        if self.pos_input is not None and (_LOAD, self.pos_input) in union:
+            tags.add("dynamic")
+        if prim == "eq":
+            for a, b in ((lhs, rhs), (rhs, lhs)):
+                pids = [t for t in a.taints if t[0] == _PID]
+                if len(pids) == 1 and a.taints == frozenset(pids) \
+                        and b.const is not None:
+                    d = pids[0][1]
+                    if b.const == 0:
+                        tags.add(("first", d))
+                    if d < len(self.grid) and b.const == self.grid[d] - 1:
+                        tags.add(("last", d))
+        else:
+            if self.stream_dim is not None and \
+                    (_PID, self.stream_dim) in union and \
+                    self.logical_stream is not None:
+                for a, b in ((lhs, rhs), (rhs, lhs)):
+                    if b.const == self.logical_stream:
+                        tags.add("stream")
+        if not tags:
+            tags.add("other")
+        return frozenset(tags)
+
+    # -- indexer bounds ---------------------------------------------------
+    def _store_oob(self, eqn, refidx) -> tuple:
+        import jax
+        tree = eqn.params.get("tree")
+        if tree is None:
+            return ()
+        try:
+            idx = jax.tree_util.tree_unflatten(tree, list(eqn.invars[2:]))
+        except Exception:
+            return ()
+        entries = []
+        for part in (idx if isinstance(idx, tuple) else (idx,)):
+            entries.extend(getattr(part, "indices", (part,)))
+        shape = self.ref_shapes[refidx]
+        msgs = []
+        for d, ent in enumerate(entries):
+            if d >= len(shape):
+                break
+            if hasattr(ent, "size"):                       # a Slice
+                start = getattr(ent, "start", None)
+                if getattr(ent, "is_dynamic_start", False) or \
+                        not isinstance(start, int):
+                    continue
+                if start < 0 or start + ent.size > shape[d]:
+                    msgs.append(
+                        f"dim {d}: slice [{start}, {start + ent.size}) "
+                        f"escapes the block extent {shape[d]}")
+            elif isinstance(ent, int):
+                if ent < 0 or ent >= shape[d]:
+                    msgs.append(f"dim {d}: index {ent} escapes the block "
+                                f"extent {shape[d]}")
+        return tuple(msgs)
+
+    # -- the walk ---------------------------------------------------------
+    def walk(self, jaxpr, env, guards) -> None:
+        for eqn in jaxpr.eqns:
+            prim = eqn.primitive.name
+            ins = [self.read(env, a) for a in eqn.invars]
+            self.order += 1
+            out = self._eval(eqn, prim, ins, env, guards)
+            for ov in eqn.outvars:
+                env[ov] = out
+
+    def _subwalk(self, closed, operand_atoms, operand_vals,
+                 guards) -> AbsVal:
+        sub = {}
+        inner = closed.jaxpr
+        for v, atom, val in zip(inner.invars, operand_atoms, operand_vals):
+            sub[v] = val
+            # a ref passed into the branch keeps its identity: loads and
+            # stores inside the cond attribute to the outer ref
+            if type(atom).__name__ != "Literal":
+                refidx = self.ref_vars.get(atom)
+                if refidx is not None:
+                    self.ref_vars[v] = refidx
+        for v, c in zip(inner.constvars, closed.consts):
+            try:
+                cv = c.item() if hasattr(c, "item") and c.size == 1 else None
+            except Exception:
+                cv = None
+            sub[v] = AbsVal(const=cv)
+        self.walk(inner, sub, guards)
+        outs = [sub.get(v, self.read(sub, v)) for v in inner.outvars]
+        if not outs:
+            return _BOTTOM
+        return AbsVal(
+            taints=frozenset().union(*(o.taints for o in outs)),
+            masked=frozenset().union(*(o.masked for o in outs)))
+
+    def _eval(self, eqn, prim, ins, env, guards) -> AbsVal:
+        taints = frozenset().union(*(v.taints for v in ins)) \
+            if ins else frozenset()
+        masked = frozenset().union(*(v.masked for v in ins)) \
+            if ins else frozenset()
+
+        if prim == "program_id":
+            return AbsVal(taints=frozenset({(_PID, eqn.params["axis"])}))
+
+        if prim == "get":
+            refidx = self.ref_vars.get(eqn.invars[0])
+            if refidx is not None:
+                self.loads.append(Access(refidx, self.order, guards))
+                return AbsVal(taints=frozenset({(_LOAD, refidx)}))
+            return AbsVal(taints=taints)
+
+        if prim == "swap":
+            refidx = self.ref_vars.get(eqn.invars[0])
+            if refidx is not None:
+                val = ins[1]
+                self.stores.append(Access(
+                    refidx, self.order, guards, masked=val.masked,
+                    taints=val.taints,
+                    oob=self._store_oob(eqn, refidx)))
+                return AbsVal(taints=frozenset({(_LOAD, refidx)}))
+            return AbsVal(taints=taints)
+
+        if prim in ("eq", "ne", "lt", "le", "gt", "ge") and len(ins) == 2:
+            return AbsVal(taints=taints, masked=masked,
+                          guards=self._classify_cmp(prim, ins[0], ins[1]))
+
+        if prim == "and":
+            return AbsVal(taints=taints, masked=masked,
+                          guards=ins[0].guards | ins[1].guards)
+        if prim == "or":
+            return AbsVal(taints=taints, masked=masked,
+                          guards=ins[0].guards & ins[1].guards)
+        if prim == "not":
+            return AbsVal(taints=taints, masked=masked)
+
+        if prim == "select_n":
+            pred = ins[0]
+            return AbsVal(taints=taints, masked=masked | pred.guards)
+
+        if prim == "cond":
+            branches = eqn.params["branches"]
+            pred = ins[0]
+            outs = []
+            for bi, br in enumerate(branches):
+                # the last branch is the true branch: its body is dominated
+                # by the predicate's guard tags
+                bg = guards | pred.guards if bi == len(branches) - 1 \
+                    else guards
+                outs.append(self._subwalk(br, eqn.invars[1:], ins[1:], bg))
+            return AbsVal(
+                taints=frozenset().union(*(o.taints for o in outs)),
+                masked=frozenset().union(*(o.masked for o in outs)))
+
+        if "jaxpr" in eqn.params:                  # pjit / closed_call
+            closed = eqn.params["jaxpr"]
+            if hasattr(closed, "jaxpr"):
+                return self._subwalk(closed, eqn.invars, ins, guards)
+
+        if prim == "dot_general":
+            pref = eqn.params.get("preferred_element_type")
+            if pref is None and eqn.outvars:
+                pref = eqn.outvars[0].aval.dtype
+            return AbsVal(taints=taints |
+                          frozenset({(_DOT, self.order, str(pref))}),
+                          masked=masked)
+
+        if prim == "iota":
+            return AbsVal(taints=frozenset({(_IOTA,)}))
+
+        const = None
+        if prim in ("broadcast_in_dim", "convert_element_type", "reshape",
+                    "squeeze"):
+            const = ins[0].const
+            return AbsVal(taints=taints, masked=masked,
+                          guards=ins[0].guards, const=const)
+        if all(v.const is not None for v in ins) and ins:
+            try:
+                if prim == "mul":
+                    const = ins[0].const * ins[1].const
+                elif prim == "add":
+                    const = ins[0].const + ins[1].const
+                elif prim == "sub":
+                    const = ins[0].const - ins[1].const
+            except TypeError:
+                const = None
+        return AbsVal(taints=taints, masked=masked, const=const)
+
+
+# ---------------------------------------------------------------------------
+# tracing: emit the bundle's kernel and pull out the Pallas jaxpr
+# ---------------------------------------------------------------------------
+
+def _resolve_contract(sch):
+    from repro.kernels import emit
+    if isinstance(sch, RecurrentSchedule):
+        kind = sch.state.kind if sch.state else "online_softmax"
+        return emit.kind_contract(kind)
+    return None
+
+
+def _trace(bundle: ScheduleBundle, *, dtype, causal, scale, out_dtype,
+           acc_dtype):
+    """Emit + ``make_jaxpr`` the bundle's kernel; return
+    ``(kernel_jaxpr, grid_mapping, contract)``."""
+    import jax
+    from repro.kernels import emit
+    sch = bundle.schedule
+    contract = _resolve_contract(sch)
+    if isinstance(sch, RecurrentSchedule):
+        if causal is None:
+            causal = bool(contract and contract.causal_mask and
+                          (sch.window or sch.prefix_len))
+        kern = emit.emit_recurrent(
+            sch, scale=scale, causal=causal,
+            logical_stream=bundle.shapes[-1], out_dtype=out_dtype,
+            acc_dtype=acc_dtype)
+    else:
+        kern = emit.emit_pallas(sch, out_dtype=out_dtype,
+                                acc_dtype=acc_dtype)
+    ni = len(sch.ins)
+    pos = contract.pos_input % ni if contract is not None and \
+        contract.pos_input is not None else None
+    refs = [jax.ShapeDtypeStruct(spec.shape,
+                                 "int32" if i == pos else dtype)
+            for i, spec in enumerate(sch.ins)]
+    traced = jax.make_jaxpr(kern)(*refs)
+    pcs = [e for e in traced.jaxpr.eqns if e.primitive.name == "pallas_call"]
+    if len(pcs) != 1:
+        raise ValueError(
+            f"{sch.name}: expected exactly one pallas_call in the emitted "
+            f"program, found {len(pcs)}")
+    eqn = pcs[0]
+    return eqn.params["jaxpr"], eqn.params["grid_mapping"], contract, pos
+
+
+# ---------------------------------------------------------------------------
+# the effect summary + the four rules
+# ---------------------------------------------------------------------------
+
+def _ref_table(sch, gm):
+    """(name, role) per kernel invar, in Pallas operand order."""
+    ni, no = gm.num_inputs, gm.num_outputs
+    nscr = gm.num_scratch_operands
+    rows = []
+    for spec in sch.ins:
+        rows.append((spec.array, "input", spec))
+    if isinstance(sch, RecurrentSchedule):
+        outs = (sch.out,) + tuple(sch.state_outs)
+        roles = ["output"] + ["state_out"] * len(sch.state_outs)
+    else:
+        outs, roles = (sch.out,), ["output"]
+    for spec, role in zip(outs, roles):
+        rows.append((spec.array, role, spec))
+    for i in range(nscr):
+        rows.append((f"scratch{i}", "scratch", None))
+    if len(rows) != ni + no + nscr:
+        raise ValueError(
+            f"{sch.name}: schedule declares {len(rows)} refs but the "
+            f"kernel binds {ni + no + nscr}")
+    return rows
+
+
+def _summary(bundle, interp, gm, contract, table, kernel_jaxpr):
+    sch = bundle.schedule
+    refs = []
+    for i, (name, role, _spec) in enumerate(table):
+        loads = tuple(a for a in interp.loads if a.ref == i)
+        stores = tuple(a for a in interp.stores if a.ref == i)
+        refs.append(RefEffect(
+            index=i, name=name, role=role,
+            block=interp.ref_shapes[i], dtype=interp.ref_dtypes[i],
+            loads=loads, stores=stores))
+    stream_dim = sch.stream_grid_dim \
+        if isinstance(sch, RecurrentSchedule) else sch.reduce_grid_dim
+    return KernelSummary(
+        name=sch.name, grid=tuple(gm.grid), stream_dim=stream_dim,
+        logical_stream=(bundle.shapes[-1]
+                        if isinstance(sch, RecurrentSchedule) else None),
+        guard_contract=contract.guard if contract else None,
+        acc_dtype=str(bundle.acc_dtype), refs=tuple(refs))
+
+
+def _is_init_store(store: Access, stream_dim) -> bool:
+    return ("first", stream_dim) in store.guards or not store.guards
+
+
+def _rule_effect(summary: KernelSummary, sch) -> list:
+    out = []
+    for r in summary.refs:
+        if r.role == "input" and r.stores:
+            out.append(Finding(
+                "effect", "error", summary.name,
+                f"input ref {r.name} is stored {len(r.stores)} time(s) — "
+                f"kernels must not mutate their operands"))
+        if r.role in ("output", "state_out") and not r.stores:
+            out.append(Finding(
+                "effect", "error", summary.name,
+                f"{r.role} ref {r.name} is never stored — the kernel "
+                f"cannot produce it"))
+        for s in r.stores:
+            for msg in s.oob:
+                out.append(Finding(
+                    "effect", "error", summary.name,
+                    f"store to {r.name} escapes its BlockSpec block "
+                    f"{r.block}: {msg}"))
+    return out
+
+
+def _rule_acc_dtype(summary: KernelSummary, sch) -> list:
+    out = []
+    acc = summary.acc_dtype
+    for r in summary.refs:
+        if r.role == "scratch" and r.dtype != acc:
+            what = "silently widens" if r.dtype == "float32" else "folds"
+            out.append(Finding(
+                "acc-dtype", "error", summary.name,
+                f"scratch ref {r.name} accumulates at {r.dtype} but the "
+                f"solver budgeted acc_dtype={acc} — the kernel {what} "
+                f"off the solved accumulation width"))
+    seen = set()
+    for r in summary.refs:
+        for s in r.stores:
+            for t in s.taints:
+                if t[0] == _DOT and t[2] != acc and t not in seen:
+                    seen.add(t)
+                    out.append(Finding(
+                        "acc-dtype", "error", summary.name,
+                        f"a dot_general feeding the store to {r.name} "
+                        f"folds at preferred_element_type={t[2]}, not the "
+                        f"solved acc_dtype={acc}"))
+    return out
+
+
+def _rule_guard_dominance(summary: KernelSummary, sch, bundle) -> list:
+    guard = summary.guard_contract
+    if guard in (None, "identity-pad"):
+        return []       # executor-side padding with the inert element
+    needed = "stream" if guard == "stream-mask" else "dynamic"
+    if guard == "stream-mask" and bundle.padded[-1] == bundle.shapes[-1]:
+        return []       # the streamed axis does not pad — nothing to mask
+    out = []
+    sd = summary.stream_dim
+    for r in summary.refs:
+        if r.role != "scratch":
+            continue
+        for s in r.stores:
+            # only the explicit step-0 init store is exempt: an unguarded
+            # fold is exactly the defect this rule exists to catch
+            if ("first", sd) in s.guards:
+                continue
+            if needed not in s.guards and needed not in s.masked:
+                tags = sorted(_fmt_tag(t) for t in s.guards | s.masked)
+                out.append(Finding(
+                    "guard-dominance", "error", summary.name,
+                    f"{guard} kind: fold into carried state {r.name} is "
+                    f"guarded only by {tags}, not by the {needed!r} "
+                    f"pad bound — padded streamed positions enter the "
+                    f"monoid, voiding the inertness proof"))
+    return out
+
+
+def _rule_state_discipline(summary: KernelSummary, sch) -> list:
+    out = []
+    sd = summary.stream_dim
+    # (a) carried state must be init-stored before its first read
+    for r in summary.refs:
+        if r.role != "scratch" or not r.loads:
+            continue
+        inits = [s.order for s in r.stores if _is_init_store(s, sd)]
+        first_read = min(a.order for a in r.loads)
+        if not inits:
+            out.append(Finding(
+                "state-discipline", "error", summary.name,
+                f"carried state {r.name} is read but never initialized "
+                f"on step 0 of grid dim {sd}"))
+        elif min(inits) > first_read:
+            out.append(Finding(
+                "state-discipline", "error", summary.name,
+                f"carried state {r.name} is read (order {first_read}) "
+                f"before its step-0 init store (order {min(inits)})"))
+    # (b) outputs not indexed by the streamed/reduce dim are flush-only
+    if sd is None:
+        return out
+    table = {r.index: r for r in summary.refs}
+    specs = []
+    if isinstance(sch, RecurrentSchedule):
+        outs = (sch.out,) + tuple(sch.state_outs)
+    else:
+        outs = (sch.out,)
+    ni = len(sch.ins)
+    for j, spec in enumerate(outs):
+        r = table[ni + j]
+        if sd in spec.grid_dims:
+            continue        # per-step output, indexed by the stream dim
+        for s in r.stores:
+            if ("last", sd) not in s.guards:
+                tags = sorted(_fmt_tag(t) for t in s.guards)
+                out.append(Finding(
+                    "state-discipline", "error", summary.name,
+                    f"flushed {r.role} {r.name} revisits its block every "
+                    f"streamed step but is stored under {tags}, not the "
+                    f"final step of grid dim {sd}"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def _analyze(bundle: ScheduleBundle, *, dtype="float32", causal=None,
+             scale: float = 1.0, out_dtype="float32", acc_dtype=None):
+    sch = bundle.schedule
+    emit_acc = acc_dtype if acc_dtype is not None else bundle.acc_dtype
+    kernel_jaxpr, gm, contract, pos = _trace(
+        bundle, dtype=dtype, causal=causal, scale=scale,
+        out_dtype=out_dtype, acc_dtype=emit_acc)
+    stream_dim = sch.stream_grid_dim \
+        if isinstance(sch, RecurrentSchedule) else sch.reduce_grid_dim
+    interp = _Interp(
+        kernel_jaxpr.jaxpr if hasattr(kernel_jaxpr, "jaxpr")
+        else kernel_jaxpr,
+        gm.grid,
+        (gm.num_inputs, gm.num_outputs, gm.num_scratch_operands),
+        stream_dim=stream_dim,
+        logical_stream=(bundle.shapes[-1]
+                        if isinstance(sch, RecurrentSchedule) else None),
+        pos_input=pos)
+    table = _ref_table(sch, gm)
+    summary = _summary(bundle, interp, gm, contract, table, kernel_jaxpr)
+    return summary
+
+
+def summarize_kernel(bundle: ScheduleBundle, *, dtype="float32",
+                     causal=None, scale: float = 1.0,
+                     out_dtype="float32") -> KernelSummary:
+    """Trace the bundle's emitted kernel and return its effect summary."""
+    return _analyze(bundle, dtype=dtype, causal=causal, scale=scale,
+                    out_dtype=out_dtype)
+
+
+def kernel_findings(bundle: ScheduleBundle, *, dtype="float32", causal=None,
+                    scale: float = 1.0, out_dtype="float32",
+                    acc_dtype=None) -> tuple:
+    """Trace + abstractly interpret the bundle's kernel body and check the
+    effect summary against the schedule contract.
+
+    ``acc_dtype`` overrides the accumulator the kernel is *emitted* with
+    (the bundle's solved ``acc_dtype`` stays the contract side) — used by
+    mutation tests to seed the swapped-accumulator defect; leave ``None``
+    outside tests.
+    """
+    sch = bundle.schedule
+    summary = _analyze(bundle, dtype=dtype, causal=causal, scale=scale,
+                       out_dtype=out_dtype, acc_dtype=acc_dtype)
+    findings = []
+    findings += _rule_effect(summary, sch)
+    findings += _rule_acc_dtype(summary, sch)
+    findings += _rule_guard_dominance(summary, sch, bundle)
+    findings += _rule_state_discipline(summary, sch)
+    return tuple(findings)

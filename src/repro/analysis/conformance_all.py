@@ -1,0 +1,121 @@
+"""``python -m repro.analysis.conformance_all`` — the kernel-body sweep.
+
+The companion of ``verify_all``: where that sweep proves *schedule-level*
+claims jax-free, this one emits the actual Pallas kernel for every
+registered recurrence kind and generic form x hardware entry x
+(dtype, acc_dtype) pair — the same registry ``verify_all`` walks — traces
+it to a jaxpr, and abstractly interprets the body against the schedule
+contract (``analysis.conformance``).  No kernel *executes*: tracing is
+``jax.make_jaxpr`` over ``ShapeDtypeStruct`` refs.
+
+A combination the registries refuse to derive (an illegal semiring/acc
+pair, infeasible blocks, a non-float recurrent accumulator) counts as
+``refused``; any error finding on a kernel that traced is a failure
+(exit 1).  Causal-capable kinds are swept in both causal variants —
+masked streams exercise the ``select_n`` guard lattice.
+
+``--json out.json`` writes the machine-readable report (summary counts +
+per-finding rows) CI uploads as an artifact; ``--hardware NAME`` restricts
+the sweep (the tier-1 tests run the cpu slice; CI runs everything).
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.analysis import conformance
+from repro.analysis.verify import errors
+from repro.analysis.verify_all import _DTYPE_MATRIX, _forms
+from repro.core import hardware as hwr
+from repro.core import schedule as sched_mod
+
+#: forms whose streamed axis only derives with pinned blocks — the paged
+#: decode step pins (group rows, page size) exactly as the serving engine
+#: does (``ops._decode_executor``)
+BLOCK_OVERRIDES = {"windowed_decode": (4, 16)}
+
+
+def _causal_variants(bundle):
+    """(label_suffix, causal) variants to sweep for one derived bundle."""
+    sch = bundle.schedule
+    if not hasattr(sch, "state") or sch.state is None:
+        return (("", None),)
+    from repro.kernels import emit
+    contract = emit.kind_contract(sch.state.kind)
+    if contract is None or not contract.causal_mask:
+        return (("", None),)
+    if sch.window or sch.prefix_len:
+        # masked streams *require* causal=True (honor-or-raise)
+        return (("+causal", True),)
+    return (("", False), ("+causal", True))
+
+
+def run_sweep(hardware=None, verbose=False):
+    """Sweep; returns the report dict ``--json`` serializes."""
+    names = [hardware] if hardware else list(hwr.registered_hardware())
+    checked = refused = 0
+    failures: list = []
+    rows: list = []
+    for hw_name in names:
+        entry = hwr.get_entry(hw_name)
+        for label, form in _forms():
+            for dtype, acc in _DTYPE_MATRIX:
+                case = f"{hw_name}/{label}/{dtype}+{acc}"
+                try:
+                    bundle = sched_mod.get_schedule(
+                        form, dtype=dtype, hardware=entry, acc_dtype=acc,
+                        blocks=BLOCK_OVERRIDES.get(label))
+                except (ValueError, AssertionError) as exc:
+                    refused += 1
+                    if verbose:
+                        print(f"  refused {case}: {exc}")
+                    continue
+                for suffix, causal in _causal_variants(bundle):
+                    vcase = case + suffix
+                    findings = conformance.kernel_findings(
+                        bundle, dtype=dtype, causal=causal)
+                    checked += 1
+                    errs = errors(findings)
+                    if errs:
+                        failures.append(vcase)
+                        for f in errs:
+                            rows.append({"case": vcase, "rule": f.rule,
+                                         "level": f.level,
+                                         "subject": f.subject,
+                                         "message": f.message})
+                            print(f"FAIL {vcase}: {f}")
+                    elif verbose:
+                        print(f"  ok {vcase}")
+    return {
+        "sweep": "conformance_all",
+        "hardware": names,
+        "checked": checked,
+        "refused": refused,
+        "failed": len(failures),
+        "failures": failures,
+        "findings": rows,
+    }
+
+
+def main(argv=None) -> int:
+    args = list(sys.argv[1:] if argv is None else argv)
+    verbose = "-v" in args
+    hardware = None
+    json_path = None
+    if "--hardware" in args:
+        hardware = args[args.index("--hardware") + 1]
+    if "--json" in args:
+        json_path = args[args.index("--json") + 1]
+    report = run_sweep(hardware=hardware, verbose=verbose)
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(report, fh, indent=2, sort_keys=True)
+    print(f"conformance_all: {report['checked']} kernel bodies checked, "
+          f"{report['refused']} refused at derivation, "
+          f"{report['failed']} failures across "
+          f"{len(report['hardware'])} hardware entries")
+    return 1 if report["failed"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -50,7 +50,13 @@ PLANNED_PRIMS = {"none": frozenset(),
                  "psum": frozenset({"psum"}),
                  "all_gather": frozenset({"all_gather"}),
                  "reduce_scatter": frozenset({"reduce_scatter",
-                                              "psum_scatter"})}
+                                              "psum_scatter"}),
+                 # ring schedules (ring attention / pipelined sigma
+                 # rotation) lower to neighbor permutes
+                 "ppermute": frozenset({"ppermute"}),
+                 # MoE expert dispatch/combine shuffles tokens across the
+                 # expert mesh axis
+                 "all_to_all": frozenset({"all_to_all"})}
 
 
 class LintError(ValueError):

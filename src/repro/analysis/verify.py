@@ -360,13 +360,18 @@ def _cached(key, compute: Callable[[], tuple]) -> tuple:
 
 def verify_bundle(bundle: ScheduleBundle, *, hardware=None,
                   dtype: str = "float32", key=None,
-                  strict: bool = False) -> tuple[Finding, ...]:
+                  strict: bool = False,
+                  kernel: bool = False) -> tuple[Finding, ...]:
     """Run every static check on a cached derivation.
 
     ``hardware`` is a ``HardwareEntry`` or ``HardwareShape`` (or None to
     skip the capacity check); ``dtype`` must be the input dtype the bundle
     was derived at.  ``key`` enables the LRU result cache (pass the same
-    tuple shape as the schedule cache key).  ``strict=True`` raises
+    tuple shape as the schedule cache key).  ``kernel=True`` additionally
+    traces the emitted Pallas kernel body and checks its effect summary
+    against the schedule contract (``analysis.conformance``) — this is the
+    one verify path that imports jax, so it is opt-in and its results
+    cache under a distinct key.  ``strict=True`` raises
     ``VerificationError`` when any error finding survives.
     """
     hw_shape = getattr(hardware, "shape", hardware)
@@ -375,9 +380,13 @@ def verify_bundle(bundle: ScheduleBundle, *, hardware=None,
         findings = list(verify_schedule(bundle.schedule))
         findings += _pad_findings(bundle)
         findings += _resource_findings(bundle, hw_shape, str(dtype))
+        if kernel:
+            from repro.analysis import conformance
+            findings += conformance.kernel_findings(bundle, dtype=dtype)
         return tuple(findings)
 
-    findings = _cached(key, compute)
+    findings = _cached((key, "kernel") if kernel and key is not None
+                       else key, compute)
     if strict and errors(findings):
         raise VerificationError(findings)
     return findings
@@ -385,10 +394,12 @@ def verify_bundle(bundle: ScheduleBundle, *, hardware=None,
 
 def verify_expr(op, *, dtype: str = "float32", hardware=None, blocks=None,
                 acc_dtype: str = "float32",
-                strict: bool = True) -> tuple[Finding, ...]:
+                strict: bool = True,
+                kernel: bool = False) -> tuple[Finding, ...]:
     """Derive (via the schedule cache) and verify a normalized expression —
     the ``ops.apply(..., verify=True)`` entry.  Results cache on the same
-    ``(Onf.key(), dtype, hardware, blocks, acc_dtype)`` key as schedules."""
+    ``(Onf.key(), dtype, hardware, blocks, acc_dtype)`` key as schedules.
+    ``kernel=True`` extends the checks to the traced Pallas kernel body."""
     if hardware is None:
         raise TypeError("verify_expr requires a hardware entry/shape")
     bundle = sched_mod.get_schedule(op, dtype=dtype, hardware=hardware,
@@ -406,7 +417,7 @@ def verify_expr(op, *, dtype: str = "float32", hardware=None, blocks=None,
         block_key = block_key.as_tuple()
     key = (nf.key(), str(dtype), hw_name, block_key, str(acc_dtype))
     return verify_bundle(bundle, hardware=hardware, dtype=dtype, key=key,
-                         strict=strict)
+                         strict=strict, kernel=kernel)
 
 
 def verify_plan(plan, *, hardware=None, dtype: str = "float32", key=None,

@@ -12,9 +12,14 @@ the hardware table has no path for, or blocks that cannot fit a small
 memory (the V100's 32 KiB L1 with a materialized tropical combine) — is
 *correct* static behavior and counts as ``refused``, not a failure.  Any
 error finding on a derivation that succeeded fails the sweep (exit 1).
+
+``--json out.json`` writes a machine-readable report (summary counts +
+per-finding rows, same schema as ``conformance_all``) that CI uploads as
+an artifact and the tests pin, so silent registry shrinkage fails loudly.
 """
 from __future__ import annotations
 
+import json
 import sys
 
 from repro import analysis
@@ -79,10 +84,12 @@ def _plan_cases():
            {"dtype": "bfloat16", "acc_dtype": "bfloat16"})
 
 
-def main(argv=None) -> int:
-    verbose = "-v" in (argv or sys.argv[1:])
+def run_sweep(verbose=False):
+    """Sweep every registry entry; returns the report dict ``--json``
+    serializes (summary counts + per-error-finding rows)."""
     checked = refused = warned = 0
     failures: list[str] = []
+    rows: list[dict] = []
 
     for hw_name in hwr.registered_hardware():
         entry = hwr.get_entry(hw_name)
@@ -106,6 +113,9 @@ def main(argv=None) -> int:
                 if errs:
                     failures.append(case)
                     for f in errs:
+                        rows.append({"case": case, "rule": f.rule,
+                                     "level": f.level, "subject": f.subject,
+                                     "message": f.message})
                         print(f"FAIL {case}: {f}")
                 elif verbose:
                     print(f"  ok {case}")
@@ -129,14 +139,37 @@ def main(argv=None) -> int:
             if errs:
                 failures.append(case)
                 for f in errs:
+                    rows.append({"case": case, "rule": f.rule,
+                                 "level": f.level, "subject": f.subject,
+                                 "message": f.message})
                     print(f"FAIL {case}: {f}")
             elif verbose:
                 print(f"  ok {case}")
 
-    print(f"verify_all: {checked} combinations verified, {refused} refused "
-          f"at derivation, {warned} warnings, {len(failures)} failures "
-          f"across {len(hwr.registered_hardware())} hardware entries")
-    return 1 if failures else 0
+    return {
+        "sweep": "verify_all",
+        "hardware": list(hwr.registered_hardware()),
+        "checked": checked,
+        "refused": refused,
+        "warned": warned,
+        "failed": len(failures),
+        "failures": failures,
+        "findings": rows,
+    }
+
+
+def main(argv=None) -> int:
+    args = list(sys.argv[1:] if argv is None else argv)
+    json_path = args[args.index("--json") + 1] if "--json" in args else None
+    report = run_sweep(verbose="-v" in args)
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(report, fh, indent=2, sort_keys=True)
+    print(f"verify_all: {report['checked']} combinations verified, "
+          f"{report['refused']} refused at derivation, "
+          f"{report['warned']} warnings, {report['failed']} failures "
+          f"across {len(report['hardware'])} hardware entries")
+    return 1 if report["failed"] else 0
 
 
 if __name__ == "__main__":

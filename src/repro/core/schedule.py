@@ -1051,6 +1051,16 @@ def get_schedule(op, shapes=None, dtype="float32", hardware=None,
         # availability oracle — a part without the bf16 partial-sum path
         # must not get bf16-accumulation schedules cached under its name
         if isinstance(nf, expr_mod.RecurrentForm):
+            # recurrent monoids are exponential-reweighting folds (softmax
+            # rescaling, SSD/gated decay): an integer accumulator cannot
+            # represent the carried state, so refuse at derivation instead
+            # of emitting a kernel that silently widens
+            if "float" not in acc_dtype and \
+                    acc_dtype not in ("bf16", "f16", "f32", "f64"):
+                raise ValueError(
+                    f"recurrent form {nf.name!r} requires a floating "
+                    f"accumulator (exp-reweighted carried state), got "
+                    f"acc_dtype={acc_dtype!r}")
             last = nf.stages[-1]
             semiring.check_accum(acc_dtype, dtype_key, last.combine,
                                  last.reduce_op)

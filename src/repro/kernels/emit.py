@@ -29,6 +29,7 @@ top: the same derived kernel (or the jnp oracle) runs per shard inside
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Callable, Optional
 
@@ -52,6 +53,14 @@ def compiler_params(*, dimension_semantics) -> object:
     return _PARAMS_CLS(dimension_semantics=tuple(dimension_semantics))
 
 
+#: largest page table ``_index_map`` will lower.  The per-page slab lookup
+#: unrolls as one ``jnp.where`` select per table entry (Pallas index maps
+#: may not capture constant arrays), so the emitted index map grows
+#: linearly in the view's page count — past this bound the fold is
+#: pathological and the emitter refuses instead of silently producing it.
+MAX_PAGE_TABLE_ENTRIES = 1024
+
+
 def _index_map(grid_dims: tuple[Optional[int], ...],
                offsets: tuple[int, ...] = (),
                page_table: Optional[tuple[int, ...]] = None) -> Callable:
@@ -63,7 +72,15 @@ def _index_map(grid_dims: tuple[Optional[int], ...],
     ``page_table[k]`` — the static lookup that lowers a paged psi view's
     per-page slab offsets without a gather-copy.  The lookup is unrolled
     as a ``jnp.where`` fold over integer literals because Pallas index
-    maps may not capture constant arrays."""
+    maps may not capture constant arrays; tables past
+    ``MAX_PAGE_TABLE_ENTRIES`` raise instead of emitting the fold."""
+    if page_table is not None and len(page_table) > MAX_PAGE_TABLE_ENTRIES:
+        raise ValueError(
+            f"page table with {len(page_table)} entries: the paged index "
+            f"map lowers one jnp.where select per entry, linear in the "
+            f"view's page count — past {MAX_PAGE_TABLE_ENTRIES} entries "
+            f"the unrolled fold is pathological; split the view or raise "
+            f"emit.MAX_PAGE_TABLE_ENTRIES deliberately")
     offs = offsets or (0,) * len(grid_dims)
 
     def _lookup(i):
@@ -232,7 +249,7 @@ def _cell_shape(spec) -> tuple[int, ...]:
 
 
 def _softmax_kind(rs: StreamingSchedule, *, scale, causal, logical_stream,
-                  out_dtype):
+                  out_dtype, acc_dtype):
     """The online-softmax monoid: running max ``m`` + denominator ``l`` per
     output row and the accumulator *rescaled* by ``exp(m_prev - m_new)``
     each streamed step; the flush divides by ``l``.  Masking is positional
@@ -302,7 +319,7 @@ def _softmax_kind(rs: StreamingSchedule, *, scale, causal, logical_stream,
                 tuple(opn.block[d] for d in keep))
                 for i, (opn, keep) in enumerate(zip(rs.ins[:2], scores_keep)))
             s = jnp.einsum(scores_plan, q, k,
-                           preferred_element_type=jnp.float32) * scale
+                           preferred_element_type=acc_dtype) * scale
             need_mask = causal or masked_pad
             if need_mask:
                 qpos = qi * bq + jax.lax.broadcasted_iota(
@@ -332,7 +349,7 @@ def _softmax_kind(rs: StreamingSchedule, *, scale, causal, logical_stream,
             acc_ref[...] = (
                 acc_ref[...] * corr[:, None]
                 + jnp.einsum(ctx_plan, p.astype(v.dtype), v,
-                             preferred_element_type=jnp.float32
+                             preferred_element_type=acc_dtype
                              ).reshape(acc_block))
 
         @pl.when(ki == nk - 1)
@@ -347,15 +364,15 @@ def _softmax_kind(rs: StreamingSchedule, *, scale, causal, logical_stream,
                     rs.state_outs[1].block)
 
     scratch = [
-        pltpu.VMEM((bq, 1), jnp.float32),            # running max m
-        pltpu.VMEM((bq, 1), jnp.float32),            # denominator l
-        pltpu.VMEM(acc_block, jnp.float32),          # rescaled acc
+        pltpu.VMEM((bq, 1), acc_dtype),              # running max m
+        pltpu.VMEM((bq, 1), acc_dtype),              # denominator l
+        pltpu.VMEM(acc_block, acc_dtype),            # rescaled acc
     ]
     return body, scratch
 
 
 def _ssd_kind(rs: StreamingSchedule, *, scale, causal, logical_stream,
-              out_dtype):
+              out_dtype, acc_dtype):
     """The SSD (Mamba-2) monoid: one inter-chunk state ``h`` (head,
     head_dim, state_dim) per grid cell, stepped ``h' = chunk_decay * h +
     B'(decay . x)`` and exported at the last chunk.  Per streamed step the
@@ -384,12 +401,12 @@ def _ssd_kind(rs: StreamingSchedule, *, scale, causal, logical_stream,
 
         @pl.when(ki == 0)
         def _init():
-            h_ref[...] = refs[4][...].reshape(h_cell)
+            h_ref[...] = refs[4][...].reshape(h_cell).astype(acc_dtype)
 
-        Cb = refs[0][...].reshape(c_cell).astype(jnp.float32)
-        Bb = refs[1][...].reshape(b_cell).astype(jnp.float32)
-        Xb = refs[2][...].reshape(x_cell).astype(jnp.float32)
-        dAb = refs[3][...].reshape(da_cell).astype(jnp.float32)
+        Cb = refs[0][...].reshape(c_cell).astype(acc_dtype)
+        Bb = refs[1][...].reshape(b_cell).astype(acc_dtype)
+        Xb = refs[2][...].reshape(x_cell).astype(acc_dtype)
+        dAb = refs[3][...].reshape(da_cell).astype(acc_dtype)
         h_prev = h_ref[...]
         if n_so == 2:                 # checkpoint the state entering ki
             refs[ni + 2][...] = h_prev.reshape(rs.state_outs[1].block)
@@ -399,32 +416,32 @@ def _ssd_kind(rs: StreamingSchedule, *, scale, causal, logical_stream,
             jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
         L = jnp.exp(jnp.where(tril[None], seg, NEG_INF))    # (h, i, j)
         G = jnp.einsum(scores_plan, Cb, Bb,
-                       preferred_element_type=jnp.float32)  # (i, j)
+                       preferred_element_type=acc_dtype)    # (i, j)
         P = G[None] * L                                     # (h, i, j)
         y = jnp.einsum(ctx_plan, P, Xb,
-                       preferred_element_type=jnp.float32)  # (i, h, p)
+                       preferred_element_type=acc_dtype)    # (i, h, p)
         in_decay = jnp.exp(csh)                             # (h, i)
         t_off = jnp.einsum("in,hpn->ihp", Cb, h_prev,
-                           preferred_element_type=jnp.float32)
+                           preferred_element_type=acc_dtype)
         y = y + t_off * jnp.transpose(in_decay)[:, :, None]
         y_ref[...] = y.astype(out_dtype).reshape(rs.out.block)
         total = csh[:, -1]                                  # (h,)
         decay_states = jnp.exp(total[:, None] - csh)        # (h, j)
         Xd = Xb * jnp.transpose(decay_states)[:, :, None]   # (j, h, p)
         S = jnp.einsum("jn,jhp->hpn", Bb, Xd,
-                       preferred_element_type=jnp.float32)
+                       preferred_element_type=acc_dtype)
         h_ref[...] = jnp.exp(total)[:, None, None] * h_prev + S
 
         @pl.when(ki == nk - 1)
         def _flush():
             hf_ref[...] = h_ref[...].reshape(rs.state_outs[0].block)
 
-    scratch = [pltpu.VMEM(h_cell, jnp.float32)]
+    scratch = [pltpu.VMEM(h_cell, acc_dtype)]
     return body, scratch
 
 
 def _gated_kind(rs: StreamingSchedule, *, scale, causal, logical_stream,
-                out_dtype):
+                out_dtype, acc_dtype):
     """The gated (RG-LRU) monoid: one state per channel, stepped ``h' = a h
     + b`` — the contraction-free recurrence.  Per streamed chunk the body
     exponentiates the gate log, scans the chunk with the associative gated
@@ -444,10 +461,10 @@ def _gated_kind(rs: StreamingSchedule, *, scale, causal, logical_stream,
 
         @pl.when(ki == 0)
         def _init():
-            h_ref[...] = refs[2][...].reshape(h_cell)
+            h_ref[...] = refs[2][...].reshape(h_cell).astype(acc_dtype)
 
-        a = jnp.exp(refs[0][...].reshape(a_cell).astype(jnp.float32))
-        b = refs[1][...].reshape(a_cell).astype(jnp.float32)
+        a = jnp.exp(refs[0][...].reshape(a_cell).astype(acc_dtype))
+        b = refs[1][...].reshape(a_cell).astype(acc_dtype)
 
         def comb(x, y):
             return (x[0] * y[0], y[0] * x[1] + y[1])
@@ -461,12 +478,12 @@ def _gated_kind(rs: StreamingSchedule, *, scale, causal, logical_stream,
         def _flush():
             hf_ref[...] = h_ref[...].reshape(rs.state_outs[0].block)
 
-    scratch = [pltpu.VMEM(h_cell, jnp.float32)]
+    scratch = [pltpu.VMEM(h_cell, acc_dtype)]
     return body, scratch
 
 
 def _flash_dq_kind(rs: StreamingSchedule, *, scale, causal, logical_stream,
-                   out_dtype):
+                   out_dtype, acc_dtype):
     """Flash backward dQ: the same weld orientation as the forward (rows =
     queries, stream = keys) with the carried per-row gradient accumulator.
     Each streamed step recomputes the masked score block from stage 1,
@@ -524,7 +541,7 @@ def _flash_dq_kind(rs: StreamingSchedule, *, scale, causal, logical_stream,
                 tuple(opn.block[d] for d in keep))
                 for i, (opn, keep) in enumerate(zip(rs.ins[:2], scores_keep)))
             s = jnp.einsum(scores_plan, q, k,
-                           preferred_element_type=jnp.float32) * scale
+                           preferred_element_type=acc_dtype) * scale
             need_mask = causal or masked_pad
             if need_mask:
                 qpos = qi * bq + jax.lax.broadcasted_iota(
@@ -547,30 +564,30 @@ def _flash_dq_kind(rs: StreamingSchedule, *, scale, causal, logical_stream,
             lv = refs[6][...].reshape((bq,))
             dl = refs[7][...].reshape((bq,))
             lse = mv + jnp.log(jnp.maximum(lv, 1e-30))
-            p = jnp.exp(s - lse[:, None])
-            do = refs[3][...].reshape((bq, vd)).astype(jnp.float32)
-            vb = refs[4][...].reshape((bk, vd)).astype(jnp.float32)
+            p = jnp.exp(s - lse[:, None]).astype(acc_dtype)
+            do = refs[3][...].reshape((bq, vd)).astype(acc_dtype)
+            vb = refs[4][...].reshape((bk, vd)).astype(acc_dtype)
             dp = jnp.einsum("ad,bd->ab", do, vb,
-                            preferred_element_type=jnp.float32)
-            ds = p * (dp - dl[:, None])
+                            preferred_element_type=acc_dtype)
+            ds = p * (dp - dl[:, None]).astype(acc_dtype)
             k2 = refs[2][...].reshape(
                 tuple(rs.ins[2].block[d] for d in out_keep[1])
-                ).astype(jnp.float32)
+                ).astype(acc_dtype)
             acc_ref[...] += jnp.einsum(
                 out_plan, ds, k2,
-                preferred_element_type=jnp.float32).reshape(acc_block)
+                preferred_element_type=acc_dtype).reshape(acc_block)
 
         @pl.when(ki == nk - 1)
         def _flush():
             o_ref[...] = (acc_ref[...] * scale).astype(out_dtype).reshape(
                 rs.out.block)
 
-    scratch = [pltpu.VMEM(acc_block, jnp.float32)]
+    scratch = [pltpu.VMEM(acc_block, acc_dtype)]
     return body, scratch
 
 
 def _flash_dkv_kind(rs: StreamingSchedule, *, scale, causal, logical_stream,
-                    out_dtype):
+                    out_dtype, acc_dtype):
     """Flash backward dK/dV: the *transposed* weld — rows are key
     positions, the stream is query positions.  Each streamed step
     recomputes the transposed score block, reconstructs ``p``, contracts
@@ -629,7 +646,7 @@ def _flash_dkv_kind(rs: StreamingSchedule, *, scale, causal, logical_stream,
                 tuple(opn.block[d] for d in keep))
                 for i, (opn, keep) in enumerate(zip(rs.ins[:2], scores_keep)))
             s = jnp.einsum(scores_plan, k, qb,
-                           preferred_element_type=jnp.float32) * scale
+                           preferred_element_type=acc_dtype) * scale
             need_mask = causal or masked_pad
             if need_mask:
                 kpos = ji * bj + jax.lax.broadcasted_iota(
@@ -652,21 +669,21 @@ def _flash_dkv_kind(rs: StreamingSchedule, *, scale, causal, logical_stream,
             lv = refs[6][...].reshape((bi,))
             dl = refs[7][...].reshape((bi,))
             lse = mv + jnp.log(jnp.maximum(lv, 1e-30))
-            p = jnp.exp(s - lse[None, :])               # (bj, bi)
-            do = refs[3][...].reshape((bi, vd)).astype(jnp.float32)
-            vb = refs[4][...].reshape((bj, vd)).astype(jnp.float32)
+            p = jnp.exp(s - lse[None, :]).astype(acc_dtype)   # (bj, bi)
+            do = refs[3][...].reshape((bi, vd)).astype(acc_dtype)
+            vb = refs[4][...].reshape((bj, vd)).astype(acc_dtype)
             dp = jnp.einsum("ad,bd->ba", do, vb,
-                            preferred_element_type=jnp.float32)
-            ds = p * (dp - dl[None, :])
+                            preferred_element_type=acc_dtype)
+            ds = p * (dp - dl[None, :]).astype(acc_dtype)
             q2 = refs[2][...].reshape(
                 tuple(rs.ins[2].block[d] for d in out_keep[1])
-                ).astype(jnp.float32)
+                ).astype(acc_dtype)
             dk_ref[...] += jnp.einsum(
                 out_plan, ds, q2,
-                preferred_element_type=jnp.float32).reshape(acc_block)
+                preferred_element_type=acc_dtype).reshape(acc_block)
             dv_ref[...] += jnp.einsum(
                 "ab,bd->ad", p, do,
-                preferred_element_type=jnp.float32).reshape(dv_block)
+                preferred_element_type=acc_dtype).reshape(dv_block)
 
         @pl.when(ki == nk - 1)
         def _flush():
@@ -674,13 +691,13 @@ def _flash_dkv_kind(rs: StreamingSchedule, *, scale, causal, logical_stream,
                 rs.out.block)
             dv_out[...] = dv_ref[...].reshape(rs.state_outs[0].block)
 
-    scratch = [pltpu.VMEM(acc_block, jnp.float32),
-               pltpu.VMEM(dv_block, jnp.float32)]
+    scratch = [pltpu.VMEM(acc_block, acc_dtype),
+               pltpu.VMEM(dv_block, acc_dtype)]
     return body, scratch
 
 
 def _ssd_backward_kind(rs: StreamingSchedule, *, scale, causal,
-                       logical_stream, out_dtype):
+                       logical_stream, out_dtype, acc_dtype):
     """The SSD backward monoid over *reversed* chunks (the ops layer flips
     the chunk axis): the carried state is the inter-chunk cotangent ``dh``,
     seeded from the final-state cotangent ``dHf`` at step 0.  Each streamed
@@ -710,14 +727,14 @@ def _ssd_backward_kind(rs: StreamingSchedule, *, scale, causal,
 
         @pl.when(ki == 0)
         def _init():
-            dh_ref[...] = refs[6][...].reshape(h_cell)
+            dh_ref[...] = refs[6][...].reshape(h_cell).astype(acc_dtype)
 
-        Cb = refs[0][...].reshape(c_cell).astype(jnp.float32)
-        Bb = refs[1][...].reshape(b_cell).astype(jnp.float32)
-        dYb = refs[2][...].reshape(dy_cell).astype(jnp.float32)
-        Xb = refs[3][...].reshape(x_cell).astype(jnp.float32)
-        dAb = refs[4][...].reshape(da_cell).astype(jnp.float32)
-        Hc = refs[5][...].reshape(h_cell).astype(jnp.float32)
+        Cb = refs[0][...].reshape(c_cell).astype(acc_dtype)
+        Bb = refs[1][...].reshape(b_cell).astype(acc_dtype)
+        dYb = refs[2][...].reshape(dy_cell).astype(acc_dtype)
+        Xb = refs[3][...].reshape(x_cell).astype(acc_dtype)
+        dAb = refs[4][...].reshape(da_cell).astype(acc_dtype)
+        Hc = refs[5][...].reshape(h_cell).astype(acc_dtype)
         dh = dh_ref[...]
 
         # replay the forward chunk factoring (identical order of ops)
@@ -727,48 +744,48 @@ def _ssd_backward_kind(rs: StreamingSchedule, *, scale, causal,
             jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
         L = jnp.exp(jnp.where(tril[None], seg, NEG_INF))    # (h, i, j)
         G = jnp.einsum(scores_plan, Cb, Bb,
-                       preferred_element_type=jnp.float32)
+                       preferred_element_type=acc_dtype)
         P = G[None] * L
         in_decay = jnp.exp(csh)                             # (h, i)
         t_off = jnp.einsum("in,hpn->ihp", Cb, Hc,
-                           preferred_element_type=jnp.float32)
+                           preferred_element_type=acc_dtype)
         total = csh[:, -1]                                  # (h,)
         decay_states = jnp.exp(total[:, None] - csh)        # (h, j)
         Xd = Xb * jnp.transpose(decay_states)[:, :, None]   # (j, h, p)
 
         # chain the cotangents back through the factoring
         dtotal = jnp.einsum("hpn,hpn->h", dh, Hc,
-                            preferred_element_type=jnp.float32) * \
+                            preferred_element_type=acc_dtype) * \
             jnp.exp(total)
         dh_prev = jnp.exp(total)[:, None, None] * dh
         dBb = jnp.einsum("hpn,jhp->jn", dh, Xd,
-                         preferred_element_type=jnp.float32)
+                         preferred_element_type=acc_dtype)
         dXd = jnp.einsum("jn,hpn->jhp", Bb, dh,
-                         preferred_element_type=jnp.float32)
+                         preferred_element_type=acc_dtype)
         dXb = dXd * jnp.transpose(decay_states)[:, :, None]
         ddec = jnp.einsum("jhp,jhp->hj", dXd, Xb,
-                          preferred_element_type=jnp.float32)
+                          preferred_element_type=acc_dtype)
         dtotal = dtotal + jnp.sum(ddec * decay_states, axis=1)
         dcsh = -(ddec * decay_states)                       # (h, j)
         dt_off = dYb * jnp.transpose(in_decay)[:, :, None]  # (i, h, p)
         din_decay = jnp.transpose(jnp.sum(dYb * t_off, axis=-1))  # (h, i)
         dcsh = dcsh + din_decay * in_decay
         dCb = jnp.einsum("ihp,hpn->in", dt_off, Hc,
-                         preferred_element_type=jnp.float32)
+                         preferred_element_type=acc_dtype)
         dh_prev = dh_prev + jnp.einsum("in,ihp->hpn", Cb, dt_off,
-                                       preferred_element_type=jnp.float32)
+                                       preferred_element_type=acc_dtype)
         dP = jnp.einsum("ihp,jhp->hij", dYb, Xb,
-                        preferred_element_type=jnp.float32)
+                        preferred_element_type=acc_dtype)
         dXb = dXb + jnp.einsum(ctx_plan, P, dYb,
-                               preferred_element_type=jnp.float32)
+                               preferred_element_type=acc_dtype)
         dG = jnp.sum(dP * L, axis=0)                        # (i, j)
         dL = dP * G[None]
         dseg = jnp.where(tril[None], dL * L, 0.0)
         dcsh = dcsh + dseg.sum(axis=2) - dseg.sum(axis=1)
         dCb = dCb + jnp.einsum("ij,jn->in", dG, Bb,
-                               preferred_element_type=jnp.float32)
+                               preferred_element_type=acc_dtype)
         dBb = dBb + jnp.einsum("ij,in->jn", dG, Cb,
-                               preferred_element_type=jnp.float32)
+                               preferred_element_type=acc_dtype)
         last = jax.lax.broadcasted_iota(jnp.int32, (hdim, q), 1) == q - 1
         dcsh = dcsh + jnp.where(last, dtotal[:, None], 0.0)
         ddAb = jnp.transpose(jnp.flip(
@@ -784,12 +801,12 @@ def _ssd_backward_kind(rs: StreamingSchedule, *, scale, causal,
         def _flush():
             dh0_ref[...] = dh_ref[...].reshape(rs.state_outs[0].block)
 
-    scratch = [pltpu.VMEM(h_cell, jnp.float32)]
+    scratch = [pltpu.VMEM(h_cell, acc_dtype)]
     return body, scratch
 
 
 def _windowed_decode_kind(rs: StreamingSchedule, *, scale, causal,
-                          logical_stream, out_dtype):
+                          logical_stream, out_dtype, acc_dtype):
     """The windowed-decode monoid: online softmax over one query token's
     GQA group rows, streamed one KV page per step through the page-table
     index maps.  Operand order (Q, K, V, POS); the carried (m, l, acc)
@@ -839,7 +856,7 @@ def _windowed_decode_kind(rs: StreamingSchedule, *, scale, causal,
                 tuple(opn.block[d] for d in keep))
                 for i, (opn, keep) in enumerate(zip(rs.ins[:2], scores_keep)))
             s = jnp.einsum(scores_plan, q, k,
-                           preferred_element_type=jnp.float32) * scale
+                           preferred_element_type=acc_dtype) * scale
             kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
             mask = kpos <= vpos
             if window:
@@ -856,7 +873,7 @@ def _windowed_decode_kind(rs: StreamingSchedule, *, scale, causal,
             acc_ref[...] = (
                 acc_ref[...] * corr[:, None]
                 + jnp.einsum(ctx_plan, p.astype(v.dtype), v,
-                             preferred_element_type=jnp.float32
+                             preferred_element_type=acc_dtype
                              ).reshape(acc_block))
 
         @pl.when(ki == nk - 1)
@@ -866,9 +883,9 @@ def _windowed_decode_kind(rs: StreamingSchedule, *, scale, causal,
                           ).astype(out_dtype).reshape(rs.out.block)
 
     scratch = [
-        pltpu.VMEM((bq, 1), jnp.float32),            # running max m
-        pltpu.VMEM((bq, 1), jnp.float32),            # denominator l
-        pltpu.VMEM(acc_block, jnp.float32),          # rescaled acc
+        pltpu.VMEM((bq, 1), acc_dtype),              # running max m
+        pltpu.VMEM((bq, 1), acc_dtype),              # denominator l
+        pltpu.VMEM(acc_block, acc_dtype),            # rescaled acc
     ]
     return body, scratch
 
@@ -890,13 +907,66 @@ RECURRENCE_KINDS: dict[str, Callable] = {
 }
 
 
-def register_recurrence_kind(kind: str, builder: Callable) -> None:
+@dataclasses.dataclass(frozen=True)
+class KindContract:
+    """The statically-declared guard + state discipline of a recurrence kind.
+
+    Kind bodies used to keep their pad-guard strategy as closure-only state;
+    the conformance analyzer (``analysis/conformance.py``) needs it as
+    inspectable metadata to prove the emitted jaxpr honors it.
+
+    ``guard`` names how the kind keeps padded streamed positions inert:
+
+    * ``"identity-pad"`` — no in-kernel guard; the bundle executor pads with
+      the monoid's identity element, so every step may fold unguarded
+      (ssd, gated: zero-padded gates/inputs are the identity step).
+    * ``"stream-mask"`` — folds into carried state must be dominated by the
+      ``pos < logical_stream`` block-skip or the in-block pad mask
+      (online softmax and the flash backwards: pad keys would otherwise
+      poison the running max / denominator).
+    * ``"dynamic-pos"`` — same, but the bound is *runtime data* read from
+      the aux operand at ``pos_input`` (windowed decode: the view-relative
+      query position).
+
+    ``pos_input`` indexes ``schedule.ins`` (negative from the end) for the
+    int32 position operand of a ``dynamic-pos`` kind.  ``causal_mask``
+    marks kinds whose mask machinery also honors ``causal=True``.
+    """
+    guard: str
+    pos_input: Optional[int] = None
+    causal_mask: bool = False
+
+
+#: kind -> declared guard/state contract, consumed by the conformance
+#: analyzer.  A kind registered without a contract is skipped by the
+#: guard-dominance rule (there is nothing declared to prove).
+KIND_CONTRACTS: dict[str, KindContract] = {
+    "online_softmax": KindContract(guard="stream-mask", causal_mask=True),
+    "ssd": KindContract(guard="identity-pad"),
+    "gated": KindContract(guard="identity-pad"),
+    "flash_dq": KindContract(guard="stream-mask", causal_mask=True),
+    "flash_dkv": KindContract(guard="stream-mask", causal_mask=True),
+    "ssd_backward": KindContract(guard="identity-pad"),
+    "gated_backward": KindContract(guard="identity-pad"),
+    "windowed_decode": KindContract(guard="dynamic-pos", pos_input=-1),
+}
+
+
+def kind_contract(kind: str) -> Optional[KindContract]:
+    return KIND_CONTRACTS.get(kind)
+
+
+def register_recurrence_kind(kind: str, builder: Callable,
+                             contract: Optional[KindContract] = None) -> None:
     RECURRENCE_KINDS[kind] = builder
+    if contract is not None:
+        KIND_CONTRACTS[kind] = contract
 
 
 def emit_recurrent(rs: StreamingSchedule, *, scale: float = 1.0,
                    causal: bool = False, logical_stream: Optional[int] = None,
-                   out_dtype=None, interpret: bool = False) -> Callable:
+                   out_dtype=None, interpret: bool = False,
+                   acc_dtype=None) -> Callable:
     """Build the ``pl.pallas_call`` a ``RecurrentSchedule`` describes.
 
     The driver generalizes ``emit_pallas``'s sigma init/step/flush contract
@@ -909,9 +979,12 @@ def emit_recurrent(rs: StreamingSchedule, *, scale: float = 1.0,
 
     Grid, BlockSpecs, dimension semantics, scratch shapes, masking metadata
     and every stage's in-block einsum all come from the schedule — nothing
-    here is hand-written.
+    here is hand-written.  ``acc_dtype`` is the accumulator the solver
+    budgeted for: it becomes every kind's carried-state scratch dtype, MXU
+    ``preferred_element_type`` and exported-state dtype (default f32).
     """
     out_dtype = jnp.dtype(out_dtype or jnp.float32)
+    acc_dtype = jnp.dtype(acc_dtype or jnp.float32)
     ni = len(rs.ins)
     builder = RECURRENCE_KINDS.get(rs.state.kind if rs.state else
                                    "online_softmax")
@@ -921,9 +994,9 @@ def emit_recurrent(rs: StreamingSchedule, *, scale: float = 1.0,
                          f"{sorted(RECURRENCE_KINDS)}")
     body, scratch = builder(rs, scale=scale, causal=causal,
                             logical_stream=logical_stream,
-                            out_dtype=out_dtype)
+                            out_dtype=out_dtype, acc_dtype=acc_dtype)
     outs = (rs.out,) + rs.state_outs
-    out_dtypes = (out_dtype,) + (jnp.float32,) * len(rs.state_outs)
+    out_dtypes = (out_dtype,) + (acc_dtype,) * len(rs.state_outs)
     call = pl.pallas_call(
         body,
         grid=rs.grid_extents,
@@ -977,7 +1050,8 @@ def emit_recurrent_bundle(bundle: ScheduleBundle, *, scale: float = 1.0,
     logical_stream = bundle.shapes[-1]
     kern = emit_recurrent(rs, scale=scale, causal=causal,
                           logical_stream=logical_stream,
-                          out_dtype=out_dtype, interpret=interpret)
+                          out_dtype=out_dtype, interpret=interpret,
+                          acc_dtype=getattr(bundle, "acc_dtype", "float32"))
     out_slices = tuple(slice(0, d) for d in bundle.out_shape)
     exports = bool(rs.state_outs)
 

@@ -37,7 +37,7 @@ from __future__ import annotations
 import functools
 import threading
 from collections import OrderedDict
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -149,7 +149,7 @@ def apply(expr: "E.Expr", *arrays: jax.Array, out_dtype=None,
           blocks=None, mesh=None, shard: Optional[dict] = None,
           replicate_out: bool = False,
           acc_dtype: str = "float32",
-          verify: bool = False) -> jax.Array:
+          verify: Union[bool, str] = False) -> jax.Array:
     """Evaluate a composed MoA expression — the public derived-kernel entry.
 
     ``arrays`` bind the expression's leaves in composition order by their
@@ -168,7 +168,10 @@ def apply(expr: "E.Expr", *arrays: jax.Array, out_dtype=None,
 
     ``verify=True`` runs the static soundness checks (``repro.analysis``)
     on the derived schedule/plan before executing, raising
-    ``VerificationError`` on any unsound derivation.  Results are cached on
+    ``VerificationError`` on any unsound derivation.  ``verify="kernel"``
+    additionally traces the emitted Pallas kernel body and checks its
+    effect summary against the schedule contract (single-chip path only;
+    the sharded path keeps schedule-level checks).  Results are cached on
     the same normal-form keys as the schedules, so repeated calls — and
     every ``verify=False`` call — pay nothing.
     """
@@ -206,7 +209,8 @@ def apply(expr: "E.Expr", *arrays: jax.Array, out_dtype=None,
     if verify:
         from repro import analysis
         analysis.verify_expr(nf, dtype=dtype_s, hardware=hw, blocks=blocks,
-                             acc_dtype=acc_dtype)
+                             acc_dtype=acc_dtype,
+                             kernel=(verify == "kernel"))
     if use_kernel:
         fn = _expr_callable(nf, dtype_s, str(out_dtype), hw.name, interp,
                             blocks, acc_dtype=acc_dtype)

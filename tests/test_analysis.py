@@ -302,13 +302,75 @@ def test_lint_rule_registry_lists_all_four():
                           "only-planned-collectives", "no-silent-fallback"}
 
 
+def test_planned_prims_cover_ring_and_moe_collectives():
+    """Satellite: the ROADMAP's ring-attention and MoE all-to-all plans are
+    expressible as planned-collective summaries."""
+    assert analysis.PLANNED_PRIMS["ppermute"] == frozenset({"ppermute"})
+    assert analysis.PLANNED_PRIMS["all_to_all"] == frozenset({"all_to_all"})
+
+    def plain(x):
+        return x + 1.0
+
+    x = jnp.zeros((4,), jnp.float32)
+    # a planned ppermute/all_to_all that never appears is now a *known*
+    # summary (one finding), not an unknown-summary parse error
+    for summary in ("ppermute", "all_to_all"):
+        findings = analysis.lint(plain, x,
+                                 rules=("only-planned-collectives",),
+                                 collective=summary)
+        assert _rules(findings) == ["only-planned-collectives"]
+        assert "never appears" in findings[0].message
+
+
+def test_planned_collective_combined_summary_parsing():
+    """``"a+b"`` summaries union their allowed prims; an unknown component
+    anywhere in the chain is named in the finding."""
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("x",))
+    from jax.experimental.shard_map import shard_map as jshard_map
+
+    def ring(x):
+        return jax.lax.ppermute(x, "x", [(0, 0)])
+
+    fn = jshard_map(ring, mesh=mesh,
+                    in_specs=jax.sharding.PartitionSpec("x"),
+                    out_specs=jax.sharding.PartitionSpec("x"))
+    x = jnp.zeros((4,), jnp.float32)
+    # traced ppermute against its own plan: clean; against a combined
+    # summary that does not include it: unplanned
+    assert not analysis.lint(fn, x, rules=("only-planned-collectives",),
+                             collective="ppermute")
+    findings = analysis.lint(fn, x, rules=("only-planned-collectives",),
+                             collective="reduce_scatter+all_gather")
+    assert _rules(findings) == ["only-planned-collectives"]
+    assert "ppermute" in findings[0].message
+
+    def plain(x):
+        return x * 2.0
+
+    findings = analysis.lint(plain, x,
+                             rules=("only-planned-collectives",),
+                             collective="reduce_scatter+ring_exchange")
+    assert _rules(findings) == ["only-planned-collectives"]
+    assert "ring_exchange" in findings[0].message
+
+
 # ---------------------------------------------------------------------------
 # the registry sweep is importable and passes in-process
 # ---------------------------------------------------------------------------
 
-def test_verify_all_sweep_passes():
+def test_verify_all_sweep_passes_and_pins_json_report(tmp_path):
     from repro.analysis import verify_all
-    assert verify_all.main([]) == 0
+    out = tmp_path / "verify_all.json"
+    assert verify_all.main(["--json", str(out)]) == 0
+    import json
+    report = json.loads(out.read_text())
+    assert report["sweep"] == "verify_all"
+    assert report["failed"] == 0 and report["findings"] == []
+    # pin the summary counts: silent registry shrinkage (a form, hardware
+    # entry, or dtype pair dropping out of the sweep) fails loudly here
+    assert len(report["hardware"]) == 5
+    assert report["checked"] == 291
+    assert report["refused"] == 134
 
 
 def test_strict_verification_raises_with_findings():

@@ -1,0 +1,347 @@
+"""The kernel-body conformance analyzer: clean effect summaries on every
+shipped kind, seeded-mutation tests asserting exact rule classification
+(mirroring ``test_analysis``'s schedule-mutation matrix one layer down),
+the traced-acc-width/working-set agreement property, the paged index-map
+bound, and the ``verify_bundle(kernel=True)`` / ``apply(verify="kernel")``
+wiring."""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro import analysis
+from repro.analysis import conformance
+from repro.core import expr as E
+from repro.core import hardware as hwr
+from repro.core import schedule as sched
+from repro.core.blocking import _dtype_size
+from repro.kernels import emit, ops
+
+HW = hwr.get_entry("cpu")
+
+WINDOWED_DECODE = dict(
+    form=E.windowed_decode_form(2, 4, 64, page=16, view_pages=4,
+                                pool_pages=6, page_table=(0, 3, 1, 5),
+                                window=32),
+    blocks=(4, 16))
+
+
+def _rules(findings):
+    return sorted({f.rule for f in findings if f.level == "error"})
+
+
+def _mutated(bundle, kind):
+    """Repoint the bundle's recurrence kind at a registered mutant."""
+    rs = bundle.schedule
+    return dataclasses.replace(
+        bundle, schedule=dataclasses.replace(
+            rs, state=dataclasses.replace(rs.state, kind=kind)))
+
+
+@pytest.fixture
+def mutant_kind():
+    """Register a mutated kind builder for one test, then unregister."""
+    registered = []
+
+    def register(name, builder, contract_of):
+        emit.register_recurrence_kind(
+            name, builder, contract=emit.kind_contract(contract_of))
+        registered.append(name)
+        return name
+
+    yield register
+    for name in registered:
+        del emit.RECURRENCE_KINDS[name]
+        emit.KIND_CONTRACTS.pop(name, None)
+
+
+# ---------------------------------------------------------------------------
+# every shipped kernel body conforms to its schedule contract
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("label,form,kw", [
+    ("matmul", E.matmul_expr(300, 200, 160), {}),
+    ("matmul_tb", E.matmul_expr(300, 200, 160, transpose_b=True), {}),
+    ("hadamard", E.hadamard_expr(200, 300), {}),
+    ("max_plus", E.inner("max", "add", E.arr("A", (100, 60)),
+                         E.arr("B", (60, 80))), {}),
+    ("attention", E.attention_form(1, 2, 2, 300, 300, 64), {}),
+    ("attention_stats", E.attention_stats_form(1, 1, 1, 300, 300, 64), {}),
+    ("attention_windowed", E.attention_form(1, 1, 1, 256, 256, 64,
+                                            window=128), {}),
+    ("flash_dq", E.attention_dq_form(1, 1, 1, 300, 300, 64), {}),
+    ("flash_dkv", E.attention_dkv_form(1, 1, 1, 300, 300, 64), {}),
+    ("ssd", E.ssd_form(1, 4, 64, 2, 16, 16), {}),
+    ("ssd_chk", E.ssd_chk_form(1, 4, 64, 2, 16, 16), {}),
+    ("ssd_bwd", E.ssd_bwd_form(1, 4, 64, 2, 16, 16), {}),
+    ("rglru", E.rglru_form(1, 4, 64, 32), {}),
+    ("rglru_bwd", E.rglru_bwd_form(1, 4, 64, 32), {}),
+    ("windowed_decode", WINDOWED_DECODE["form"],
+     {"blocks": WINDOWED_DECODE["blocks"]}),
+], ids=lambda v: v if isinstance(v, str) else "")
+def test_shipped_kernels_conform(label, form, kw):
+    bundle = sched.get_schedule(form, dtype="float32", hardware=HW, **kw)
+    findings = conformance.kernel_findings(bundle, dtype="float32")
+    assert not findings, [str(f) for f in findings]
+
+
+def test_effect_summary_shape_windowed_decode():
+    """The worked README example: the paged decode step's summary exposes
+    the dynamic-pos guard on every fold store."""
+    bundle = sched.get_schedule(WINDOWED_DECODE["form"], dtype="float32",
+                                hardware=HW,
+                                blocks=WINDOWED_DECODE["blocks"])
+    summary = conformance.summarize_kernel(bundle, dtype="float32")
+    assert summary.guard_contract == "dynamic-pos"
+    roles = [r.role for r in summary.refs]
+    assert roles.count("output") == 1
+    assert "scratch" in roles
+    for r in summary.refs:
+        if r.role == "input":
+            assert not r.stores, f"input {r.name} is stored"
+        if r.role == "scratch":
+            # every fold store on carried state is guard- or mask-dominated
+            # by the POS-derived block-skip (the "dynamic" class)
+            folds = [s for s in r.stores
+                     if not conformance._is_init_store(
+                         s, summary.stream_dim)]
+            assert folds
+            for s in folds:
+                kinds = {g if isinstance(g, str) else g[0]
+                         for g in s.guards | s.masked}
+                assert "dynamic" in kinds, summary.describe()
+    # the rendering the README quotes stays available
+    assert "guard='dynamic-pos'" in summary.describe()
+
+
+# ---------------------------------------------------------------------------
+# seeded-mutation matrix: one emitter defect per rule class, exact
+# classification
+# ---------------------------------------------------------------------------
+
+def _gated_mutant(defect):
+    """Variants of the gated (rglru) kind body, each seeding one defect."""
+
+    def builder(rs, *, scale, causal, logical_stream, out_dtype, acc_dtype):
+        ni = len(rs.ins)
+        a_cell = emit._cell_shape(rs.ins[0])
+        h_cell = rs.state_blocks()[0]
+        nk = rs.grid[rs.stream_grid_dim].extent
+
+        def mut(*refs):
+            y_ref, hf_ref = refs[ni], refs[ni + 1]
+            h_ref = refs[ni + 2]
+            ki = pl.program_id(rs.stream_grid_dim)
+            if defect == "read_first":
+                carry = h_ref[...]            # read BEFORE the init store
+
+            @pl.when(ki == 0)
+            def _init():
+                h_ref[...] = refs[2][...].reshape(h_cell).astype(acc_dtype)
+
+            if defect != "read_first":
+                carry = h_ref[...]
+            a = jnp.exp(refs[0][...].reshape(a_cell).astype(acc_dtype))
+            b = refs[1][...].reshape(a_cell).astype(acc_dtype)
+
+            def comb(x, y):
+                return (x[0] * y[0], y[0] * x[1] + y[1])
+
+            aa, hh = jax.lax.associative_scan(comb, (a, b), axis=0)
+            hh = hh + aa * carry
+            y_ref[...] = hh.astype(out_dtype).reshape(rs.out.block)
+            h_ref[...] = hh[-1:]
+            if defect == "no_flush":
+                return                        # hf_ref never stored
+            flush_step = 0 if defect == "flush_first" else nk - 1
+
+            @pl.when(ki == flush_step)
+            def _flush():
+                hf_ref[...] = h_ref[...].reshape(rs.state_outs[0].block)
+
+        return mut, [pltpu.VMEM(h_cell, acc_dtype)]
+
+    return builder
+
+
+@pytest.mark.parametrize("defect,want", [
+    ("no_flush", ["effect"]),             # dropped _flush store
+    ("read_first", ["state-discipline"]),  # state read before step-0 init
+    ("flush_first", ["state-discipline"]),  # flush off the final step
+])
+def test_mutation_gated_kind(mutant_kind, defect, want):
+    name = mutant_kind(f"gated#{defect}", _gated_mutant(defect), "gated")
+    bundle = sched.get_schedule(E.rglru_form(1, 4, 64, 32),
+                                dtype="float32", hardware=HW)
+    findings = conformance.kernel_findings(_mutated(bundle, name),
+                                           dtype="float32")
+    assert _rules(findings) == want, [str(f) for f in findings]
+
+
+def test_mutation_softmax_dropped_stream_guard(mutant_kind):
+    """Deleting the ``kpos < sk`` pad guard (``logical_stream=None``) on a
+    padded stream is exactly a guard-dominance violation."""
+
+    def no_guard(rs, *, scale, causal, logical_stream, out_dtype, acc_dtype):
+        return emit._softmax_kind(rs, scale=scale, causal=causal,
+                                  logical_stream=None,
+                                  out_dtype=out_dtype, acc_dtype=acc_dtype)
+
+    name = mutant_kind("softmax#no_guard", no_guard, "online_softmax")
+    bundle = sched.get_schedule(E.attention_form(1, 2, 2, 300, 300, 64),
+                                dtype="float32", hardware=HW)
+    findings = conformance.kernel_findings(_mutated(bundle, name),
+                                           dtype="float32")
+    assert _rules(findings) == ["guard-dominance"], \
+        [str(f) for f in findings]
+
+
+def test_mutation_swapped_acc_dtype():
+    """A bundle solved at bf16 accumulation but emitted at f32 silently
+    widens off the certified working set — flagged on every scratch ref
+    and every dot that folds at the wrong width."""
+    bundle = sched.get_schedule(E.attention_form(1, 2, 2, 300, 300, 64),
+                                dtype="bfloat16",
+                                hardware=hwr.get_entry("tpu_v5e"),
+                                acc_dtype="bfloat16")
+    findings = conformance.kernel_findings(bundle, dtype="bfloat16",
+                                           acc_dtype="float32")
+    assert _rules(findings) == ["acc-dtype"], [str(f) for f in findings]
+    assert any("silently widens" in f.message for f in findings)
+    assert any("scratch" in f.message for f in findings)
+
+
+def test_recurrent_form_refuses_integer_accumulator():
+    """The emitter-side defect the conformance pass would flag is refused
+    one layer earlier: no integer-acc recurrent schedule derives."""
+    with pytest.raises(ValueError, match="floating"):
+        sched.get_schedule(E.attention_form(1, 1, 1, 64, 64, 32),
+                           dtype="int8", hardware=HW, acc_dtype="int32")
+
+
+# ---------------------------------------------------------------------------
+# traced accumulation widths agree with the certified working set
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("hw_name", ["cpu", "tpu_v5e"])
+@pytest.mark.parametrize("dtype,acc", [
+    ("float32", "float32"), ("bfloat16", "float32"),
+    ("bfloat16", "bfloat16"), ("int8", "int32")])
+@pytest.mark.parametrize("label,form", [
+    ("matmul", E.matmul_expr(300, 200, 160)),
+    ("attention", E.attention_form(1, 2, 2, 300, 300, 64)),
+    ("ssd", E.ssd_form(1, 4, 64, 2, 16, 16)),
+], ids=lambda v: v if isinstance(v, str) else "")
+def test_traced_acc_width_matches_working_set(hw_name, dtype, acc, label,
+                                              form):
+    """Property (satellite): for every (dtype, acc_dtype) pair the hardware
+    tables accept, the dtypes the conformance pass traces out of the kernel
+    body are the widths ``working_set_bytes`` assumed when the schedule was
+    certified against the chip's memory."""
+    entry = hwr.get_entry(hw_name)
+    try:
+        bundle = sched.get_schedule(form, dtype=dtype, hardware=entry,
+                                    acc_dtype=acc)
+    except (ValueError, AssertionError):
+        pytest.skip("pair refused at derivation — nothing to trace")
+    summary = conformance.summarize_kernel(bundle, dtype=dtype)
+    assumed = _dtype_size(bundle.acc_dtype)
+    scratch = [r for r in summary.refs if r.role == "scratch"]
+    for r in scratch:
+        assert np.dtype(r.dtype).itemsize == assumed, (
+            f"{r.name} traced at {r.dtype} but working_set_bytes assumed "
+            f"{assumed} bytes for acc_dtype={bundle.acc_dtype}")
+    for r in summary.refs:
+        if r.role in ("input",):
+            assert np.dtype(r.dtype).itemsize == _dtype_size(dtype)
+        if r.role == "state_out":
+            # recurrent state exports at the accumulator width the working
+            # set budgeted (PR 9: emit threads acc_dtype into out_dtypes)
+            assert np.dtype(r.dtype).itemsize == assumed
+    # the certificate itself moves with the width the trace confirmed
+    ws_at_acc = bundle.schedule.working_set_bytes(dtype, bundle.acc_dtype)
+    ws_at_f64 = bundle.schedule.working_set_bytes(dtype, "float64")
+    if scratch:
+        assert ws_at_acc <= ws_at_f64
+        if assumed < 8:
+            assert ws_at_acc < ws_at_f64
+
+
+# ---------------------------------------------------------------------------
+# the paged index-map bound
+# ---------------------------------------------------------------------------
+
+def test_index_map_page_table_bound():
+    at_bound = tuple(range(emit.MAX_PAGE_TABLE_ENTRIES))
+    imap = emit._index_map((0, None), page_table=at_bound)
+    assert imap(jnp.int32(0), jnp.int32(0)) is not None
+    over = tuple(range(emit.MAX_PAGE_TABLE_ENTRIES + 1))
+    with pytest.raises(ValueError) as err:
+        emit._index_map((0, None), page_table=over)
+    # the error names the offending pool size and the escape hatch
+    assert str(len(over)) in str(err.value)
+    assert "MAX_PAGE_TABLE_ENTRIES" in str(err.value)
+
+
+# ---------------------------------------------------------------------------
+# wiring: verify_bundle(kernel=True), apply(verify="kernel"), the sweep
+# ---------------------------------------------------------------------------
+
+def test_verify_bundle_kernel_flag_extends_findings_and_cache():
+    analysis.reset_verification_cache()
+    bundle = sched.get_schedule(E.attention_form(1, 2, 2, 300, 300, 64),
+                                dtype="float32", hardware=HW)
+    key = ("conformance-test-attn",)
+    base = analysis.verify_bundle(bundle, hardware=HW, dtype="float32",
+                                  key=key)
+    assert not analysis.verify.errors(base)
+    withk = analysis.verify_bundle(bundle, hardware=HW, dtype="float32",
+                                   key=key, kernel=True)
+    assert not analysis.verify.errors(withk)
+    # kernel=True results live under their own cache key: a second call
+    # hits, and the schedule-only entry was not clobbered
+    before = analysis.verification_cache_stats()
+    analysis.verify_bundle(bundle, hardware=HW, dtype="float32", key=key,
+                           kernel=True)
+    analysis.verify_bundle(bundle, hardware=HW, dtype="float32", key=key)
+    after = analysis.verification_cache_stats()
+    assert after["hits"] == before["hits"] + 2
+    assert after["misses"] == before["misses"]
+
+
+def test_verify_bundle_kernel_strict_raises_on_mutant(mutant_kind):
+    name = mutant_kind("gated#strict", _gated_mutant("no_flush"), "gated")
+    bundle = sched.get_schedule(E.rglru_form(1, 4, 64, 32),
+                                dtype="float32", hardware=HW)
+    with pytest.raises(analysis.VerificationError, match="never stored"):
+        analysis.verify_bundle(_mutated(bundle, name), hardware=HW,
+                               dtype="float32", kernel=True, strict=True)
+
+
+def test_apply_verify_kernel_matches_plain():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(2))
+    x = jax.random.normal(k1, (30, 20), jnp.float32)
+    w = jax.random.normal(k2, (20, 40), jnp.float32)
+    expr = E.matmul_expr(30, 20, 40)
+    got = ops.apply(expr, x, w, interpret=True, verify="kernel")
+    want = ops.apply(expr, x, w, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_conformance_all_cpu_sweep_and_json(tmp_path):
+    from repro.analysis import conformance_all
+    out = tmp_path / "conformance.json"
+    assert conformance_all.main(["--hardware", "cpu", "--json",
+                                 str(out)]) == 0
+    report = json.loads(out.read_text())
+    assert report["sweep"] == "conformance_all"
+    assert report["hardware"] == ["cpu"]
+    assert report["failed"] == 0 and report["findings"] == []
+    # pin the cpu slice: every registered kind and generic form stays swept
+    assert report["checked"] == 73
+    assert report["refused"] == 15

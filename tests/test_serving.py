@@ -124,6 +124,19 @@ def test_verify_paged_form_clean():
     assert not verify.errors(findings)
 
 
+def test_verify_paged_form_kernel_body_conforms():
+    """Serve-smoke pin for the PR-9 conformance rules: the paged decode
+    kernel the engine binds passes the body checks (``kernel=True`` runs
+    ``effect``/``acc-dtype``/``guard-dominance``/``state-discipline``
+    alongside the schedule-layer rules)."""
+    findings = verify.verify_expr(_paged_form(), dtype="float32",
+                                  hardware=CPU, blocks=(4, 16),
+                                  strict=False, kernel=True)
+    assert not verify.errors(findings)
+    banned = {"effect", "acc-dtype", "guard-dominance", "state-discipline"}
+    assert not [f for f in findings if f.rule in banned]
+
+
 def test_paged_form_refuses_out_of_pool_table():
     with pytest.raises(ValueError, match="outside the pool"):
         _paged_form(table=(0, 3, 1, 6))
