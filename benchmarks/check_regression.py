@@ -12,7 +12,10 @@ regression (order-of-magnitude slowdowns), not CI jitter.
 
 Serving rows add throughput (``tok_s_`` prefix): a rate, so the
 tolerance runs the other way — fresh may drop to ``1/TIME_TOL`` of
-baseline before failing.
+baseline before failing.  Dispatch-amortization ratios (``kernel_calls``
+prefix — decode launches per generated token; the batched path's whole
+point is pushing this below one per slot) gate like timings: lower is
+better, fresh fails past ``TIME_TOL``x baseline.
 
 A PR that intentionally changes a modeled number (new solver, new rows)
 regenerates the affected baseline in the same commit::
@@ -46,6 +49,10 @@ def _is_timing(key: str) -> bool:
 
 def _is_throughput(key: str) -> bool:
     return key.startswith("tok_s_")
+
+
+def _is_call_ratio(key: str) -> bool:
+    return key.startswith("kernel_calls")
 
 
 def _compare(path: str, base, fresh, errors: list[str]) -> None:
@@ -84,6 +91,11 @@ def _compare(path: str, base, fresh, errors: list[str]) -> None:
                 errors.append(f"{path}: throughput regressed "
                               f"{base:.1f} -> {fresh:.1f} tok/s "
                               f"(< 1/{TIME_TOL}x)")
+        elif _is_call_ratio(key):
+            if base > 0 and fresh > TIME_TOL * base:
+                errors.append(f"{path}: dispatch ratio regressed "
+                              f"{base:.2f} -> {fresh:.2f} kernel "
+                              f"calls/token (> {TIME_TOL}x)")
         elif not math.isclose(base, fresh, rel_tol=MODEL_RTOL,
                               abs_tol=1e-12):
             errors.append(f"{path}: modeled value drifted {base!r} -> "
@@ -120,7 +132,8 @@ def _gate(json_name: str, module: str) -> int:
         1 for section in baseline.values() if isinstance(section, (list, dict))
         for rec in (section if isinstance(section, list) else [section])
         if isinstance(rec, dict)
-        for k in rec if _is_timing(k) or _is_throughput(k))
+        for k in rec
+        if _is_timing(k) or _is_throughput(k) or _is_call_ratio(k))
     print(f"{json_name} gate clean: modeled values exact, "
           f"{n_timings} timings within {TIME_TOL}x of baseline")
     return 0

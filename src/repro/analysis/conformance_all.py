@@ -32,7 +32,8 @@ from repro.core import schedule as sched_mod
 #: forms whose streamed axis only derives with pinned blocks — the paged
 #: decode step pins (group rows, page size) exactly as the serving engine
 #: does (``ops._decode_executor``)
-BLOCK_OVERRIDES = {"windowed_decode": (4, 16)}
+BLOCK_OVERRIDES = {"windowed_decode": (4, 16),
+                   "batched_decode": (4, 16)}
 
 
 def _causal_variants(bundle):

@@ -123,22 +123,47 @@ def _spec_findings(spec: OperandSpec, grid, axis_extent: dict,
                 # its logical extent is len(table) pages of ``b``.  The
                 # per-page slab offsets must stay inside the pool (the
                 # paged analogue of psi-bounds) and the table must name one
-                # slab per streamed grid step.
-                if len(table) != grid[gd].extent:
-                    out.append(Finding(
-                        "page-bounds", "error", subject,
-                        f"{spec.array}: page table names {len(table)} "
-                        f"slabs but the streamed grid dim {gd} runs "
-                        f"{grid[gd].extent} steps"))
-                for pno, slab in enumerate(table):
-                    if slab < 0 or (slab + 1) * b > s:
+                # slab per streamed grid step.  A stacked [slot, k] table
+                # (``page_slot_dim`` set) adds the slot dimension: one row
+                # per slot grid step, every slab of every slot in-pool.
+                slot_dim = getattr(spec, "page_slot_dim", None)
+                if slot_dim is not None:
+                    if slot_dim >= len(grid):
                         out.append(Finding(
                             "page-bounds", "error", subject,
-                            f"{spec.array}: view page {pno} maps to slab "
-                            f"{slab}, whose block of {b} ends at "
-                            f"{(slab + 1) * b} — outside the {s}-element "
-                            f"pool"))
-                full = len(table) * b
+                            f"{spec.array}: stacked page table keyed on "
+                            f"grid dim {slot_dim}, but the grid has "
+                            f"{len(grid)} axes"))
+                    elif len(table) != grid[slot_dim].extent:
+                        out.append(Finding(
+                            "page-bounds", "error", subject,
+                            f"{spec.array}: stacked page table has "
+                            f"{len(table)} rows but the slot grid dim "
+                            f"{slot_dim} runs {grid[slot_dim].extent} "
+                            f"steps"))
+                    rows = table
+                else:
+                    rows = (table,)
+                n_cols = {len(row) for row in rows}
+                if n_cols != {grid[gd].extent}:
+                    out.append(Finding(
+                        "page-bounds", "error", subject,
+                        f"{spec.array}: page table names {sorted(n_cols)} "
+                        f"slabs but the streamed grid dim {gd} runs "
+                        f"{grid[gd].extent} steps"))
+                for sno, row in enumerate(rows):
+                    for pno, slab in enumerate(row):
+                        if slab < 0 or (slab + 1) * b > s:
+                            where = (f"slot {sno} view page {pno}"
+                                     if slot_dim is not None
+                                     else f"view page {pno}")
+                            out.append(Finding(
+                                "page-bounds", "error", subject,
+                                f"{spec.array}: {where} maps to slab "
+                                f"{slab}, whose block of {b} ends at "
+                                f"{(slab + 1) * b} — outside the "
+                                f"{s}-element pool"))
+                full = len(rows[0]) * b
                 prev = axis_extent.get(ax)
                 if prev is None:
                     axis_extent[ax] = full

@@ -56,6 +56,11 @@ def _forms():
     yield "windowed_decode", E.windowed_decode_form(
         2, 4, 64, page=16, view_pages=4, pool_pages=6,
         page_table=(0, 3, 1, 5), window=32)
+    # batched multi-slot decode: the slot axis lifted, a stacked [slot, k]
+    # table into one shared pool
+    yield "batched_decode", E.batched_decode_form(
+        3, 2, 4, 64, page=16, view_pages=4, pool_pages=8,
+        page_tables=((0, 3, 1, 5), (2, 4, 6, 7), (1, 0, 3, 2)), window=32)
 
 
 #: (input dtype, accumulation dtype) — legality is decided per hardware
@@ -64,6 +69,12 @@ _DTYPE_MATRIX = (("float32", "float32"),
                  ("bfloat16", "float32"),
                  ("bfloat16", "bfloat16"),
                  ("int8", "int32"))
+
+#: forms whose streamed axis only derives with pinned blocks: batched
+#: decode pins (group rows, page size) exactly as the serving engine does
+#: (``ops._batched_decode_executor``) — the generic solver has no page-
+#: alignment constraint, so its solved stream block may pad the view
+BLOCK_OVERRIDES = {"batched_decode": (4, 16)}
 
 
 def _plan_cases():
@@ -99,7 +110,7 @@ def run_sweep(verbose=False):
                 try:
                     findings = analysis.verify_expr(
                         form, dtype=dtype, hardware=entry, acc_dtype=acc,
-                        strict=False)
+                        blocks=BLOCK_OVERRIDES.get(label), strict=False)
                 except (ValueError, AssertionError) as exc:
                     # the registries refusing an illegal/infeasible combo
                     # IS the derivation-time failure the certifier wants

@@ -396,6 +396,7 @@ class RecurrentForm:
     page_table: Tuple[int, ...] = ()
     paged: Tuple[str, ...] = ()
     pool_pages: int = 0
+    slot_axis: str = ""
 
     def __post_init__(self):
         if not self.stages:
@@ -448,7 +449,37 @@ class RecurrentForm:
                 raise ValueError(
                     "paged streaming needs all three of page_table / paged "
                     "leaf names / pool_pages")
-            bad = [t for t in self.page_table
+            stacked = bool(self.page_table) and isinstance(
+                self.page_table[0], tuple)
+            if stacked != bool(self.slot_axis):
+                raise ValueError(
+                    "a stacked [slot, k] page table and slot_axis come "
+                    "together: got "
+                    f"slot_axis={self.slot_axis!r}, stacked={stacked}")
+            if stacked:
+                widths = {len(row) for row in self.page_table}
+                if len(widths) != 1:
+                    raise ValueError(
+                        f"stacked page table is ragged: row lengths {widths}")
+                if self.slot_axis == self.stream_axis:
+                    raise ValueError(
+                        f"slot axis {self.slot_axis!r} cannot be the "
+                        "streamed axis")
+                for nf in self.stages:
+                    if self.slot_axis not in nf.out_axes:
+                        raise ValueError(
+                            f"slot axis {self.slot_axis!r} must be a lifted "
+                            f"output axis of every stage, missing from "
+                            f"{nf.out_axes}")
+                if len(self.page_table) != ext.get(self.slot_axis):
+                    raise ValueError(
+                        f"stacked page table names {len(self.page_table)} "
+                        f"slots but axis {self.slot_axis!r} has extent "
+                        f"{ext.get(self.slot_axis)}")
+                entries = [t for row in self.page_table for t in row]
+            else:
+                entries = list(self.page_table)
+            bad = [t for t in entries
                    if not 0 <= int(t) < self.pool_pages]
             if bad:
                 raise ValueError(
@@ -461,12 +492,20 @@ class RecurrentForm:
                     f"paged leaves {missing} are not stage leaves")
             for nf in self.stages:
                 for l in nf.leaves:
-                    if l.array in self.paged and (
-                            not l.dims or l.dims[0][0] != self.stream_axis):
+                    if l.array not in self.paged:
+                        continue
+                    if not l.dims or l.dims[0][0] != self.stream_axis:
                         raise ValueError(
                             f"paged leaf {l.array!r} must store the streamed "
                             f"axis {self.stream_axis!r} as its leading dim, "
                             f"got {l.dims}")
+                    if self.slot_axis and any(
+                            t == self.slot_axis for t, _ in l.dims):
+                        raise ValueError(
+                            f"paged leaf {l.array!r} must not carry the slot "
+                            f"axis {self.slot_axis!r}: the pool is shared "
+                            "storage, slots address it through the stacked "
+                            "table")
 
     @property
     def folding(self) -> bool:
@@ -501,7 +540,8 @@ class RecurrentForm:
                 self.state.key(),
                 tuple((l.array, l.dims, l.layout) for l in self.aux),
                 self.window, self.prefix_len,
-                self.page_table, self.paged, self.pool_pages)
+                self.page_table, self.paged, self.pool_pages,
+                self.slot_axis)
 
 
 def StreamingForm(name: str, scores: NormalForm, context: NormalForm,
@@ -871,6 +911,71 @@ def windowed_decode_form(hkv: int, g: int, hd: int,
                          DECODE_STATE, aux=(POS,), window=int(window),
                          page_table=tuple(int(t) for t in page_table),
                          paged=("K", "V"), pool_pages=int(pool_pages))
+
+
+def batched_decode_form(slots: int, hkv: int, g: int, hd: int,
+                        vd: Optional[int] = None, *, page: int,
+                        view_pages: int, pool_pages: int,
+                        page_tables: Tuple[Tuple[int, ...], ...],
+                        window: int = 0) -> RecurrentForm:
+    """One decode step for *every* active serving slot as a single folding
+    recurrence — ``windowed_decode`` with the slot axis dimension-lifted.
+
+    The slot axis ``s`` is an ordinary lifted output axis on both stages
+    (MoA's lifted inner product: the batched product is the same ONF with
+    one more lead dimension), so the derivation, the state monoid and the
+    kernel body are all ``windowed_decode``'s unchanged — each (s, h) grid
+    cell folds exactly the float ops the per-slot kernel folds, which is
+    what makes the batched launch bit-identical to N sequential launches.
+
+    What *does* change is addressing: the page table stacks to 2-D
+    ``[slot, k]`` static metadata, lowered in the K/V BlockSpec index maps
+    as ``(s, k) -> table[s][k]`` — the select-fold now keyed on two grid
+    axes.  K/V still bind the one shared pool (no slot dim: slots address
+    it only through their table rows), and POS promotes to one int32 row
+    per slot, so masking stays runtime data and the executor re-jits only
+    when the stacked table changes, never per token.  Engine-side, a dead
+    slot is just POS = -1 (every block-skip guard ``k*page <= pos`` is
+    then false, so no entry its row names ever folds), which is why
+    slot-count changes re-key nothing and a retirement merely reverts the
+    table to a previously-seen key.
+    """
+    if g < 2:
+        raise ValueError(
+            f"windowed_decode folds over the GQA group axis; g={g} leaves "
+            "no blocked per-row axis (use the dense decode path)")
+    page_tables = tuple(tuple(int(t) for t in row) for row in page_tables)
+    if len(page_tables) != slots:
+        raise ValueError(
+            f"stacked page table has {len(page_tables)} rows for "
+            f"{slots} slots")
+    for row in page_tables:
+        if len(row) != view_pages:
+            raise ValueError(
+                f"page table length {len(row)} != view_pages {view_pages}")
+    vd = vd or hd
+    sk = view_pages * page
+    Q = LeafSpec("Q", (("s", slots), ("h", hkv), ("g", g), ("c", hd)),
+                 "row")
+    K = LeafSpec("K", (("j", sk), ("h", hkv), ("c", hd)), "row")
+    scores = NormalForm(
+        name="batched_decode_scores", out_axes=("s", "h", "g", "j"),
+        reduce_axes=("c",),
+        extents=(("s", slots), ("h", hkv), ("g", g), ("j", sk), ("c", hd)),
+        leaves=(Q, K), combine="mul", reduce_op="add")
+    P = LeafSpec("P", (("s", slots), ("h", hkv), ("g", g), ("j", sk)),
+                 "row")
+    V = LeafSpec("V", (("j", sk), ("h", hkv), ("d", vd)), "row")
+    context = NormalForm(
+        name="batched_decode_context", out_axes=("s", "h", "g", "d"),
+        reduce_axes=("j",),
+        extents=(("s", slots), ("h", hkv), ("g", g), ("d", vd), ("j", sk)),
+        leaves=(P, V), combine="mul", reduce_op="add")
+    POS = LeafSpec("POS", (("s", slots), ("_pc", 2)), "row")
+    return RecurrentForm("batched_decode", (scores, context), "j",
+                         DECODE_STATE, aux=(POS,), window=int(window),
+                         page_table=page_tables, paged=("K", "V"),
+                         pool_pages=int(pool_pages), slot_axis="s")
 
 
 # ---------------------------------------------------------------------------

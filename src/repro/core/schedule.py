@@ -86,14 +86,21 @@ class OperandSpec:
     BlockSpec lowering of a paged psi view whose per-page slab offsets are
     ``Access.const`` terms.  ``shape[0]`` is then the pool extent
     (pool_pages * block), not the logical view extent
-    (len(page_table) * block)."""
+    (len(page_table) * block).
+
+    With ``page_slot_dim`` set, the table is *stacked* 2-D ``[slot, k]``
+    metadata (batched multi-slot decode): ``page_slot_dim`` names the grid
+    axis carrying the lifted slot index ``s``, and dim 0's block index
+    becomes ``page_table[s][k]`` — the same select-fold lowering keyed on
+    two grid axes."""
     array: str
     axes: tuple[str, ...]
     shape: tuple[int, ...]
     block: tuple[int, ...]
     grid_dims: tuple[Optional[int], ...]
     offsets: tuple[int, ...] = ()
-    page_table: Optional[tuple[int, ...]] = None
+    page_table: Optional[tuple] = None
+    page_slot_dim: Optional[int] = None
 
     @property
     def is_psi_view(self) -> bool:
@@ -956,7 +963,28 @@ def _page_schedule(sched: RecurrentSchedule, rf: "expr_mod.RecurrentForm",
             "stream block; choose page-aligned blocks")
     page = sched.stream_block
     n_steps = sched.grid[sched.stream_grid_dim].extent
-    if len(rf.page_table) != n_steps:
+    slot_dim = None
+    if rf.slot_axis:
+        # stacked [slot, k] table: find the grid axis carrying the lifted
+        # slot index — it must exist (a lead output axis lifts block-1 onto
+        # the grid) and hold exactly one table row per slot
+        dims = [i for i, g in enumerate(sched.grid)
+                if g.base == rf.slot_axis]
+        if len(dims) != 1:
+            raise ValueError(
+                f"slot axis {rf.slot_axis!r} does not map to exactly one "
+                f"grid axis ({dims}) — no stacked-table index map")
+        slot_dim = dims[0]
+        if sched.grid[slot_dim].extent != len(rf.page_table):
+            raise ValueError(
+                f"stacked page table has {len(rf.page_table)} rows but the "
+                f"slot grid axis takes {sched.grid[slot_dim].extent} steps")
+        rows_bad = [row for row in rf.page_table if len(row) != n_steps]
+        if rows_bad:
+            raise ValueError(
+                f"stacked page-table rows {rows_bad} do not name "
+                f"{n_steps} slabs (streamed block {page})")
+    elif len(rf.page_table) != n_steps:
         raise ValueError(
             f"page table has {len(rf.page_table)} entries but the streamed "
             f"grid axis takes {n_steps} steps (block {page})")
@@ -981,7 +1009,8 @@ def _page_schedule(sched: RecurrentSchedule, rf: "expr_mod.RecurrentForm",
                 "with a page table")
         pool = rf.pool_pages * page
         new_ins.append(_dc_replace(spec, shape=(pool,) + spec.shape[1:],
-                                   page_table=rf.page_table))
+                                   page_table=rf.page_table,
+                                   page_slot_dim=slot_dim))
     return _dc_replace(sched, ins=tuple(new_ins))
 
 

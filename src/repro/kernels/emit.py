@@ -63,7 +63,8 @@ MAX_PAGE_TABLE_ENTRIES = 1024
 
 def _index_map(grid_dims: tuple[Optional[int], ...],
                offsets: tuple[int, ...] = (),
-               page_table: Optional[tuple[int, ...]] = None) -> Callable:
+               page_table: Optional[tuple] = None,
+               page_slot_dim: Optional[int] = None) -> Callable:
     """BlockSpec index map from the operand's grid bindings.
 
     ``offsets`` add a constant block offset per dimension (a psi view's
@@ -73,10 +74,25 @@ def _index_map(grid_dims: tuple[Optional[int], ...],
     per-page slab offsets without a gather-copy.  The lookup is unrolled
     as a ``jnp.where`` fold over integer literals because Pallas index
     maps may not capture constant arrays; tables past
-    ``MAX_PAGE_TABLE_ENTRIES`` raise instead of emitting the fold."""
-    if page_table is not None and len(page_table) > MAX_PAGE_TABLE_ENTRIES:
+    ``MAX_PAGE_TABLE_ENTRIES`` raise instead of emitting the fold.
+
+    With ``page_slot_dim`` the table is stacked 2-D ``[slot, k]`` (batched
+    multi-slot decode): the fold runs over the row-major flattened table on
+    the combined key ``s * n_steps + k``, with ``s`` read from grid axis
+    ``page_slot_dim`` — same select-fold, two grid axes keying it.  The
+    entry budget applies to the flattened table."""
+    if page_table is not None and page_slot_dim is not None:
+        n_steps = len(page_table[0])
+        flat_table = tuple(t for row in page_table for t in row)
+    elif page_table is not None:
+        n_steps = None
+        flat_table = tuple(page_table)
+    else:
+        n_steps = None
+        flat_table = None
+    if flat_table is not None and len(flat_table) > MAX_PAGE_TABLE_ENTRIES:
         raise ValueError(
-            f"page table with {len(page_table)} entries: the paged index "
+            f"page table with {len(flat_table)} entries: the paged index "
             f"map lowers one jnp.where select per entry, linear in the "
             f"view's page count — past {MAX_PAGE_TABLE_ENTRIES} entries "
             f"the unrolled fold is pathological; split the view or raise "
@@ -84,8 +100,8 @@ def _index_map(grid_dims: tuple[Optional[int], ...],
     offs = offsets or (0,) * len(grid_dims)
 
     def _lookup(i):
-        slab = jnp.int32(page_table[0])
-        for k, t in enumerate(page_table[1:], start=1):
+        slab = jnp.int32(flat_table[0])
+        for k, t in enumerate(flat_table[1:], start=1):
             slab = jnp.where(i == k, jnp.int32(t), slab)
         return slab
 
@@ -93,7 +109,9 @@ def _index_map(grid_dims: tuple[Optional[int], ...],
         idx = []
         for dim, (d, off) in enumerate(zip(grid_dims, offs)):
             i = (gids[d] if d is not None else 0) + off
-            if dim == 0 and page_table is not None:
+            if dim == 0 and flat_table is not None:
+                if n_steps is not None:
+                    i = gids[page_slot_dim] * n_steps + i
                 i = _lookup(i)
             idx.append(i)
         return tuple(idx)
@@ -1002,7 +1020,8 @@ def emit_recurrent(rs: StreamingSchedule, *, scale: float = 1.0,
         grid=rs.grid_extents,
         in_specs=[pl.BlockSpec(opn.block, _index_map(opn.grid_dims,
                                                      opn.offsets,
-                                                     opn.page_table))
+                                                     opn.page_table,
+                                                     opn.page_slot_dim))
                   for opn in rs.ins],
         out_specs=[pl.BlockSpec(o.block, _index_map(o.grid_dims, o.offsets))
                    for o in outs],

@@ -1043,7 +1043,7 @@ def _decode_executor(hkv, g, hd, vd, page, view_pages, pool_pages, table,
     """Jitted executable for one paged-decode shape + page table: the
     cached derivation of ``expr.windowed_decode_form`` through
     ``emit_recurrent``.  Binds (q, k_pool, v_pool, pos); returns the
-    (hkv, g, vd) f32 context.  A LIFO page allocator makes tables recur
+    (hkv, g, vd) f32 context.  A canonical page allocator makes tables recur
     across sequences, so this cache stays hot in steady-state serving."""
     from repro.kernels.emit import emit_recurrent_bundle
     form = E.windowed_decode_form(hkv, g, hd, vd, page=page,
@@ -1112,6 +1112,82 @@ def paged_decode(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     fn = _decode_executor(hkv, g, hd, vd, int(page), len(table),
                           pool_pages, table, int(window), float(scale),
                           str(jnp.dtype(q.dtype)), hw.name, bool(interp))
+    return fn(q, k_pool, v_pool, pos)
+
+
+@functools.lru_cache(maxsize=512)
+def _batched_decode_executor(slots, hkv, g, hd, vd, page, view_pages,
+                             pool_pages, tables, window, scale, dtype_s,
+                             hw_name, interpret):
+    """Jitted executable for one batched-decode shape + STACKED page table:
+    the cached derivation of ``expr.batched_decode_form`` through
+    ``emit_recurrent``.  Binds (q, k_pool, v_pool, pos); returns the
+    (slots, hkv, g, vd) f32 context.  The LRU key is the stacked-table
+    tuple — the engine pads dead slots with a dead table row, so the key
+    changes only when live pages move, never with the active slot count."""
+    from repro.kernels.emit import emit_recurrent_bundle
+    form = E.batched_decode_form(slots, hkv, g, hd, vd, page=page,
+                                 view_pages=view_pages,
+                                 pool_pages=pool_pages, page_tables=tables,
+                                 window=window)
+    bundle = _sched.get_schedule(form, dtype=dtype_s,
+                                 hardware=get_entry(hw_name),
+                                 blocks=(g, page))
+    return jax.jit(emit_recurrent_bundle(bundle, scale=scale, causal=True,
+                                         out_dtype="float32",
+                                         interpret=interpret))
+
+
+def _batched_oracle(q, k_pool, v_pool, pos, tables, page, scale, window):
+    """Per-slot ``_paged_oracle`` stacked over the slot axis — the batched
+    reference.  Dead slots (pos -1) produce garbage rows the caller masks;
+    the oracle clamps their gather indices like the device would."""
+    outs = [_paged_oracle(q[s], k_pool, v_pool, pos[s:s + 1], tables[s],
+                          page, scale, window)
+            for s in range(q.shape[0])]
+    return jnp.stack(outs)
+
+
+def paged_decode_batched(q: jax.Array, k_pool: jax.Array,
+                         v_pool: jax.Array, pos: jax.Array, *,
+                         page_tables: tuple, page: int, scale: float,
+                         window: int = 0, interpret: Optional[bool] = None,
+                         hardware: Optional[HardwareEntry] = None
+                         ) -> jax.Array:
+    """One decode step for EVERY active slot in one kernel launch.
+
+    ``q`` is (slots, hkv, g, hd) — one query token per slot; the pools are
+    the same shared (pool_tokens, hkv, hd) slab storage ``paged_decode``
+    binds; ``pos`` is the (slots, 2) int32 POS aux whose ``[s, 0]`` entry
+    is slot ``s``'s view-relative query position.  ``page_tables`` is the
+    stacked ``[slot][k]`` view->slab map — static metadata on the executor
+    cache, so the launch count per engine iteration is 1 regardless of the
+    active slot count.  A dead/padded slot rides a row of dead entries
+    with ``pos[s, 0] == -1``: every block-skip guard ``k*page <= -1`` is
+    false, so its (m, l, acc) state never folds and the flush emits the
+    0/max(l, eps) zero row.
+    """
+    hw, interp = _resolve(hardware, interpret)
+    tables = tuple(tuple(int(t) for t in row) for row in page_tables)
+    if not tables or not tables[0]:
+        raise ValueError(
+            "paged_decode_batched requires a non-empty stacked page table")
+    slots, hkv, g, hd = q.shape
+    vd = v_pool.shape[-1]
+    if k_pool.shape[0] % page or k_pool.shape[0] != v_pool.shape[0]:
+        raise ValueError(
+            f"pool token extents {k_pool.shape[0]}/{v_pool.shape[0]} must "
+            f"be equal and a multiple of page={page}")
+    pool_pages = k_pool.shape[0] // page
+    use_kernel = _use_kernel(hw, interp, interpret)
+    if not use_kernel:
+        return _batched_oracle(q, k_pool, v_pool, pos, tables, page,
+                               float(scale), int(window))
+    fn = _batched_decode_executor(slots, hkv, g, hd, vd, int(page),
+                                  len(tables[0]), pool_pages, tables,
+                                  int(window), float(scale),
+                                  str(jnp.dtype(q.dtype)), hw.name,
+                                  bool(interp))
     return fn(q, k_pool, v_pool, pos)
 
 

@@ -351,6 +351,65 @@ def attention_decode_paged(p: dict, x: jax.Array, k_pool: jax.Array,
     return o, k_pool, v_pool
 
 
+def attention_decode_paged_batched(p: dict, x: jax.Array,
+                                   k_pool: jax.Array, v_pool: jax.Array,
+                                   pos: jax.Array, cfg: ArchConfig, *,
+                                   page_tables: tuple, page: int,
+                                   window: int = 0, interpret=None
+                                   ) -> tuple[jax.Array, jax.Array,
+                                              jax.Array]:
+    """One-token decode for EVERY serving slot against the shared slab
+    pools — ``attention_decode_paged`` with the slot axis lifted.
+
+    x: (slots, 1, d); pos: (slots,) absolute positions, -1 for a dead
+    (padded) slot; ``page_tables`` is the STATIC stacked ``[slot][k]``
+    view->slab map.  Each live slot's new K/V land by its own slab
+    arithmetic (rows are disjoint across live slots — live tables never
+    share a slab).  A dead slot is inert by runtime data, not by its
+    table row: its K/V write is routed past the pool and dropped
+    (``mode="drop"``), and POS -1 fails every block-skip guard so no key
+    it can address ever folds — which is why dead rows may carry ANY
+    in-pool entries (stale slabs of a retired slot included) without
+    affecting a single live value.  One ``paged_decode_batched`` launch
+    serves all slots."""
+    hd = p["wq"].shape[-1]
+    scale = hd ** -0.5
+    q = _proj(x, p["wq"])
+    k = _proj(x, p["wk"])
+    v = _proj(x, p["wv"])
+    if cfg.use_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if cfg.rope_pct > 0:
+        sin, cos = rope_tables(pos[:, None], int(hd * cfg.rope_pct),
+                               cfg.rope_theta)
+        pct = 1.0 if cfg.rope_pct == 1.0 else (hd * cfg.rope_pct) / hd
+        q = apply_rope(q, sin, cos, pct)
+        k = apply_rope(k, sin, cos, pct)
+    slots = x.shape[0]
+    table_arr = jnp.asarray(page_tables, jnp.int32)     # (slots, view)
+    vpos = pos.astype(jnp.int32)
+    rows = table_arr[jnp.arange(slots), vpos // page] * page + vpos % page
+    # dead slots (vpos -1) route their write past the pool; drop it there
+    rows = jnp.where(vpos >= 0, rows, k_pool.shape[0])
+    k_pool = k_pool.at[rows].set(k[:, 0].astype(k_pool.dtype), mode="drop")
+    v_pool = v_pool.at[rows].set(v[:, 0].astype(v_pool.dtype), mode="drop")
+    kvh = k_pool.shape[1]
+    h = q.shape[2]
+    qg = q[:, 0].reshape(slots, kvh, h // kvh, hd)
+    pos_aux = jnp.stack([vpos, jnp.zeros_like(vpos)], axis=-1)
+    ctx = ops.paged_decode_batched(qg, k_pool, v_pool, pos_aux,
+                                   page_tables=page_tables, page=page,
+                                   scale=scale, window=window,
+                                   interpret=interpret)
+    out = ctx.reshape(slots, 1, h, hd).astype(x.dtype)
+    o = _out_proj(out, p["wo"], x.dtype)
+    if cfg.use_bias:
+        o = o + p["bo"].astype(x.dtype)
+    return o, k_pool, v_pool
+
+
 def _cache_write(cache: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
     """Write new (B,1,...) into cache (B,S,...) at per-row pos (B,)."""
     b, s = cache.shape[:2]

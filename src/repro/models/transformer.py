@@ -610,6 +610,47 @@ def decode_step_paged(params: dict, cfg: ArchConfig, tokens: jax.Array,
     return logits, {"k": nk, "v": nv}
 
 
+def decode_step_paged_batched(params: dict, cfg: ArchConfig,
+                              tokens: jax.Array, pos: jax.Array,
+                              pools: dict, *, page_tables: tuple, page: int,
+                              interpret=None) -> tuple[jax.Array, dict]:
+    """One decode step for EVERY serving slot through the stacked paged
+    view — one derived kernel launch per layer covers all slots.
+
+    tokens/pos: (slots,) int32; a dead (padded) slot carries pos -1 —
+    its K/V write drops and no key folds, whatever its table row says —
+    so slot-count changes re-key nothing.  ``page_tables`` is the static
+    stacked ``[slot][k]`` map; it re-keys the derived kernel only when
+    the engine allocates a page.  Returns (logits (slots, vocab),
+    updated pools); dead rows are garbage the engine drops.
+    """
+    if cfg.family not in ("dense", "vlm") or cfg.attention == "mla":
+        raise ValueError(f"decode_step_paged does not handle "
+                         f"family={cfg.family!r}/{cfg.attention!r}")
+    x = embed_tokens(params, tokens[:, None], cfg)
+
+    def body(xc, scan_in):
+        lp, kp, vp = scan_in
+        h = apply_norm(lp["ln1"], xc, cfg)
+        a_out, kp, vp = attn.attention_decode_paged_batched(
+            lp["attn"], h, kp, vp, pos, cfg, page_tables=page_tables,
+            page=page, window=cfg.local_window, interpret=interpret)
+        if cfg.parallel_block:
+            m_out = apply_mlp(lp["mlp"], h, cfg)
+            xc = xc + a_out + m_out
+        else:
+            xc = xc + a_out
+            h2 = apply_norm(lp["ln2"], xc, cfg)
+            xc = xc + apply_mlp(lp["mlp"], h2, cfg)
+        return xc, (kp, vp)
+
+    x, (nk, nv) = _scan(cfg, body, x, (params["layers"],
+                                       pools["k"], pools["v"]))
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = logits_from_hidden(params, x, cfg)[:, 0]
+    return logits, {"k": nk, "v": nv}
+
+
 def lm_loss(params: dict, cfg: ArchConfig, tokens: jax.Array,
             targets: jax.Array, patches: Optional[jax.Array] = None,
             aux_weight: float = 0.01, z_weight: float = 1e-3

@@ -1,4 +1,4 @@
-"""The paged KV pool: slab storage + the LIFO page allocator.
+"""The paged KV pool: slab storage + the canonical page allocator.
 
 One pool serves every sequence; a sequence owns a *page table* — the
 tuple of slab ids its psi view reads through.  Slab ``t`` is rows
@@ -7,12 +7,17 @@ hd)`` storage, so the table is exactly the per-page ``Access.const``
 offset list the derived decode kernel lowers into its BlockSpec index
 map (``RecurrentForm.page_table``).
 
-The free list is LIFO on purpose: freed slabs are reissued
-most-recent-first, so short-lived sequences tend to see the *same*
-tables again and the lru-cached decode executors
-(``ops._decode_executor``) stay hot in steady-state serving.
+The free list is a min-heap on purpose: allocation always hands out the
+LOWEST free slab, so which slabs a sequence gets depends only on the
+pool's current occupancy, never on the order past sequences freed — the
+same admission pattern reproduces the same tables, and the
+table-keyed decode executors (``ops._decode_executor``, the engine's
+jitted steps) stay hot in steady-state serving instead of re-tracing
+behind every drain/refill cycle.
 """
 from __future__ import annotations
+
+import heapq
 
 import jax.numpy as jnp
 
@@ -47,9 +52,9 @@ class PagePool:
         self.pool_pages = int(pool_pages)
         self.pools = transformer.init_paged_pools(
             cfg, self.pool_pages * self.page, dtype)
-        # LIFO stack; initialized descending so the first allocations walk
-        # the pool front-to-back
-        self._free = list(range(self.pool_pages - 1, -1, -1))
+        # min-heap: lowest free slab allocates first, so assignment is a
+        # function of occupancy (canonical tables), not free order
+        self._free = list(range(self.pool_pages))
 
     @property
     def free_pages(self) -> int:
@@ -60,24 +65,24 @@ class PagePool:
         return self.pool_pages - len(self._free)
 
     def alloc(self, n: int) -> list[int]:
-        """Take ``n`` slabs off the free stack, newest-freed first."""
+        """Take the ``n`` lowest free slabs."""
         if n < 0:
             raise ValueError(f"cannot allocate {n} pages")
         if n > len(self._free):
             raise OutOfPages(
                 f"need {n} page(s), {len(self._free)} free of "
                 f"{self.pool_pages}")
-        return [self._free.pop() for _ in range(n)]
+        return [heapq.heappop(self._free) for _ in range(n)]
 
     def free(self, slabs) -> None:
-        """Return slabs to the stack (they reissue LIFO)."""
+        """Return slabs to the heap."""
         for s in slabs:
             if not 0 <= s < self.pool_pages:
                 raise ValueError(f"slab {s} outside pool "
                                  f"[0, {self.pool_pages})")
             if s in self._free:
                 raise ValueError(f"double free of slab {s}")
-            self._free.append(s)
+            heapq.heappush(self._free, s)
 
     def update(self, pools: dict) -> None:
         """Install the functionally-updated arrays after a decode step."""

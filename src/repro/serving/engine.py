@@ -2,12 +2,23 @@
 
 One engine iteration (:meth:`ServeEngine.step`) admits waiting requests
 into free slots (derived flash prefill — ONE kernel sweep per prompt,
-scattered into freshly allocated slabs), then runs one paged decode step
-per active slot.  The decode executable is keyed by the slot's page
-*table*, never by its position: position is runtime data in the POS aux
-operand, so the engine re-jits only when it allocates a page, and the
-LIFO allocator makes tables recur across requests so those executables
-stay cached.
+scattered into freshly allocated slabs), then decodes every active slot.
+For paged families the slots decode TOGETHER: the slot axis is one more
+dimension-lift level, so one ``batched_decode`` launch covers all of
+them through a stacked ``[slot, k]`` page table, with greedy sampling on
+device and ONE host transfer per iteration.  The stacked table always
+has ``max_slots`` rows (trimmed to the widest live slot's page count, so
+guard-skipped grid steps don't pile up behind short sequences), and each
+slot pins ONE row for its whole residency (lowest free row at
+admission).  A row whose slot is inactive is dead by runtime data alone
+— position -1 fails every block-skip guard, and the dead slot's K/V
+write is routed past the pool and dropped — so its entries are
+canonically all zeros and slot-count changes re-key NOTHING.  The table
+is rebuilt each launch as a PURE function of live occupancy (slabs
+zero-padded per row), so the executable key depends on nothing
+historical: position and liveness are runtime data in the POS aux, and
+the canonical allocator makes freed slabs (hence whole tables) recur
+across requests so executables stay cached.
 
 Under page pressure the engine preempts: the youngest other running
 sequence is evicted (slabs freed, request re-queued with its tokens so
@@ -54,6 +65,7 @@ class _Slot:
     n_emitted: int = 0
     slabs: list = field(default_factory=list)     # the page table
     cache: Optional[dict] = None                  # contiguous fallback only
+    row: int = -1                                 # stacked-table row (batched)
 
 
 def _paged_capable(cfg: ArchConfig) -> bool:
@@ -80,7 +92,8 @@ class ServeEngine:
                  pool_pages: Optional[int] = None,
                  page: Optional[int] = None, dtype=jnp.float32,
                  interpret: Optional[bool] = None,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None,
+                 batched: Optional[bool] = None):
         self.cfg = cfg
         if params is None:
             params, _ = registry.init(cfg, key if key is not None
@@ -91,6 +104,13 @@ class ServeEngine:
         self.interpret = interpret
         self.eos_id = eos_id
         self.paged = _paged_capable(cfg)
+        # batched multi-slot decode rides the paged psi view (the stacked
+        # table IS the slot lift); contiguous families fall back per-slot
+        self.batched = self.paged and batched is not False
+        if batched and not self.paged:
+            raise ValueError(
+                f"batched decode needs the paged path; family "
+                f"{cfg.family!r}/{cfg.attention!r} serves contiguous")
         if page is None:
             g = cfg.n_heads // max(1, cfg.n_kv_heads)
             page = min(ops.default_decode_page(
@@ -100,10 +120,17 @@ class ServeEngine:
         if pool_pages is None:
             pool_pages = self.max_slots * pages_needed(self.max_len,
                                                        self.page)
+        #: stacked-table row width cap: the most pages a slot can ever
+        #: hold (each launch trims to the widest live slot)
+        self._view_pages = pages_needed(self.max_len, self.page)
         self.pool: Optional[PagePool] = (
             PagePool(cfg, pool_pages, self.page, dtype) if self.paged
             else None)
         self.dtype = dtype
+        #: decode-step executions since construction (a batched launch
+        #: counts once however many slots it covers) — the numerator of
+        #: the bench's ``kernel_calls_per_token``
+        self.kernel_calls = 0
         self._waiting: list[Request] = []
         self._slots: list[_Slot] = []
         self._done: dict[int, Request] = {}
@@ -131,11 +158,15 @@ class ServeEngine:
         return rid
 
     def step(self, now: float = 0.0) -> list[tuple[int, int]]:
-        """One engine iteration: admit, then one decode step per active
-        slot.  Returns the ``(rid, token)`` pairs emitted."""
+        """One engine iteration: admit, then decode every active slot —
+        ONE batched kernel launch on the paged path, a per-slot loop with
+        one deferred host transfer otherwise.  Returns the ``(rid,
+        token)`` pairs emitted."""
         emitted = self._admit(now)
-        for slot in list(self._slots):
-            emitted.extend(self._decode_one(slot, now))
+        if self.batched:
+            emitted.extend(self._decode_batched(now))
+        else:
+            emitted.extend(self._decode_sequential(now))
         return emitted
 
     @property
@@ -180,6 +211,10 @@ class ServeEngine:
         slot = _Slot(req=req, tokens=tokens,
                      n_emitted=len(self._out[req.rid]))
         s0 = len(tokens)
+        if self.batched:
+            used = {s.row for s in self._slots}
+            slot.row = min(i for i in range(self.max_slots)
+                           if i not in used)
         if self.paged:
             slot.slabs = self.pool.alloc(pages_needed(s0, self.page))
         logits, cache = self._prefill(tokens)
@@ -202,27 +237,107 @@ class ServeEngine:
         del slot._logits
         return self._emit(slot, tok, now)
 
-    def _decode_one(self, slot: _Slot, now: float) -> list[tuple[int, int]]:
-        if slot not in self._slots:
-            return []
-        pos = len(slot.tokens) - 1        # feed the newest token here
-        if self.paged:
+    def _decode_batched(self, now: float) -> list[tuple[int, int]]:
+        """Decode every active paged slot in ONE derived-kernel launch.
+
+        Page allocation for all slots happens first (it may evict — a
+        victim simply drops out of this iteration's batch, exactly as it
+        dropped out of the old per-slot loop).  The stacked table is then
+        rebuilt as a PURE function of live state: each live slot's slabs
+        fill its pinned row, zero-padded to the widest live slot; dead
+        rows are all zeros (POS -1 makes them inert and their writes
+        drop, so the entries never matter).  Canonical rows mean the
+        executor key — and hence the jitted executable — recurs whenever
+        the engine revisits the same occupancy, including across whole
+        replays of an identical trace.  Greedy argmax runs on device
+        inside the jitted step; the (max_slots,) token vector is the one
+        host transfer."""
+        live = []
+        for slot in list(self._slots):
+            if slot not in self._slots:   # evicted by an earlier ensure
+                continue
             try:
-                self._ensure_pages(slot, pos + 1)
+                self._ensure_pages(slot, len(slot.tokens))
             except OutOfPages:
-                return []                 # pool saturated; retry next step
-            fn = self._paged_decode_fn(tuple(slot.slabs))
-            logits, pools = fn(
-                jnp.asarray([slot.tokens[-1]], jnp.int32),
-                jnp.asarray([pos], jnp.int32), self.pool.pools)
-            self.pool.update(pools)
-        else:
-            logits, slot.cache = self._contig_decode_fn()(
-                jnp.asarray([slot.tokens[-1]], jnp.int32),
-                jnp.asarray([pos], jnp.int32), slot.cache)
-        tok = self._emit(slot, int(jnp.argmax(logits[0])), now)
-        self._retire_if_done(slot, now)
-        return [(slot.req.rid, tok)] if tok is not None else []
+                continue                  # pool saturated; retry next step
+            live.append(slot)
+        live = [s for s in live if s in self._slots]
+        if not live:
+            return []
+        by_row = {s.row: s for s in live}
+        # trim the view to the widest LIVE slot: shorter tables mean
+        # fewer streamed grid steps per launch.  Width growth re-keys
+        # the executor exactly as per-slot page allocation does
+        width = max(len(s.slabs) for s in live)
+        toks, poss, rows = [], [], []
+        for i in range(self.max_slots):
+            slot = by_row.get(i)
+            if slot is not None:
+                slabs = tuple(slot.slabs)
+                rows.append(slabs + (0,) * (width - len(slabs)))
+                toks.append(slot.tokens[-1])
+                poss.append(len(slot.tokens) - 1)
+            else:
+                rows.append((0,) * width)
+                toks.append(0)
+                poss.append(-1)
+        fn = self._batched_decode_fn(tuple(rows))
+        next_toks, pools = fn(jnp.asarray(toks, jnp.int32),
+                              jnp.asarray(poss, jnp.int32),
+                              self.pool.pools)
+        self.pool.update(pools)
+        self.kernel_calls += 1
+        next_toks = jax.device_get(next_toks)      # ONE sync per iteration
+        emitted = []
+        for slot in live:
+            tok = self._emit(slot, int(next_toks[slot.row]), now)
+            self._retire_if_done(slot, now)
+            if tok is not None:
+                emitted.append((slot.req.rid, tok))
+        return emitted
+
+    def _decode_sequential(self, now: float) -> list[tuple[int, int]]:
+        """The per-slot fallback (contiguous families, ``batched=False``):
+        one decode launch per slot, but sampling stays on device and the
+        stacked token vector transfers ONCE after every slot has
+        launched — JAX's async dispatch overlaps the launches, and no
+        slot blocks the host per token."""
+        pending = []                      # (slot, device argmax scalar)
+        for slot in list(self._slots):
+            if slot not in self._slots:   # evicted by an earlier ensure
+                continue
+            pos = len(slot.tokens) - 1    # feed the newest token here
+            if self.paged:
+                try:
+                    self._ensure_pages(slot, pos + 1)
+                except OutOfPages:
+                    continue              # pool saturated; retry next step
+                fn = self._paged_decode_fn(tuple(slot.slabs))
+                logits, pools = fn(
+                    jnp.asarray([slot.tokens[-1]], jnp.int32),
+                    jnp.asarray([pos], jnp.int32), self.pool.pools)
+                self.pool.update(pools)
+            else:
+                logits, slot.cache = self._contig_decode_fn()(
+                    jnp.asarray([slot.tokens[-1]], jnp.int32),
+                    jnp.asarray([pos], jnp.int32), slot.cache)
+            self.kernel_calls += 1
+            pending.append((slot, jnp.argmax(logits[0])))
+        if not pending:
+            return []
+        toks = jax.device_get(jnp.stack([t for _, t in pending]))
+        emitted = []
+        for (slot, _), tok in zip(pending, toks):
+            if slot not in self._slots:
+                # evicted after its launch by a later slot's allocation:
+                # drop the token — greedy decode recomputes it identically
+                # on re-admission
+                continue
+            tok = self._emit(slot, int(tok), now)
+            self._retire_if_done(slot, now)
+            if tok is not None:
+                emitted.append((slot.req.rid, tok))
+        return emitted
 
     def _emit(self, slot: _Slot, tok: int, now: float) -> Optional[int]:
         if slot.req.first_tok_t is None:
@@ -288,6 +403,23 @@ class ServeEngine:
                 page_table=table, page=self.page,
                 interpret=self.interpret))
             self._decode_fns[table] = fn
+        return fn
+
+    def _batched_decode_fn(self, tables: tuple):
+        """The jitted batched decode step for one STACKED page table —
+        the derived ``batched_decode`` kernel covering every slot in one
+        launch, with greedy argmax folded in so sampling happens on
+        device and only the (max_slots,) token vector crosses to host."""
+        fn = self._decode_fns.get(tables)
+        if fn is None:
+            def run(toks, poss, pools, _tables=tables):
+                logits, pools = transformer.decode_step_paged_batched(
+                    self.params, self.cfg, toks, poss, pools,
+                    page_tables=_tables, page=self.page,
+                    interpret=self.interpret)
+                return jnp.argmax(logits, axis=-1), pools
+            fn = jax.jit(run)
+            self._decode_fns[tables] = fn
         return fn
 
     def _contig_decode_fn(self):

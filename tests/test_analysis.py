@@ -369,8 +369,8 @@ def test_verify_all_sweep_passes_and_pins_json_report(tmp_path):
     # pin the summary counts: silent registry shrinkage (a form, hardware
     # entry, or dtype pair dropping out of the sweep) fails loudly here
     assert len(report["hardware"]) == 5
-    assert report["checked"] == 291
-    assert report["refused"] == 134
+    assert report["checked"] == 305
+    assert report["refused"] == 140
 
 
 def test_strict_verification_raises_with_findings():

@@ -343,5 +343,5 @@ def test_conformance_all_cpu_sweep_and_json(tmp_path):
     assert report["hardware"] == ["cpu"]
     assert report["failed"] == 0 and report["findings"] == []
     # pin the cpu slice: every registered kind and generic form stays swept
-    assert report["checked"] == 73
-    assert report["refused"] == 15
+    assert report["checked"] == 76
+    assert report["refused"] == 16

@@ -53,7 +53,7 @@ def test_pool_alloc_free_roundtrip(gemma):
     b = pool.alloc(1)
     assert b == [2] and pool.used_pages == 3
     pool.free([1])
-    assert pool.alloc(1) == [1]           # LIFO: freed slabs reissue first
+    assert pool.alloc(1) == [1]           # lowest free slab reissues first
     with pytest.raises(OutOfPages):
         pool.alloc(2)                     # only slab 3 is free
     with pytest.raises(ValueError, match="outside pool"):
@@ -236,6 +236,126 @@ def test_engine_eviction_under_pressure_matches_isolated(gemma):
     rids = [engine.submit(p, max_new) for p in prompts]
     results = engine.run()
     assert sum(r["request"].evictions for r in results.values()) > 0
+    for rid, prompt in zip(rids, prompts):
+        ref = greedy_generate(params, cfg,
+                              jnp.asarray([prompt], jnp.int32),
+                              n_new=max_new, cache_len=16)
+        assert results[rid]["tokens"] == np.asarray(
+            ref[0, len(prompt):]).tolist()
+
+
+# -- batched multi-slot decode -----------------------------------------------
+
+def _stacked_form(tables=((0, 3, 1, 5), (2, 4, 6, 7)), slots=2,
+                  pool_pages=8):
+    return E.batched_decode_form(slots, 2, 4, 32, page=16, view_pages=4,
+                                 pool_pages=pool_pages,
+                                 page_tables=tables, window=32)
+
+
+def test_batched_decode_bit_identical_to_sequential():
+    """One batched launch over N slots vs N sequential per-slot launches
+    of the same derived kernel against the same pools: each (s, h) grid
+    cell folds exactly the per-slot float ops, so live rows are bitwise
+    equal on integer inputs; a dead row (pos -1) flushes exact zeros."""
+    slots, hkv, g, hd, page, view = 3, 2, 4, 16, 8, 2
+    pool_pages = 8
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.integers(-3, 4, (slots, hkv, g, hd)), jnp.float32)
+    kp = jnp.asarray(rng.integers(-3, 4, (pool_pages * page, hkv, hd)),
+                     jnp.float32)
+    vp = jnp.asarray(rng.integers(-3, 4, kp.shape), jnp.float32)
+    tables = ((5, 2), (0, 7), (3, 3))     # slot 2 is dead: stale entries
+    pos = jnp.asarray([[11, 0], [4, 0], [-1, 0]], jnp.int32)
+
+    kw = dict(page=page, scale=hd ** -0.5, window=6, interpret=True,
+              hardware=CPU)
+    got = ops.paged_decode_batched(q, kp, vp, pos, page_tables=tables,
+                                   **kw)
+    for s in range(slots):
+        if int(pos[s, 0]) < 0:
+            assert not np.asarray(got[s]).any()
+            continue
+        one = ops.paged_decode(q[s], kp, vp, pos[s:s + 1],
+                               page_table=tables[s], **kw)
+        assert np.array_equal(np.asarray(got[s]), np.asarray(one)), s
+
+
+def test_stacked_form_refusals():
+    with pytest.raises(ValueError, match="rows for"):
+        _stacked_form(tables=((0, 1, 2, 3),), slots=2)
+    with pytest.raises(ValueError, match="view_pages"):
+        _stacked_form(tables=((0, 1, 2), (3, 4, 5, 6)))
+    with pytest.raises(ValueError, match="outside the pool"):
+        _stacked_form(tables=((0, 1, 2, 9), (3, 4, 5, 6)))
+
+
+def test_verify_stacked_form_clean_and_tamperable():
+    """The batched form passes the full static + kernel-body check; a
+    tampered stacked row (out-of-pool slab, slot-labeled) and a dropped
+    row (slot-grid mismatch) are both page-bounds errors."""
+    form = _stacked_form()
+    findings = verify.verify_expr(form, dtype="float32", hardware=CPU,
+                                  blocks=(4, 16), strict=False,
+                                  kernel=True)
+    assert not verify.errors(findings)
+
+    bundle = sched_mod.get_schedule(form, dtype="float32", hardware=CPU,
+                                    blocks=(4, 16))
+    sched = bundle.schedule
+    bad = tuple(
+        dataclasses.replace(spec, page_table=((0, 3, 1, 99), (2, 4, 6, 7)))
+        if spec.page_table is not None else spec
+        for spec in sched.ins)
+    errs = verify.errors(verify.verify_schedule(
+        dataclasses.replace(sched, ins=bad)))
+    assert errs and all(f.rule == "page-bounds" for f in errs)
+    assert any("slot 0" in f.message for f in errs)
+
+    dropped = tuple(
+        dataclasses.replace(spec, page_table=((0, 3, 1, 5),))
+        if spec.page_table is not None else spec
+        for spec in sched.ins)
+    errs = verify.errors(verify.verify_schedule(
+        dataclasses.replace(sched, ins=dropped)))
+    assert any(f.rule == "page-bounds" for f in errs)
+
+
+def test_engine_batched_iteration_binds_one_pallas_call(gemma):
+    """The tentpole pin: one batched engine iteration traces to exactly
+    ONE pallas_call — the slot axis rides the grid of a single derived
+    kernel (shared across the layer scan), not a per-slot launch loop."""
+    cfg, params = gemma
+    engine = ServeEngine(cfg, params, max_slots=3, max_len=16, page=4,
+                         interpret=True)
+    assert engine.batched
+    tables = tuple((0,) * engine._view_pages
+                   for _ in range(engine.max_slots))
+    fn = engine._batched_decode_fn(tables)
+    jaxpr = jax.make_jaxpr(fn)(
+        jnp.zeros((3,), jnp.int32),
+        jnp.asarray([5, 2, -1], jnp.int32), engine.pool.pools)
+    assert jaxpr_lint.jaxpr_primitives(jaxpr)["pallas_call"] == 1
+
+
+def test_engine_batched_eviction_under_pressure_matches_isolated(gemma):
+    """Four concurrent requests through the BATCHED path against a pool
+    too small for them all: recompute preemption still fires, every
+    request decodes exactly its isolated greedy tokens, and the launch
+    count stays below one per token (the dispatch-amortization claim)."""
+    cfg, params = gemma
+    key = jax.random.PRNGKey(11)
+    prompts = [jax.random.randint(k, (n,), 0, cfg.vocab_size).tolist()
+               for k, n in zip(jax.random.split(key, 4), (5, 6, 4, 7))]
+    max_new = 5
+    engine = ServeEngine(cfg, params, max_slots=4, max_len=16, page=4,
+                         pool_pages=7, interpret=True)
+    assert engine.batched
+    rids = [engine.submit(p, max_new) for p in prompts]
+    results = engine.run()
+    assert sum(r["request"].evictions for r in results.values()) > 0
+    n_tokens = sum(len(r["tokens"]) for r in results.values())
+    assert engine.kernel_calls < n_tokens
     for rid, prompt in zip(rids, prompts):
         ref = greedy_generate(params, cfg,
                               jnp.asarray([prompt], jnp.int32),
